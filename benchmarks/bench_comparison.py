@@ -1,0 +1,101 @@
+"""Paper Fig. 7: Monad vs Simba [25] vs NN-Baton [28] on res[2-5]
+(ResNet-50 convs) + att[1-4] (BERT-large matmuls), iso-PE-budget,
+EDP objective; results normalized to Simba per workload.
+
+Paper claims: Monad averages 16% EDP reduction vs Simba and 30% vs
+NN-Baton (8% / 20.8% energy).  We report our reproduction's numbers next
+to those targets; see EXPERIMENTS.md for the discussion."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import repro.core as C
+from repro.core.optimizer import SAConfig, optimize
+
+from .common import QUICK, cached
+
+PE_BUDGET = 4096
+
+
+def _optimize_framework(name, spec, key, sa_steps, n_init, n_iter):
+    bl = C.make_baseline(name, spec, key, pe_budget=PE_BUDGET)
+    if name == "monad":
+        # the co-design space is a superset of both baselines' spaces, so
+        # warm-start one search from each baseline configuration and keep
+        # the better result — the optimizer must never end up worse than a
+        # point it can represent
+        res = None
+        for seed_name in ("simba", "nn-baton"):
+            init = C.make_baseline(seed_name, spec, key,
+                                   pe_budget=PE_BUDGET).init
+            r = optimize(spec, bl.space, key, weights=C.OBJ_EDP,
+                         bo_fields=bl.bo_fields, sa_fields=bl.sa_fields,
+                         n_init=max(n_init // 2, 2),
+                         n_iter=max(n_iter // 2, 3),
+                         sa=SAConfig(steps=sa_steps, chains=4),
+                         init_design=init)
+            if res is None or r.objective < res.objective:
+                res = r
+    else:
+        res = optimize(spec, bl.space, key, weights=C.OBJ_EDP,
+                       bo_fields=bl.bo_fields, sa_fields=bl.sa_fields,
+                       n_init=n_init, n_iter=n_iter,
+                       sa=SAConfig(steps=sa_steps, chains=4),
+                       init_design=bl.init)
+    m = res.metrics
+    return {"latency_ns": float(m["latency_ns"]),
+            "energy_pj": float(m["energy_pj"]),
+            "edp": float(m["edp"]),
+            "energy_compute_pj": float(m["energy_compute_pj"]),
+            "energy_network_pj": float(m["energy_network_pj"]),
+            "utilization": float(m["utilization"])}
+
+
+def compute():
+    suite = C.presets.fig7_suite()
+    sa_steps = 300 if QUICK else 500
+    n_init, n_iter = (6, 12) if QUICK else (8, 24)
+    out = {}
+    for wi, (wname, graph) in enumerate(suite.items()):
+        spec = C.SystemSpec.build(graph, ch_max=36)
+        row = {}
+        for fw in ("simba", "nn-baton", "monad"):
+            key = jax.random.PRNGKey(hash((wname, fw)) % 2**31)
+            row[fw] = _optimize_framework(fw, spec, key, sa_steps,
+                                          n_init, n_iter)
+        out[wname] = row
+    return out
+
+
+def run(quick: bool = True):
+    data = cached("fig7_comparison", compute)
+    rows = []
+    edp_vs_simba, edp_vs_baton = [], []
+    en_vs_simba, en_vs_baton = [], []
+    for wname, r in data.items():
+        s, b, m = r["simba"], r["nn-baton"], r["monad"]
+        edp_vs_simba.append(1 - m["edp"] / s["edp"])
+        edp_vs_baton.append(1 - m["edp"] / b["edp"])
+        en_vs_simba.append(1 - m["energy_pj"] / s["energy_pj"])
+        en_vs_baton.append(1 - m["energy_pj"] / b["energy_pj"])
+        rows.append({
+            "name": f"fig7/{wname}",
+            "us_per_call": 0,
+            "derived": (f"EDP simba={1.0:.2f} "
+                        f"baton={b['edp']/s['edp']:.2f} "
+                        f"monad={m['edp']/s['edp']:.2f} "
+                        f"(lat {m['latency_ns']/s['latency_ns']:.2f} "
+                        f"en {m['energy_pj']/s['energy_pj']:.2f})"),
+        })
+    rows.append({
+        "name": "fig7/mean",
+        "us_per_call": 0,
+        "derived": (f"monad EDP reduction: vs simba "
+                    f"{np.mean(edp_vs_simba)*100:.0f}% (paper 16%), "
+                    f"vs nn-baton {np.mean(edp_vs_baton)*100:.0f}% "
+                    f"(paper 30%); energy {np.mean(en_vs_simba)*100:.0f}%/"
+                    f"{np.mean(en_vs_baton)*100:.0f}% (paper 8%/20.8%)"),
+    })
+    return rows

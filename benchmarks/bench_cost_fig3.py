@@ -1,0 +1,33 @@
+"""Paper Fig. 3: fabrication cost of 3-chiplet TPU-class vs Gemmini-class
+systems under organic / passive / active packaging, normalized to the
+equal-capability monolithic die.  Reproduces the three qualitative claims:
+large dies gain from chipletization, tiny dies don't, and interposers add
+>=15% (passive) / >=30% (active) of cost."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import (PKG_ACTIVE, PKG_ORGANIC, PKG_PASSIVE,
+                        monolithic_cost, package_cost)
+from repro.core.constants import PACKAGING_NAMES
+
+from .common import timed
+
+CHIPS = {"tpu": 331.0, "gemmini": 1.1}        # die areas mm^2 (paper Sec. II)
+
+
+def run(quick: bool = True):
+    rows = []
+    for chip, area in CHIPS.items():
+        mono = float(monolithic_cost(3 * area))
+        for pkg in (PKG_ORGANIC, PKG_PASSIVE, PKG_ACTIVE):
+            (cost,), us = timed(
+                lambda: (float(package_cost(jnp.asarray([area] * 3), pkg)),),
+                repeat=1)
+            rows.append({
+                "name": f"cost_fig3/{chip}/{PACKAGING_NAMES[pkg]}",
+                "us_per_call": us,
+                "derived": f"norm_cost={cost/mono:.3f} (mono=1.0)",
+            })
+    return rows

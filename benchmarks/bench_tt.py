@@ -1,0 +1,132 @@
+"""Paper Fig. 10 case study: tensor-train contraction chain
+(C23 -> C33 -> C43 -> C52) on a chiplet accelerator.
+
+Two parts, mirroring the paper's narrative:
+
+1. the PAPER-SCALE design point — one (small) chiplet each for the
+   lower-dimensional contractions, two big chiplets each for the O(n^6)
+   ones — evaluated with our models and compared against the
+   equal-total-area monolithic die (paper: 28% cost cut).  Big dies are
+   the Fig.-3 regime where chipletization pays.
+2. the cost-aware OPTIMIZER run (OBJ_COST_EDP vs OBJ_EDP) on the same
+   chain — at the sizes the optimizer picks for this workload it heads to
+   the small-die regime, which is itself a Fig.-3-consistent outcome we
+   report (Sec. V-D's point: cost must be in the loop, area alone cannot
+   make the call)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as C
+from repro.core.constants import PACKAGING_NAMES
+from repro.core.cost import monolithic_cost, package_cost
+from repro.core.optimizer import SAConfig, optimize
+from repro.core.evaluate import evaluate_system
+
+from .common import QUICK, cached
+
+
+def paper_design(spec):
+    """Fig. 10b: small chiplets for C23/C33, 2 big chiplets for C43/C52."""
+    W = spec.W
+    # the paper's regime: the O(n^6) contractions get two LARGE dies each
+    # (its C33 chip alone exceeds 300 mm^2); with our 28nm area constants
+    # the same regime is ~150-200 mm^2/die
+    shape = np.array([[16, 16, 4, 4, 1, 1],     # c23: 1 small chiplet
+                      [32, 32, 8, 8, 1, 1],     # c33: 1 big chiplet
+                      [32, 32, 10, 10, 1, 2],   # c43: 2 large chiplets
+                      [32, 32, 10, 10, 1, 2]],  # c52: 2 large chiplets
+                     np.int32)
+    spatial = np.zeros((W, 6), np.int32)
+    spatial[:] = [0, 1, 0, 1, 0, 1]
+    order = np.tile(np.arange(8, dtype=np.int32), (W, 3, 1))
+    bounds = spec.arrays["bounds"]
+    tiling = np.stack([np.minimum(bounds, 64),
+                       np.minimum(bounds, 512)], axis=1).astype(np.int32)
+    return dict(
+        shape=jnp.asarray(shape), spatial=jnp.asarray(spatial),
+        order=jnp.asarray(order), tiling=jnp.asarray(tiling),
+        pipe=jnp.asarray([0] * W, jnp.int32),
+        logB=jnp.asarray(2, jnp.int32),
+        packaging=jnp.asarray(C.PKG_PASSIVE, jnp.int32),
+        family=jnp.asarray(1, jnp.int32),          # ring (paper Fig. 10b)
+        placement=jnp.asarray(np.arange(spec.W * spec.CH), jnp.int32),
+    )
+
+
+def compute():
+    graph = C.presets.tt_chain(s=48, r=48)
+    spec = C.SystemSpec.build(graph, ch_max=4)
+    out = {}
+
+    # --- part 1: paper-scale fixed design vs monolithic ---------------------
+    d = paper_design(spec)
+    m = evaluate_system(spec, d)
+    area = float(m["area_mm2"])
+    out["paper_design"] = {
+        "latency_ns": float(m["latency_ns"]),
+        "energy_pj": float(m["energy_pj"]),
+        "cost_usd": float(m["cost_usd"]),
+        "area_mm2": area,
+        "monolithic_cost": float(monolithic_cost(area)),
+        "chiplets_per_workload": [1, 1, 2, 2],
+        "packaging": "passive-interposer",
+    }
+
+    # --- part 2: cost-aware vs cost-blind optimization ----------------------
+    sa = SAConfig(steps=250 if QUICK else 600, chains=4)
+    n_init, n_iter = (4, 6) if QUICK else (8, 16)
+    for label, weights in (("edp", C.OBJ_EDP),
+                           ("cost_edp", C.OBJ_COST_EDP)):
+        space = C.DesignSpace(spec, max_shape=(32, 32, 8, 8, 2, 2))
+        res = optimize(spec, space, jax.random.PRNGKey(3), weights=weights,
+                       n_init=n_init, n_iter=n_iter, sa=sa)
+        dd = res.design
+        mm = res.metrics
+        chips = np.asarray(dd["shape"])[:, 4] * np.asarray(dd["shape"])[:, 5]
+        out[label] = {
+            "latency_ns": float(mm["latency_ns"]),
+            "energy_pj": float(mm["energy_pj"]),
+            "cost_usd": float(mm["cost_usd"]),
+            "area_mm2": float(mm["area_mm2"]),
+            "chiplets_per_workload": chips.tolist(),
+            "packaging": PACKAGING_NAMES[int(np.asarray(dd["packaging"]))],
+            "monolithic_cost": float(monolithic_cost(float(mm["area_mm2"]))),
+        }
+    return out
+
+
+def run(quick: bool = True):
+    data = cached("fig10_tt", compute)
+    rows = []
+    p = data["paper_design"]
+    red = 1 - p["cost_usd"] / p["monolithic_cost"]
+    rows.append({
+        "name": "tt_case/paper_design", "us_per_call": 0,
+        "derived": (f"area={p['area_mm2']:.0f}mm2 "
+                    f"cost={p['cost_usd']:.0f}usd vs mono "
+                    f"{p['monolithic_cost']:.0f}usd -> cut {red*100:.0f}% "
+                    f"(paper 28%) chiplets={p['chiplets_per_workload']} "
+                    f"ring/passive-interposer"),
+    })
+    for label in ("edp", "cost_edp"):
+        r = data[label]
+        rows.append({
+            "name": f"tt_case/opt_{label}", "us_per_call": 0,
+            "derived": (f"cost={r['cost_usd']:.0f}usd "
+                        f"area={r['area_mm2']:.0f}mm2 "
+                        f"lat={r['latency_ns']/1e3:.0f}us "
+                        f"chiplets={r['chiplets_per_workload']} "
+                        f"pkg={r['packaging']}"),
+        })
+    ce, ee = data["cost_edp"], data["edp"]
+    rows.append({
+        "name": "tt_case/cost_awareness", "us_per_call": 0,
+        "derived": (f"cost-aware {ce['cost_usd']:.0f}usd vs cost-blind "
+                    f"{ee['cost_usd']:.0f}usd "
+                    f"({ee['cost_usd']/max(ce['cost_usd'],1e-9):.2f}x)"),
+    })
+    return rows

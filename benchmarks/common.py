@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: timing, JSON artifact cache, CSV rows."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+QUICK = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    """(result, us_per_call) — min over repeats after one warmup."""
+    fn(*args, **kw)
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t)
+    return out, best * 1e6
+
+
+def cached(name: str, compute: Callable[[], Dict], refresh: bool = False):
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    p = ARTIFACTS / f"{name}.json"
+    if p.exists() and not refresh:
+        return json.loads(p.read_text())
+    out = compute()
+    p.write_text(json.dumps(out, indent=1, default=float))
+    return out
+
+
+def emit(rows: List[Dict]):
+    """Print the required ``name,us_per_call,derived`` CSV rows."""
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', 0):.1f},"
+              f"{r.get('derived', '')}")

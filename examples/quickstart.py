@@ -1,0 +1,52 @@
+"""Quickstart: explore a chiplet-based accelerator for a Transformer block
+with Monad (paper Fig. 4 workload, EDP objective), then print the chosen
+design and its PPA + cost breakdown.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+import repro.core as C
+from repro.core.constants import PACKAGING_NAMES
+from repro.core.optimizer import SAConfig, optimize
+
+
+def main():
+    # 1. the workload graph: 2 attention heads = 5 matmuls (paper Fig. 4a)
+    graph = C.presets.transformer_block(seq=512, d=512, heads=2)
+    print("workload graph:")
+    for i, w in enumerate(graph.workloads):
+        print(f"  [{i}] {w.name}: {dict(w.loops)} ({w.macs/1e6:.0f} MMACs)")
+    for e in graph.edges:
+        print(f"  edge {e.src} -> {e.dst} ({e.tensor_src}->{e.tensor_dst}, "
+              f"{graph.transfer_elems(e)} elems)")
+
+    # 2. co-optimize architecture + integration (nested BO x SA engine)
+    spec = C.SystemSpec.build(graph, ch_max=6)
+    space = C.DesignSpace(spec, max_total_pes=4096)
+    res = optimize(spec, space, jax.random.PRNGKey(0), weights=C.OBJ_EDP,
+                   n_init=4, n_iter=8, sa=SAConfig(steps=250, chains=4))
+
+    # 3. inspect the winner
+    d, m = res.design, res.metrics
+    print("\nchosen design:")
+    shape = np.asarray(d["shape"])
+    for i, w in enumerate(graph.workloads):
+        print(f"  {w.name}: PEs {shape[i,0]}x{shape[i,1]}, cores "
+              f"{shape[i,2]}x{shape[i,3]}, chiplets {shape[i,4]}x{shape[i,5]}")
+    print(f"  packaging: {PACKAGING_NAMES[int(np.asarray(d['packaging']))]}"
+          f", network family: {int(np.asarray(d['family']))}"
+          f", pipeline ticks: {2**int(np.asarray(d['logB']))}")
+    print("\nmetrics:")
+    for k in ("latency_ns", "energy_pj", "edp", "cost_usd", "area_mm2",
+              "utilization"):
+        print(f"  {k:14s} {float(m[k]):.4g}")
+    print(f"  search objective improved "
+          f"{res.history[0][1] - res.history[-1][1]:.2f} nats over "
+          f"{len(res.history)} rounds")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Monad core: cost-aware co-design for chiplet-based spatial accelerators.
+
+The paper's primary contribution as a composable JAX library:
+
+* workload IR + graphs .......... ``repro.core.workload``, ``presets``
+* Map/Bind/Reduce formalism ...... ``repro.core.mapping``
+* dataflow / reuse analysis ...... ``repro.core.dataflow``
+* pipeline performance model ..... ``repro.core.perf_model``, ``evaluate``
+* network contention model ....... ``repro.core.network``
+* energy / area / cost models .... ``repro.core.energy``, ``cost``
+* uniform encoding + BO x SA ..... ``repro.core.encoding``, ``optimizer``
+* Simba / NN-Baton baselines ..... ``repro.core.baselines``
+* validation simulator ........... ``repro.core.simulator``
+"""
+
+from .constants import (DEFAULT_TECH, DEFAULT_TPU, PACKAGING_NAMES,
+                        PKG_ACTIVE, PKG_ORGANIC, PKG_PASSIVE, TechConstants,
+                        TPUTarget)
+from .workload import (Edge, TensorRef, Workload, WorkloadGraph, contraction,
+                       conv2d, matmul, mttkrp)
+from .evaluate import SystemSpec, evaluate_system, make_batch_evaluator
+from .encoding import (ALL_FIELDS, ARCH_FIELDS, BO_FIELDS, INTEG_FIELDS,
+                       SA_FIELDS, DesignSpace, balanced_init, mutate,
+                       random_design)
+from .optimizer import (OBJ_COST_EDP, OBJ_EDP, OBJ_ENERGY, OBJ_LATENCY,
+                        SAConfig, SearchResult, make_sa, optimize)
+from .baselines import Baseline, make_baseline
+from .cost import die_cost, die_yield, dies_per_wafer, monolithic_cost, package_cost
+from . import presets
+
+__all__ = [k for k in dir() if not k.startswith("_")]

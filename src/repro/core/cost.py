@@ -1,0 +1,75 @@
+"""Fabrication cost model — paper Eq. (1):
+
+    C_total = sum_i ( C_die^i / y_die^i + C_bond ) + C_sub + C_int / y_int + C_proc
+
+Die cost from wafer price / dies-per-wafer; yield from the negative-binomial
+model  y = (1 + A * D0 / alpha)^(-alpha).  The substrate cost is proportional
+to package area; the interposer is fabricated and yielded like a die (passive:
+metal-only low defect density; active: standard CMOS).  Constants follow
+public wafer-price/defect tables in the style of ICKnowledge [8] — see
+``constants.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .constants import (TechConstants, DEFAULT_TECH,
+                        PKG_ORGANIC, PKG_PASSIVE, PKG_ACTIVE)
+
+F = jnp.float32
+
+
+def die_yield(area_mm2, d0_mm2, alpha):
+    return (1.0 + area_mm2 * d0_mm2 / alpha) ** (-alpha)
+
+
+def dies_per_wafer(area_mm2, tech: TechConstants = DEFAULT_TECH):
+    """Classic dies-per-wafer approximation with scribe margin."""
+    d = F(tech.wafer_diameter_mm)
+    a = area_mm2 + tech.scribe_mm * jnp.sqrt(jnp.maximum(area_mm2, 1e-6))
+    return jnp.maximum(
+        jnp.pi * (d / 2.0) ** 2 / a - jnp.pi * d / jnp.sqrt(2.0 * a), 1.0)
+
+
+def die_cost(area_mm2, tech: TechConstants = DEFAULT_TECH,
+             wafer_cost=None, d0=None):
+    wc = F(tech.wafer_cost if wafer_cost is None else wafer_cost)
+    d0 = F(tech.defect_density_mm2 if d0 is None else d0)
+    c = wc / dies_per_wafer(area_mm2, tech)
+    y = die_yield(area_mm2, d0, F(tech.yield_alpha))
+    return c / y
+
+
+def package_cost(die_areas_mm2, packaging, tech: TechConstants = DEFAULT_TECH):
+    """Eq. (1) for a package of dies under a packaging technology.
+
+    die_areas_mm2: (N,) array (0 entries = unused slots).
+    packaging: 0 organic / 1 passive interposer / 2 active interposer
+               (may be a traced int).
+    """
+    areas = jnp.asarray(die_areas_mm2, F)
+    used = areas > 0.0
+    n_dies = jnp.sum(used.astype(F))
+    dies = jnp.where(used, die_cost(jnp.maximum(areas, 1e-3), tech), 0.0)
+    bond = jnp.asarray(tech.c_bond, F)[packaging] / F(tech.bond_yield)
+    c_dies = jnp.sum(dies) + n_dies * bond
+
+    pkg_area = jnp.sum(areas) * F(tech.interposer_margin)
+    c_sub = pkg_area * F(tech.c_substrate_mm2)
+
+    int_wafer = jnp.asarray(tech.int_wafer_cost, F)[packaging]
+    int_d0 = jnp.asarray(tech.int_defect_mm2, F)[packaging]
+    c_int_raw = int_wafer / dies_per_wafer(jnp.maximum(pkg_area, 1.0), tech)
+    y_int = die_yield(pkg_area, int_d0, F(tech.yield_alpha))
+    has_int = (jnp.asarray(packaging) != PKG_ORGANIC).astype(F)
+    c_int = has_int * c_int_raw / jnp.maximum(y_int, 1e-3)
+
+    return c_dies + c_sub + c_int + F(tech.c_process)
+
+
+def monolithic_cost(total_area_mm2, tech: TechConstants = DEFAULT_TECH):
+    """Baseline: one big die of the same total area + cheap substrate."""
+    return (die_cost(total_area_mm2, tech)
+            + total_area_mm2 * F(tech.interposer_margin)
+            * F(tech.c_substrate_mm2) + F(tech.c_process))

@@ -1,0 +1,245 @@
+"""Uniform encoding of the architecture + integration design space
+(paper Sec. IV-B, Fig. 6a).
+
+Architecture fields (per workload):
+    shape   (W, 6)   geometry of PE / core / chiplet arrays (raw dims)
+    spatial (W, 6)   spatially-parallelized loop per array dim per level
+    order   (W, 3, L) loop permutation per level (execution order)
+    tiling  (W, 2, L) tile sizes (core tile t1, chiplet tile t2)
+    pipe    (W,)     pipelined loop id (== L means "not pipelined")
+    logB    ()       log2 of pipeline tick count
+
+Integration fields:
+    packaging ()       0 organic / 1 passive / 2 active interposer
+    family    ()       network topology family (chain/ring/mesh/star)
+    placement (W*CH,)  global chiplet id -> network node id (a permutation
+                       prefix; the paper's "placement" field, <= 36 nodes)
+
+The BO engine owns the low-dimensional fields {shape, spatial, packaging,
+family, logB}; the SA engine owns the high-dimensional {order, tiling,
+placement, pipe} (paper Sec. IV-C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .evaluate import SystemSpec
+from .network import MAX_NODES, N_FAMILIES
+from .workload import MAX_LOOPS
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpace:
+    """Static bounds of the explorable space for one SystemSpec."""
+    spec: SystemSpec
+    max_shape: Tuple[int, ...] = (16, 16, 4, 4, 6, 6)   # per-level max dims
+    max_logB: int = 6
+    max_total_pes: int = 0          # 0 = unconstrained (Fig-7 fairness knob)
+    fixed_packaging: int = -1       # >=0 pins the field (ablation studies)
+    fixed_family: int = -1
+    allow_pipeline: bool = True
+
+    @property
+    def W(self):
+        return self.spec.W
+
+    @property
+    def CH(self):
+        return self.spec.CH
+
+    @property
+    def n_loops(self) -> np.ndarray:
+        return self.spec.arrays["loopmask"].sum(axis=1).astype(np.int32)
+
+    @property
+    def bounds(self) -> np.ndarray:
+        return self.spec.arrays["bounds"]
+
+    def max_nodes(self) -> int:
+        return min(MAX_NODES, self.W * self.CH)
+
+
+def _rand_perm_rows(key, W, levels, L):
+    keys = jax.random.split(key, W * levels)
+    perms = jnp.stack([jax.random.permutation(k, L) for k in keys])
+    return perms.reshape(W, levels, L).astype(jnp.int32)
+
+
+def random_design(key, space: DesignSpace) -> Dict:
+    """Uniform random design point (the paper's 'Random' baseline)."""
+    W, CH, L = space.W, space.CH, MAX_LOOPS
+    ks = jax.random.split(key, 10)
+    mx = jnp.asarray(space.max_shape, jnp.int32)
+    shape = jax.random.randint(ks[0], (W, 6), 1, mx + 1)
+    nl = jnp.asarray(space.n_loops)
+    spatial = jax.random.randint(ks[1], (W, 6), 0, jnp.maximum(nl, 1)[:, None])
+    order = _rand_perm_rows(ks[2], W, 3, L)
+    bounds = jnp.asarray(space.bounds)
+    tmax = jnp.maximum(bounds, 1)
+    u = jax.random.uniform(ks[3], (W, 2, L))
+    tiling = jnp.maximum(
+        1, (tmax[:, None, :].astype(jnp.float32) ** u)).astype(jnp.int32)
+    pipe = jnp.where(
+        jnp.asarray(space.allow_pipeline)
+        & (jax.random.uniform(ks[4], (W,)) < 0.5),
+        jax.random.randint(ks[5], (W,), 0, jnp.maximum(nl, 1)),
+        jnp.full((W,), L, jnp.int32)).astype(jnp.int32)
+    logB = jnp.where(space.allow_pipeline,
+                     jax.random.randint(ks[6], (), 0, space.max_logB + 1), 0)
+    packaging = (jnp.asarray(space.fixed_packaging, jnp.int32)
+                 if space.fixed_packaging >= 0
+                 else jax.random.randint(ks[7], (), 0, 3))
+    family = (jnp.asarray(space.fixed_family, jnp.int32)
+              if space.fixed_family >= 0
+              else jax.random.randint(ks[8], (), 0, N_FAMILIES))
+    placement = jax.random.permutation(ks[9], W * CH).astype(jnp.int32)
+    return dict(shape=shape, spatial=spatial, order=order, tiling=tiling,
+                pipe=pipe, logB=jnp.asarray(logB, jnp.int32),
+                packaging=jnp.asarray(packaging, jnp.int32),
+                family=jnp.asarray(family, jnp.int32), placement=placement)
+
+
+def balanced_init(key, space: DesignSpace, total_pes: int = 4096) -> Dict:
+    """Paper Sec. IV-B: assign PEs to each workload proportionally to its
+    MAC count so pipeline stages are roughly balanced."""
+    d = random_design(key, space)
+    macs = np.array([w.macs for w in space.spec.graph.workloads], np.float64)
+    share = macs / macs.sum()
+    pes = np.maximum((share * total_pes).astype(np.int64), 64)
+    side = np.clip(np.sqrt(pes / 4).astype(np.int32), 1,
+                   np.asarray(space.max_shape)[:2].min())
+    shape = np.array(d["shape"])
+    shape[:, 0] = side
+    shape[:, 1] = side
+    shape[:, 2:4] = 2
+    shape[:, 4:6] = 1
+    d["shape"] = jnp.asarray(shape)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# SA neighborhood moves (jit-able; one random field mutation per call)
+# ---------------------------------------------------------------------------
+ARCH_FIELDS = ("shape", "spatial", "order", "tiling", "pipe")
+INTEG_FIELDS = ("packaging", "family", "placement")
+ALL_FIELDS = ARCH_FIELDS + INTEG_FIELDS
+# high-dimensional fields owned by the SA engine (paper Sec. IV-C)
+SA_FIELDS = ("order", "tiling", "pipe", "placement")
+# low-dimensional fields owned by the Bayesian engine
+BO_FIELDS = ("shape", "spatial", "packaging", "family")
+
+
+def mutate(key, design: Dict, space: DesignSpace,
+           fields: Tuple[str, ...] = ALL_FIELDS,
+           nl=None, bounds=None) -> Dict:
+    """One random neighbor move restricted to ``fields`` (static tuple).
+    Field subsets drive the Fig.-8 ablation ladder (Res/Dfw/Arch/Net/Pkg/...)
+    and the nested BO+SA engine (SA owns the high-dim fields).
+
+    ``nl``/``bounds`` may be passed as traced arrays (from the workload
+    arrays) so the compiled move kernel is workload-independent."""
+    W, CH, L = space.W, space.CH, MAX_LOOPS
+    ks = jax.random.split(key, 12)
+    nl = jnp.maximum(jnp.asarray(space.n_loops if nl is None else nl), 1)
+    bounds_arr = jnp.asarray(space.bounds if bounds is None else bounds)
+    wsel = jax.random.randint(ks[0], (), 0, W)
+
+    d = {k: v for k, v in design.items()}
+
+    # --- architecture moves -------------------------------------------------
+    def mv_shape(d):
+        i = jax.random.randint(ks[2], (), 0, 6)
+        delta = jax.random.choice(ks[3], jnp.asarray([-2, -1, 1, 2]))
+        mx = jnp.asarray(space.max_shape, jnp.int32)
+        s = d["shape"].at[wsel, i].add(delta)
+        d["shape"] = jnp.clip(s, 1, mx[None, :])
+        return d
+
+    def mv_spatial(d):
+        i = jax.random.randint(ks[2], (), 0, 6)
+        v = jax.random.randint(ks[3], (), 0, nl[wsel])
+        d["spatial"] = d["spatial"].at[wsel, i].set(v)
+        return d
+
+    def mv_order(d):
+        lvl = jax.random.randint(ks[2], (), 0, 3)
+        i = jax.random.randint(ks[3], (), 0, L)
+        j = jax.random.randint(ks[4], (), 0, L)
+        row = d["order"][wsel, lvl]
+        a, b = row[i], row[j]
+        row = row.at[i].set(b).at[j].set(a)
+        d["order"] = d["order"].at[wsel, lvl].set(row)
+        return d
+
+    def mv_tiling(d):
+        lvl = jax.random.randint(ks[2], (), 0, 2)
+        i = jax.random.randint(ks[3], (), 0, nl[wsel])
+        f = jax.random.choice(ks[4], jnp.asarray([0.25, 0.5, 2.0, 4.0]))
+        bmax = bounds_arr[wsel, i]
+        t = d["tiling"][wsel, lvl, i].astype(jnp.float32) * f
+        t = jnp.clip(t.astype(jnp.int32), 1, bmax)
+        d["tiling"] = d["tiling"].at[wsel, lvl, i].set(
+            jnp.maximum(t, 1).astype(jnp.int32))
+        return d
+
+    def mv_pipe(d):
+        on = jax.random.uniform(ks[2]) < (0.7 if space.allow_pipeline else 0.0)
+        loop = jax.random.randint(ks[3], (), 0, nl[wsel])
+        d["pipe"] = d["pipe"].at[wsel].set(
+            jnp.where(on, loop, jnp.int32(L)).astype(jnp.int32))
+        d["logB"] = jnp.where(
+            on, jnp.clip(d["logB"]
+                         + jax.random.randint(ks[4], (), -1, 2),
+                         0, space.max_logB),
+            d["logB"]).astype(jnp.int32)
+        return d
+
+    # --- integration moves ---------------------------------------------------
+    def mv_packaging(d):
+        if space.fixed_packaging >= 0:
+            return d
+        d["packaging"] = jax.random.randint(ks[2], (), 0, 3)
+        return d
+
+    def mv_family(d):
+        if space.fixed_family >= 0:
+            return d
+        d["family"] = jax.random.randint(ks[2], (), 0, N_FAMILIES)
+        return d
+
+    def mv_placement(d):
+        i = jax.random.randint(ks[2], (), 0, W * CH)
+        j = jax.random.randint(ks[3], (), 0, W * CH)
+        p = d["placement"]
+        a, b = p[i], p[j]
+        d["placement"] = p.at[i].set(b).at[j].set(a)
+        return d
+
+    all_moves = dict(shape=mv_shape, spatial=mv_spatial, order=mv_order,
+                     tiling=mv_tiling, pipe=mv_pipe, packaging=mv_packaging,
+                     family=mv_family, placement=mv_placement)
+    moves = [all_moves[f] for f in fields]
+    mid = jax.random.randint(ks[1], (), 0, len(moves))
+    branches = [lambda op, m=m: m(dict(d)) for m in moves]
+    return jax.lax.switch(mid, branches, 0)
+
+
+def feasibility_penalty(space: DesignSpace, design: Dict, metrics: Dict):
+    """Soft constraints: total chiplets <= placeable nodes; optional PE budget
+    (Fig. 7 iso-PE comparisons).  Returned as a multiplicative penalty."""
+    n_chips = jnp.sum(design["shape"][:, 4] * design["shape"][:, 5])
+    over_nodes = jnp.maximum(
+        n_chips - jnp.int32(space.max_nodes()), 0).astype(jnp.float32)
+    pes = jnp.sum(design["shape"][:, 0] * design["shape"][:, 1]
+                  * design["shape"][:, 2] * design["shape"][:, 3]
+                  * design["shape"][:, 4] * design["shape"][:, 5])
+    over_pes = jnp.where(
+        space.max_total_pes > 0,
+        jnp.maximum(pes - space.max_total_pes, 0).astype(jnp.float32), 0.0)
+    return 1.0 + over_nodes + over_pes / 64.0

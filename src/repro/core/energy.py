@@ -1,0 +1,61 @@
+"""Accelergy-style energy model (paper Sec. IV-A: "energy or area is
+estimated by adding overheads on MACs, memories, and networks").
+
+All inputs are the access counts produced by ``dataflow.analyze_chiplet`` and
+the network byte-hop totals from ``network.evaluate_network``; constants are
+documented in ``constants.TechConstants``.  Output unit: pJ.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .constants import TechConstants, DEFAULT_TECH
+
+F = jnp.float32
+
+
+def chiplet_energy_pj(an: dict, tech: TechConstants = DEFAULT_TECH):
+    """Energy for one workload executing on its chiplet cluster.
+
+    ``an`` is the analyze_chiplet dict; per-chiplet byte counts are scaled by
+    the cluster size here.  DRAM and D2D energies are added at system level
+    from the communication-graph traffic (avoids double counting).
+    """
+    nchip = an["n_chiplets"]
+    e_mac = an["mac_count"] * F(tech.e_mac_pj)
+    e_reg = an["reg_acc_bytes"] * nchip * 8.0 * F(tech.e_reg_pj_bit)
+    e_core = an["core_acc_bytes"] * nchip * 8.0 * F(tech.e_core_sram_pj_bit)
+    # chiplet buffer: read by core refills + written by external fills
+    chip_bits = (an["chipbuf_acc_bytes"] + an["ext_bytes"]) * nchip * 8.0
+    e_chip = chip_bits * F(tech.e_chip_sram_pj_bit)
+    return e_mac + e_reg + e_core + e_chip
+
+
+def system_network_energy_pj(net: dict, packaging: int,
+                             tech: TechConstants = DEFAULT_TECH):
+    """D2D link + router + DRAM energy from network traffic totals."""
+    e_d2d_tab = jnp.asarray(tech.e_d2d_pj_bit, F)
+    e_d2d = net["d2d_byte_hops"] * 8.0 * e_d2d_tab[packaging]
+    e_rt = net["router_byte_hops"] * 8.0 * F(tech.e_router_pj_bit)
+    e_dram = net["dram_bytes"] * 8.0 * F(tech.e_dram_pj_bit)
+    return e_d2d + e_rt + e_dram
+
+
+def chiplet_area_mm2(an: dict, io_bw_gbps, packaging: int,
+                     tech: TechConstants = DEFAULT_TECH):
+    """Area of ONE chiplet: cores (PEs + core buffer) + chiplet buffer +
+    router + I/O bump area reservation  bw / D_bw * N_link  (paper Sec. IV-B).
+    """
+    bw_density = jnp.asarray(tech.bw_density, F)[packaging]
+    n_link = jnp.asarray(tech.n_link_io, F)[packaging]
+    core = (an["n_pes"] * F(tech.a_pe)
+            + an["core_buf_bytes"] / F(2**20) * F(tech.a_sram_per_mb)
+            + F(tech.a_core_overhead))
+    chip = (an["n_cores"] * core
+            + an["chip_buf_bytes"] / F(2**20) * F(tech.a_sram_per_mb)
+            + F(tech.a_router) + F(tech.a_chiplet_overhead))
+    # 4 in-package links per chiplet node (mesh degree); N_link scales how
+    # many of them cross bumps for the chosen packaging.
+    io = io_bw_gbps / jnp.maximum(bw_density, 1e-6) * 4.0 * n_link
+    return chip + io

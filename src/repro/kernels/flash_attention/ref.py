@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for flash attention (the correctness reference).
+
+Naive O(S^2) materialized-scores attention with GQA head grouping and the
+three mask kinds used by the model zoo:
+
+* ``causal``  — key j visible to query at absolute position p iff j <= p
+* ``window``  — causal AND p - j < window (sliding-window attention)
+* ``none``    — full bidirectional (encoder / cross attention)
+
+Query absolute positions: if ``kv_valid_len`` is given (decode with a KV
+cache filled up to kv_valid_len), queries sit at positions
+[kv_valid_len - S_q, kv_valid_len); otherwise position i = i.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q, k, v, mask_kind: str = "causal", window: int = 0,
+                  kv_valid_len: Optional[int] = None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) with H % KV == 0.
+    Returns (B, Sq, H, D) in q.dtype; softmax in float32."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(D))
+
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+
+    kpos = jnp.arange(Sk)
+    if kv_valid_len is not None:
+        qpos = kv_valid_len - Sq + jnp.arange(Sq)
+        valid = kpos[None, :] < kv_valid_len
+    else:
+        qpos = jnp.arange(Sq)
+        valid = jnp.ones((1, Sk), bool)
+    neg = jnp.finfo(jnp.float32).min
+    mask = jnp.broadcast_to(valid, (Sq, Sk))
+    if mask_kind == "causal":
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    elif mask_kind == "window":
+        mask = mask & (kpos[None, :] <= qpos[:, None]) \
+            & (qpos[:, None] - kpos[None, :] < window)
+    elif mask_kind != "none":
+        raise ValueError(mask_kind)
+    scores = jnp.where(mask[None, None], scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return out.astype(q.dtype)

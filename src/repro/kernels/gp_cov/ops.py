@@ -1,0 +1,31 @@
+"""Dispatching wrapper for the GP covariance: Pallas on TPU (padding to the
+tile grid), jnp reference elsewhere; REPRO_PALLAS_INTERPRET=1 forces the
+kernel in interpret mode."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .gp_cov import matern52_pallas
+from .ref import matern52_ref
+
+
+def matern52(X1, X2, lengthscale: float = 0.3):
+    use_pallas = (jax.default_backend() == "tpu"
+                  or os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1")
+    if not use_pallas:
+        return matern52_ref(X1, X2, lengthscale)
+    n, m = X1.shape[0], X2.shape[0]
+    bn = 128 if n >= 128 else n
+    bm = 128 if m >= 128 else m
+    pn = (-n) % bn
+    pm = (-m) % bm
+    X1p = jnp.pad(X1, ((0, pn), (0, 0)))
+    X2p = jnp.pad(X2, ((0, pm), (0, 0)))
+    K = matern52_pallas(
+        X1p, X2p, lengthscale,
+        interpret=os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1")
+    return K[:n, :m]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the Matern-5/2 GP covariance (BO surrogate)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def matern52_ref(X1, X2, lengthscale: float = 0.3):
+    """X1: (n, d); X2: (m, d) -> K (n, m) float32."""
+    d2 = jnp.sum((X1[:, None, :] - X2[None, :, :]) ** 2, -1)
+    r = jnp.sqrt(jnp.maximum(d2, 1e-12)) / lengthscale
+    s5 = math.sqrt(5.0)
+    return ((1.0 + s5 * r + 5.0 * r * r / 3.0)
+            * jnp.exp(-s5 * r)).astype(jnp.float32)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+    h_t = exp(delta_t * A) * h_{t-1} + (delta_t * B_t) * u_t
+    y_t = C_t . h_t
+
+Shapes: u/delta (B, S, Di); A (Di, Ds); Bc/Cc (B, S, Ds); h (B, Di, Ds).
+Sequential lax.scan over time — the correctness reference for the chunked
+Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, delta, A, Bc, Cc, h0=None):
+    """Returns (y (B,S,Di) float32, h_T (B,Di,Ds) float32)."""
+    B, S, Di = u.shape
+    Ds = A.shape[1]
+    h = jnp.zeros((B, Di, Ds), jnp.float32) if h0 is None else h0
+
+    def step(h, xs):
+        u_t, d_t, b_t, c_t = xs          # (B,Di) (B,Di) (B,Ds) (B,Ds)
+        dA = jnp.exp(d_t[..., None] * A[None])             # (B,Di,Ds)
+        dBu = (d_t * u_t)[..., None] * b_t[:, None, :]     # (B,Di,Ds)
+        h = dA * h + dBu
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (u.transpose(1, 0, 2), delta.transpose(1, 0, 2),
+          Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2), h

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary.
+
+"""Multi-pod dry-run launcher.
+
+For every (architecture x input-shape x mesh) cell: build the production
+mesh, shard the step function with the advisor's ParallelConfig, then
+``.lower().compile()`` against ShapeDtypeStructs — no real allocation — and
+record memory analysis, cost analysis, and the parsed collective schedule
+into ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` for the roofline
+table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --skip-existing
+  python -m repro.launch.dryrun --arch ... --set decode_kv=heads remat=full
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, ALIASES, cells, get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.train import make_train_step, train_state_specs
+from repro.models.config import SHAPES, ParallelConfig
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import sharding as Sh
+from repro.parallel.ctx import activation_sharding
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def default_parallel(arch: str, shape_name: str,
+                     overrides=None):
+    """The advisor-chosen layout per cell, POST-hillclimb (EXPERIMENTS.md
+    §Perf records the iteration path from the v0 baselines to these).
+    Returns (ParallelConfig, model-config overrides)."""
+    cfg0 = get_config(ALIASES.get(arch, arch))
+    moe = cfg0.n_experts > 0
+    kw = dict(fsdp_axes=("pod", "data"), tensor_axis="model",
+              decode_kv="auto", remat="dots")
+    cfgk = {}
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        # full remat in groups of 4 + gradient accumulation (fits HBM);
+        # Megatron-style sequence parallelism for the non-recurrent,
+        # non-MoE families (it reshards MoE dispatch/SSM convs badly)
+        kw["remat"] = "full"
+        kw["microbatch"] = 16 if moe else 8
+        cfgk["remat_group"] = 2 if moe else 4
+        if cfg0.family in ("dense", "vlm", "encdec"):
+            kw["seq_tp"] = True
+    if moe and kind in ("train", "prefill"):
+        # group-local dispatch: one-hot dispatch FLOPs drop ~G-fold
+        cfgk.update(moe_groups=64, capacity_factor=1.0)
+    if shape_name == "long_500k":
+        kw["seq_shard"] = True
+    if overrides:
+        kw.update(overrides)
+    return ParallelConfig(**kw), cfgk
+
+
+def model_flops_for(cfg, sc) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (prefill) / 2 N B (decode),
+    N = active params (MoE counts top-k only)."""
+    n = cfg.active_param_count()
+    if sc.kind == "train":
+        return 6.0 * n * sc.global_batch * sc.seq_len
+    if sc.kind == "prefill":
+        return 2.0 * n * sc.global_batch * sc.seq_len
+    return 2.0 * n * sc.global_batch
+
+
+def model_min_bytes_for(cfg, sc, specs) -> float:
+    """Compulsory per-step HBM stream: decode must read the active weights
+    (bf16) and the whole KV/SSM cache once per token step."""
+    if sc.kind != "decode":
+        return 0.0
+    total = 2.0 * cfg.active_param_count()
+    for leaf in jax.tree_util.tree_leaves(specs.get("cache", {})):
+        total += float(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides=None):
+    """Build + lower + compile one cell; returns the artifact dict."""
+    cfg = get_config(arch)
+    sc = SHAPES[shape_name]
+    if sc.name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped (full attention)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    overrides = dict(overrides or {})
+    cfg_over = {k: overrides.pop(k) for k in list(overrides)
+                if k in ("moe_impl", "capacity_factor", "moe_groups",
+                         "remat_group")}
+    pc, cfg_defaults = default_parallel(arch, shape_name, overrides or None)
+    cfg_defaults.update(cfg_over)
+    cfg = dataclasses.replace(cfg, remat=pc.remat, **cfg_defaults)
+    model = build_model(cfg)
+    rules = Sh.make_rules(pc)
+    specs = input_specs(arch, shape_name)
+
+    t0 = time.time()
+    with mesh, activation_sharding(mesh, pc):
+        if sc.kind == "train":
+            opt_cfg = AdamWConfig()
+            step = make_train_step(model, opt_cfg,
+                                   microbatches=pc.microbatch)
+            state_sds = train_state_specs(model, opt_cfg)
+            p_sh = Sh.param_shardings(state_sds["params"], cfg, mesh, rules)
+            state_sh = {"params": p_sh,
+                        "opt": {"mu": p_sh, "nu": p_sh,
+                                "step": NamedSharding(mesh, P())}}
+            b_spec = Sh.batch_spec(cfg, pc, mesh, sc.global_batch,
+                                   sc.seq_len)
+            b_sh = {k: NamedSharding(mesh, b_spec.get(k, P()))
+                    for k in specs["batch"]}
+            jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, specs["batch"])
+        elif sc.kind == "prefill":
+            p_sh = Sh.param_shardings(specs["params"], cfg, mesh, rules)
+            b_spec = Sh.batch_spec(cfg, pc, mesh, sc.global_batch,
+                                   sc.seq_len)
+            b_sh = {k: NamedSharding(mesh, b_spec.get(k, P()))
+                    for k in specs["batch"]}
+            c_sh = Sh.like_tree(
+                Sh.cache_spec(cfg, pc, mesh, sc.global_batch), mesh)
+            jitted = jax.jit(model.prefill,
+                             in_shardings=(p_sh, b_sh, c_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(specs["params"], specs["batch"],
+                                   specs["cache"])
+        else:
+            p_sh = Sh.param_shardings(specs["params"], cfg, mesh, rules)
+            c_sh = Sh.like_tree(
+                Sh.cache_spec(cfg, pc, mesh, sc.global_batch), mesh)
+            t_sh = NamedSharding(mesh, P())
+            jitted = jax.jit(model.decode_step,
+                             in_shardings=(p_sh, t_sh, c_sh, t_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(specs["params"], specs["tokens"],
+                                   specs["cache"], specs["index"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # loop-aware HLO walk (XLA's cost_analysis counts while bodies once)
+    ma = H.ModuleAnalysis(compiled.as_text()).totals()
+    flops, byts = ma["flops"], ma["bytes"]
+    xla_flops, xla_bytes = H.cost_analysis_terms(compiled)
+    mem = H.memory_stats(compiled)
+    coll = {"wire_bytes": ma["wire_bytes"], "counts": ma["counts"],
+            "total_wire_bytes": ma["total_wire_bytes"]}
+    mf = model_flops_for(cfg, sc)
+    mb = model_min_bytes_for(cfg, sc, specs)
+    rl = H.roofline(flops, byts, coll["total_wire_bytes"], n_chips, mf, mb)
+    print(compiled.memory_analysis())
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "n_chips": int(n_chips),
+        "parallel": dataclasses.asdict(pc),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops, "bytes_per_device": byts,
+        "xla_cost_analysis": {"flops": xla_flops, "bytes": xla_bytes},
+        "memory": mem, "collectives": coll,
+        "model_flops": mf, "roofline": rl.to_dict(),
+    }
+
+
+def cell_path(arch, shape, mesh_name, tag="") -> Path:
+    sfx = f"__{tag}" if tag else ""
+    return ARTIFACTS / f"{arch}__{shape}__{mesh_name}{sfx}.json"
+
+
+def run_cell(arch, shape, mesh_name, skip_existing=False, overrides=None,
+             tag=""):
+    out = cell_path(arch, shape, mesh_name, tag)
+    if skip_existing and out.exists():
+        print(f"[skip] {out.name}")
+        return json.loads(out.read_text())
+    t0 = time.time()
+    try:
+        art = lower_cell(arch, shape, mesh_name == "multi", overrides)
+    except Exception as e:  # a failure here is a bug in the system
+        art = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": f"FAILED: {type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(art, indent=1, default=float))
+    st = art["status"]
+    extra = ""
+    if st == "ok":
+        r = art["roofline"]
+        extra = (f" frac={r['roofline_frac']:.3f} dom={r['bottleneck']}"
+                 f" compile={art['compile_s']}s")
+    print(f"[{time.strftime('%H:%M:%S')}] {arch} {shape} {mesh_name}: "
+          f"{st}{extra} ({time.time()-t0:.0f}s)")
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", type=str, default="")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="ParallelConfig overrides k=v")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        elif v.isdigit():
+            v = int(v)
+        elif k == "fsdp_axes":
+            v = tuple(x for x in v.split(",") if x)
+        else:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        # iterate the FULL 40-cell grid; lower_cell records explicit
+        # "skipped (full attention)" artifacts for the excluded long_500k
+        jobs = [(a, s, m) for a in ARCH_IDS for s in SHAPES
+                for m in meshes]
+    else:
+        arch = ALIASES.get(args.arch, args.arch)
+        shapes = [args.shape] if args.shape else cells(arch)
+        jobs = [(arch, s, m) for s in shapes for m in meshes]
+
+    ok = failed = 0
+    for arch, shape, m in jobs:
+        art = run_cell(arch, shape, m, args.skip_existing,
+                       overrides or None, args.tag)
+        if art["status"].startswith("FAILED"):
+            failed += 1
+        else:
+            ok += 1
+    print(f"done: {ok} ok, {failed} failed")
+    raise SystemExit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,420 @@
+"""Parse collective traffic + roofline terms out of a compiled module.
+
+``collective_bytes`` walks the optimized (post-SPMD) HLO text and prices
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute by its printed result shape (per-device), converted to
+*wire bytes per device* with the standard ring-algorithm factors:
+
+    all-reduce        2 * size * (n-1)/n      (reduce-scatter + all-gather)
+    all-gather        out  * (n-1)/n
+    reduce-scatter    in   * (n-1)/n  (printed result is the scatter output
+                                       -> in = out * n)
+    all-to-all        size * (n-1)/n
+    collective-permute size
+
+n = replica-group size parsed from the op's replica_groups attribute.
+
+``roofline`` combines those with cost_analysis FLOPs/bytes and the TPU
+target constants into the three-term model of EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.constants import DEFAULT_TPU, TPUTarget
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+# ---------------------------------------------------------------------------
+# loop-aware module analysis
+#
+# XLA's compiled.cost_analysis() counts a `while` body ONCE, ignoring the
+# trip count — fatal for scan-over-layers models (an 80-layer step would be
+# undercounted 80x).  This analyzer parses the optimized HLO, builds the
+# computation call graph (fusion/call/while/conditional), extracts static
+# while trip counts from the loop-condition constants, and accumulates
+# dot FLOPs / fusion I/O bytes / collective wire bytes weighted by the
+# product of enclosing trip counts.
+# ---------------------------------------------------------------------------
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.*)$")
+_CALLSITE = re.compile(
+    r"(?:calls=|to_apply=|body=)%?([\w\.\-_]+)")
+_COND = re.compile(r"condition=%?([\w\.\-_]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_LHS_NAME = re.compile(
+    r"\bdot\(\s*(?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?%([\w\.\-_]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPERANDS = re.compile(r"%([\w\.\-_]+)")
+# ops whose HBM I/O we price for the memory roofline term.  Pure-elementwise
+# fusions are skipped: the CPU backend fragments elementwise chains into many
+# small fusions that a TPU compilation folds into their producers — counting
+# them would overstate HBM traffic ~50x (measured on qwen2-72b train).
+_HEAVY_KINDS = (" dot(", " gather(", " scatter(",
+                " dynamic-slice(", " dynamic-update-slice(",
+                " all-reduce(", " all-gather(", " reduce-scatter(",
+                " all-to-all(", " collective-permute(")
+_FUSION = re.compile(r"\bfusion\(")
+
+
+def _dims(s: str):
+    return [int(d) for d in s.split(",") if d] if s else []
+
+
+class ModuleAnalysis:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        cur = None
+        for line in hlo_text.splitlines():
+            m = _COMP_HEAD.match(line.strip())
+            if (m and line.rstrip().endswith("{") and "->" in line
+                    and not line.startswith(" ")):
+                cur = m.group(2)
+                self.comps[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                else:
+                    self.comps[cur].append(line)
+        # per-computation symbol table: instruction name -> output bytes /
+        # dims (operand shapes are not printed inline in optimized HLO)
+        self.symtab: Dict[str, Dict[str, Tuple[str, List[int]]]] = {}
+        for name, lines in self.comps.items():
+            tab = {}
+            for line in lines:
+                im = _INSTR.match(line)
+                if not im:
+                    continue
+                sh = _SHAPE_RE.search(im.group(2))
+                if sh:
+                    tab[im.group(1)] = (sh.group(1), _dims(sh.group(2)))
+            self.symtab[name] = tab
+        # computations containing heavy ops (for fusion I/O pricing)
+        self._heavy: Dict[str, bool] = {}
+        for name, lines in self.comps.items():
+            self._heavy[name] = any(
+                any(k in ln for k in _HEAVY_KINDS) for ln in lines)
+        self._mult: Dict[str, float] = {}
+        self._analyze()
+
+    def _sym_bytes(self, comp: str, ref: str) -> float:
+        ent = self.symtab.get(comp, {}).get(ref)
+        if not ent:
+            return 0.0
+        dt, dims = ent
+        if dt not in _DTYPE_BYTES:
+            return 0.0
+        n = 1
+        for d in dims:
+            n *= d
+        return float(n * _DTYPE_BYTES[dt])
+
+    # ---- per-computation raw costs -------------------------------------
+    def _line_flops(self, comp: str, body: str) -> float:
+        if " dot(" not in body and not body.startswith("dot("):
+            return 0.0
+        out = _SHAPE_RE.search(body)
+        lhs = _DOT_LHS_NAME.search(body)
+        con = _CONTRACT.search(body)
+        if not (out and con):
+            return 0.0
+        out_n = float(np.prod(_dims(out.group(2)) or [1]))
+        lhs_dims = []
+        if lhs:
+            ent = self.symtab.get(comp, {}).get(lhs.group(1))
+            if ent:
+                lhs_dims = ent[1]
+        kn = 1.0
+        for ci in _dims(con.group(1)):
+            if ci < len(lhs_dims):
+                kn *= lhs_dims[ci]
+        return 2.0 * out_n * kn
+
+    def _line_bytes(self, comp: str, body: str) -> float:
+        # in-place / sparse-access ops: traffic = the moved slice, not the
+        # full buffer (XLA aliases DUS in place)
+        if " dynamic-update-slice(" in body:
+            ops = self._operand_refs(comp, body)
+            return 2.0 * (ops[1] if len(ops) > 1 else 0.0)
+        if " dynamic-slice(" in body or " gather(" in body:
+            out = _shape_bytes(body.split("),")[0] + ")")
+            return 2.0 * float(out)
+        if _FUSION.search(body):
+            # price a fusion by its callee's internal heavy ops: a fusion
+            # whose only heavy op is a small DUS must not be charged its
+            # big aliased stack operands
+            cs = _CALLSITE.search(body)
+            if not cs or not self._heavy.get(cs.group(1)):
+                return 0.0
+            callee = cs.group(1)
+            return sum(self._line_bytes(callee, i.group(2))
+                       for i in map(_INSTR.match, self.comps[callee]) if i)
+        if not any(k in body for k in _HEAVY_KINDS):
+            return 0.0
+        total = float(_shape_bytes(body.split("),")[0] + ")"))
+        total += sum(self._operand_refs(comp, body))
+        return total
+
+    def _operand_refs(self, comp: str, body: str):
+        """Byte sizes of the operands in the first parens group."""
+        lp = body.find("(")
+        if lp < 0:
+            return []
+        depth = 0
+        rp = lp
+        for i, ch in enumerate(body[lp:], lp):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    rp = i
+                    break
+        return [self._sym_bytes(comp, ref)
+                for ref in _OPERANDS.findall(body[lp:rp + 1])]
+
+    def _line_collective(self, body: str):
+        m = _COLL_RE.search("= " + body) or _COLL_RE.search(body)
+        if not m:
+            return None
+        kind = m.group(2)
+        size = _shape_bytes(m.group(1))
+        n = 1
+        g = _GROUPS_RE.search(body)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip() != ""])
+        else:
+            gi = _GROUPS_IOTA_RE.search(body)
+            if gi:
+                n = int(gi.group(2))
+        n = max(n, 1)
+        f = (n - 1) / n
+        wire = {"all-reduce": 2.0 * size * f, "all-gather": size * f,
+                "reduce-scatter": size * n * f, "all-to-all": size * f,
+                "collective-permute": float(size)}[kind]
+        return kind, wire
+
+    def _trip_count(self, cond_comp: str) -> float:
+        consts = []
+        for line in self.comps.get(cond_comp, []):
+            for c in _CONST_INT.findall(line):
+                consts.append(int(c))
+        return float(max(consts)) if consts else 1.0
+
+    # ---- multiplicity propagation ----------------------------------------
+    def _analyze(self):
+        entry = self.entry or (next(iter(self.comps)) if self.comps else None)
+        mult: Dict[str, float] = {}
+
+        def visit(name: str, m: float):
+            mult[name] = mult.get(name, 0.0) + m
+            for line in self.comps.get(name, []):
+                im = _INSTR.match(line)
+                if not im:
+                    continue
+                body = im.group(2)
+                trip = 1.0
+                if " while(" in body or body.startswith("while("):
+                    c = _COND.search(body)
+                    if c:
+                        trip = self._trip_count(c.group(1))
+                br = _BRANCHES.search(body)
+                callees = list(_CALLSITE.findall(body))
+                if br:
+                    callees += [x.strip().lstrip("%")
+                                for x in br.group(1).split(",")]
+                seen = set()
+                for cal in callees:
+                    if cal in seen or cal not in self.comps:
+                        continue
+                    seen.add(cal)
+                    visit(cal, m * trip)
+
+        if entry:
+            visit(entry, 1.0)
+        self._mult = mult
+
+    # ---- public totals ------------------------------------------------------
+    def totals(self) -> Dict:
+        flops = byts = 0.0
+        wire = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+                "all-to-all": 0.0, "collective-permute": 0.0}
+        counts = dict.fromkeys(wire, 0)
+        for name, m in self._mult.items():
+            for line in self.comps.get(name, []):
+                im = _INSTR.match(line)
+                if not im:
+                    continue
+                body = im.group(2)
+                flops += m * self._line_flops(name, body)
+                byts += m * self._line_bytes(name, body)
+                col = self._line_collective(body)
+                if col:
+                    wire[col[0]] += m * col[1]
+                    counts[col[0]] += int(m)
+        return {"flops": flops, "bytes": byts, "wire_bytes": wire,
+                "counts": counts,
+                "total_wire_bytes": float(sum(wire.values()))}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    """Per-device wire bytes by collective kind + op counts."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_txt)
+        n = 1
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len([x for x in g.group(1).split(",") if x.strip() != ""])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                n = int(gi.group(2))
+        n = max(n, 1)
+        f = (n - 1) / n
+        if kind == "all-reduce":
+            wire = 2.0 * size * f
+        elif kind == "all-gather":
+            wire = size * f
+        elif kind == "reduce-scatter":
+            wire = size * n * f
+        elif kind == "all-to-all":
+            wire = size * f
+        else:
+            wire = float(size)
+        out[kind] += wire
+        counts[kind] += 1
+    return {"wire_bytes": out, "counts": counts,
+            "total_wire_bytes": float(sum(out.values()))}
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float
+    hlo_total_flops: float
+    useful_ratio: float
+    bottleneck: str
+    step_time_s: float
+    roofline_frac: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             wire_bytes_per_device: float, n_chips: int,
+             model_flops: float, model_min_bytes: float = 0.0,
+             tpu: TPUTarget = DEFAULT_TPU) -> Roofline:
+    """Three-term roofline (EXPERIMENTS.md §Roofline).
+
+    compute_s    = HLO_FLOPs / peak;  memory_s = HLO bytes / HBM bw;
+    collective_s = wire bytes / (links * link bw).  All per chip.
+
+    roofline_frac = ideal_time / max(all three), the score we hillclimb.
+    ideal_time is the better of the two hardware floors: useful model FLOPs
+    at peak, or the compulsory bytes (weights + caches that MUST stream
+    once per step — dominant for decode) at full HBM bandwidth."""
+    compute_s = flops_per_device / (tpu.peak_bf16_tflops * 1e12)
+    memory_s = bytes_per_device / (tpu.hbm_gbps * 1e9)
+    collective_s = wire_bytes_per_device / (
+        tpu.ici_links_per_chip * tpu.ici_link_gbps * 1e9)
+    hlo_total = flops_per_device * n_chips
+    useful = model_flops / max(hlo_total, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(compute_s, memory_s, collective_s)
+    ideal = max((model_flops / n_chips) / (tpu.peak_bf16_tflops * 1e12),
+                (model_min_bytes / n_chips) / (tpu.hbm_gbps * 1e9))
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        flops_per_device=flops_per_device, bytes_per_device=bytes_per_device,
+        wire_bytes_per_device=wire_bytes_per_device,
+        model_flops=model_flops, hlo_total_flops=hlo_total,
+        useful_ratio=useful, bottleneck=bottleneck, step_time_s=step,
+        roofline_frac=ideal / max(step, 1e-30))
+
+
+def cost_analysis_terms(compiled) -> Tuple[float, float]:
+    """(flops, bytes accessed) per device from compiled.cost_analysis()."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return 0.0, 0.0
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    if byts == 0.0:
+        byts = sum(float(v) for k, v in ca.items()
+                   if k.startswith("bytes accessed"))
+    return flops, byts
+
+
+def memory_stats(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                                  + out.get("output_size_in_bytes", 0)
+                                  + out.get("temp_size_in_bytes", 0)
+                                  - out.get("alias_size_in_bytes", 0))
+    return out

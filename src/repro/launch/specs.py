@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation.  ``input_specs(arch, shape)`` is the single
+source of input shapes for the dry-run, the roofline analysis and the
+benchmarks."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.model import build_model
+
+N_PATCHES = 1024          # vision stub: patches spliced into the prefix
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int,
+                with_labels: bool) -> Dict:
+    out = {"tokens": sds((B, S), jnp.int32)}
+    if with_labels:
+        out["labels"] = sds((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        out["audio_embeds"] = sds((B, cfg.enc_positions, cfg.d_model),
+                                  jnp.float32)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sds((B, min(N_PATCHES, S), cfg.d_model),
+                                  jnp.float32)
+        out["positions"] = sds((B, S, 3), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig, serve: bool = False):
+    model = build_model(cfg)
+    sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if serve:
+        # serving checkpoints are bf16 (matrices); norms/biases stay f32
+        sds = jax.tree.map(
+            lambda l: (jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+                       if l.ndim >= 2 and l.dtype == jnp.float32 else l),
+            sds)
+    return sds
+
+
+def cache_specs(cfg: ModelConfig, B: int, max_seq: int):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(B, max_seq))
+
+
+def input_specs(arch: str, shape_name: str) -> Dict:
+    """Everything the lowered step function needs, as ShapeDtypeStructs.
+
+    kind='train':   {params(+opt state via train.py), batch}
+    kind='prefill': {params, batch, cache}
+    kind='decode':  {params, tokens(B,1), cache(filled to seq_len), index}
+    """
+    cfg = get_config(arch)
+    sc: ShapeConfig = SHAPES[shape_name]
+    B, S = sc.global_batch, sc.seq_len
+    out: Dict = {"cfg": cfg, "shape": sc,
+                 "params": params_specs(cfg, serve=(sc.kind != "train"))}
+    if sc.kind == "train":
+        out["batch"] = batch_specs(cfg, B, S, with_labels=True)
+    elif sc.kind == "prefill":
+        out["batch"] = batch_specs(cfg, B, S, with_labels=False)
+        out["cache"] = cache_specs(cfg, B, S + cfg.meta_tokens)
+    else:  # decode: one new token against a cache of seq_len
+        out["tokens"] = sds((B, 1), jnp.int32)
+        out["cache"] = cache_specs(cfg, B, S + cfg.meta_tokens)
+        out["index"] = sds((), jnp.int32)
+    return out

@@ -1,0 +1,112 @@
+"""Train-step assembly + the (single-host) training loop driver.
+
+``make_train_step`` composes model.loss with AdamW into the pjit-able step
+used both by the dry-run (lowered against ShapeDtypeStructs on the
+production mesh) and by the real CPU training loop in the examples
+(reduced configs, host mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.models.model import Model, build_model
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm)
+
+
+def make_train_state(model: Model, key, opt_cfg: AdamWConfig) -> Dict:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(opt_cfg, params)}
+
+
+def train_state_specs(model: Model, opt_cfg: AdamWConfig):
+    return jax.eval_shape(
+        lambda: make_train_state(model, jax.random.PRNGKey(0), opt_cfg))
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    microbatches: int = 1) -> Callable:
+    """(state, batch) -> (state, metrics).  Pure; pjit-ready.
+
+    microbatches > 1 runs gradient accumulation: the global batch is split
+    on its leading dim and scanned, so live activation memory scales with
+    the microbatch while the gradient all-reduce still happens once per
+    step (the per-microbatch grads accumulate in the sharded f32 buffer)."""
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+    def step(state, batch):
+        if microbatches <= 1:
+            (loss, parts), grads = grad_fn(state["params"], batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+
+            def acc(carry, mbatch):
+                g, l, a = carry
+                (loss, parts), grads = grad_fn(state["params"], mbatch)
+                g = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), g, grads)
+                return (g, l + loss, a + parts["aux"]), None
+
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            parts = {"xent": loss, "aux": aux / microbatches}
+        params, opt, om = adamw_update(opt_cfg, grads, state["opt"],
+                                       state["params"])
+        metrics = {"loss": loss, **parts, **om}
+        return {"params": params, "opt": opt}, metrics
+
+    return step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def step(params, batch):
+        loss, parts = model.loss(params, batch)
+        return {"loss": loss, **parts}
+    return step
+
+
+@dataclasses.dataclass
+class LoopResult:
+    losses: list
+    steps: int
+    wall_s: float
+
+
+def train_loop(model: Model, state, batches, train_step,
+               log_every: int = 20,
+               on_step: Optional[Callable] = None) -> LoopResult:
+    """Simple driver (the fault-tolerant production driver wraps this in
+    repro.runtime.driver)."""
+    losses = []
+    t0 = time.time()
+    stepped = jax.jit(train_step, donate_argnums=(0,))
+    for i, batch in enumerate(batches):
+        state, metrics = stepped(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if on_step is not None:
+            on_step(i, state, metrics)
+        if log_every and i % log_every == 0:
+            print(f"step {i:5d}  loss {loss:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+    return LoopResult(losses=losses, steps=len(losses),
+                      wall_s=time.time() - t0), state

@@ -1,0 +1,485 @@
+"""Pure-JAX layer library for the 10 assigned architectures.
+
+Functional style: each module is an ``<name>_init(key, cfg) -> params`` +
+``<name>_apply(params, ...) -> out`` pair over plain dict pytrees (no flax
+offline).  Everything is written to lower cleanly under pjit with the
+logical sharding rules in ``repro.parallel.sharding``:
+
+* weights are 2D-shardable (row dim -> fsdp axes, col dim -> tensor axis),
+* attention uses the flash-attention op (Pallas kernel on TPU, fused jnp
+  reference elsewhere) with causal / sliding-window / cross variants,
+* MoE uses capacity-factor dispatch/combine einsums (static shapes; the
+  expert axis is shardable for EP, XLA inserts the all-to-alls),
+* Mamba-1 uses a chunked selective scan (Pallas kernel on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from repro.parallel import ctx
+
+Params = Dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False,
+               scale: Optional[float] = None, dtype=jnp.float32) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), dtype) * scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x, dtype=None):
+    w = p["w"].astype(dtype or x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + 3-section M-RoPE for Qwen2-VL)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4,
+               sections: Tuple[int, ...] = ()):
+    """x: (B, S, H, D); positions: (B, S) or (B, S, 3) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the rotary dims are split into (t, h, w) sections,
+    each rotated by its own position stream."""
+    B, S, H, D = x.shape
+    inv = rope_freqs(D, theta)                        # (D/2,)
+    if sections:
+        assert positions.ndim == 3 and sum(sections) == D // 2
+        secs = []
+        start = 0
+        for si, sec in enumerate(sections):
+            secs.append(positions[..., si:si + 1]
+                        * jnp.ones((sec,), jnp.float32))
+            start += sec
+        pos = jnp.concatenate(secs, axis=-1)          # (B, S, D/2)
+        ang = pos * inv[None, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA; causal / sliding-window / cross) via the flash-attn op
+# ---------------------------------------------------------------------------
+def attention_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": dense_init(ks[0], d, H * hd, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, KV * hd, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, KV * hd, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], H * hd, d),
+    }
+
+
+def _split_heads(x, n, hd):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, hd)
+
+
+def attention_apply(p: Params, cfg: ModelConfig, x, positions,
+                    kv_x=None, kv_positions=None, mask_kind: str = "causal",
+                    window: int = 0, kv_cache=None, cache_index=None,
+                    use_rope: bool = True):
+    """Returns (out, new_kv_cache).  kv_cache = (k, v) with shape
+    (B, S_cache, KV, hd); cache_index = current fill position (decode)."""
+    from repro.kernels.flash_attention import ops as fa
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = ctx.shard(_split_heads(dense(p["wq"], x), H, hd),
+                  ("batch", "seq", "heads", None))
+    k = ctx.shard(_split_heads(dense(p["wk"], src), KV, hd),
+                  ("batch", "seq", "heads", None))
+    v = ctx.shard(_split_heads(dense(p["wv"], src), KV, hd),
+                  ("batch", "seq", "heads", None))
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        kp = positions if kv_positions is None else kv_positions
+        k = apply_rope(k, kp, cfg.rope_theta, cfg.mrope_sections)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        if cache_index is not None:                       # decode: append
+            # replicate the (tiny) new-token tensors over the model axis:
+            # the cache keeps its seq-sharded layout and attention reduces
+            # via DISTRIBUTED partial softmax (flash-decoding) instead of
+            # GSPMD all-gathering the cache to match q's head sharding
+            q = ctx.shard(q, ("batch", None, None, None))
+            k = ctx.shard(k, ("batch", None, None, None))
+            v = ctx.shard(v, ("batch", None, None, None))
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), cache_index, axis=1)
+        k, v = ck, cv
+        new_cache = (ck, cv)
+    else:
+        new_cache = (k, v)        # prefill: caller may build a cache from it
+
+    kv_len = (cache_index + x.shape[1] if cache_index is not None else None)
+    out = fa.flash_attention(q, k, v, mask_kind=mask_kind, window=window,
+                             kv_valid_len=kv_len)
+    out = ctx.shard(out, ("batch", None, None, None)
+                    if cache_index is not None
+                    else ("batch", "seq", "heads", None))
+    B, S = x.shape[:2]
+    return dense(p["wo"], out.reshape(B, S, H * hd)), new_cache
+
+
+def attention_decode_rolling(p: Params, cfg: ModelConfig, x, position,
+                             cache, window: int):
+    """Single-token decode against an O(window) ROLLING KV cache (Hymba
+    sliding-window heads; what makes hymba's long_500k cell O(1) in seq).
+
+    cache = (k (B, W, KV, hd), v (B, W, KV, hd), kpos (B, W) int32, -1 =
+    empty).  Keys are stored rope'd at their absolute positions.  Returns
+    (out, new_cache)."""
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    B = x.shape[0]
+    pos2d = jnp.broadcast_to(jnp.asarray(position)[None, None], (B, 1))
+    q = _split_heads(dense(p["wq"], x), H, hd)
+    k = _split_heads(dense(p["wk"], x), KV, hd)
+    v = _split_heads(dense(p["wv"], x), KV, hd)
+    q = apply_rope(q, pos2d, cfg.rope_theta)
+    k = apply_rope(k, pos2d, cfg.rope_theta)
+
+    ck, cv, kpos = cache
+    ck = jnp.concatenate([ck[:, 1:], k.astype(ck.dtype)], axis=1)
+    cv = jnp.concatenate([cv[:, 1:], v.astype(cv.dtype)], axis=1)
+    kpos = jnp.concatenate(
+        [kpos[:, 1:], pos2d.astype(kpos.dtype)], axis=1)
+
+    rep = H // KV
+    kf = jnp.repeat(ck, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(cv, rep, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    valid = ((kpos >= 0) & (kpos <= position)
+             & (position - kpos < window))                # (B, W)
+    s = jnp.where(valid[:, None, None, :], s, jnp.finfo(jnp.float32).min)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, vf).astype(x.dtype)
+    out = dense(p["wo"], out.reshape(B, 1, H * hd))
+    return out, (ck, cv, kpos)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    d, H = cfg.d_model, cfg.n_heads
+    r, dr, dn, dv = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                     cfg.v_head_dim)
+    return {
+        # queries: full-rank projection to per-head (nope + rope) dims
+        "wq": dense_init(ks[0], d, H * (dn + dr)),
+        # KV: compress to latent r (+ shared rope key), then up-project
+        "wkv_down": dense_init(ks[1], d, r + dr),
+        "kv_norm": rmsnorm_init(r),
+        "wk_up": dense_init(ks[2], r, H * dn),
+        "wv_up": dense_init(ks[3], r, H * dv),
+        "wo": dense_init(ks[4], H * dv, d),
+    }
+
+
+def mla_apply(p: Params, cfg: ModelConfig, x, positions,
+              kv_cache=None, cache_index=None):
+    """MLA with the *compressed* latent as the KV cache — the paper-faithful
+    memory saving: cache is (B, S, r + dr) instead of (B, S, 2*H*hd).
+
+    kv_cache: (B, S_cache, r + dr); returns (out, new_cache)."""
+    from repro.kernels.flash_attention import ops as fa
+    H = cfg.n_heads
+    r, dr, dn, dv = (cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim,
+                     cfg.v_head_dim)
+    B, S, _ = x.shape
+
+    q = ctx.shard(dense(p["wq"], x).reshape(B, S, H, dn + dr),
+                  ("batch", "seq", "heads", None))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = dense(p["wkv_down"], x)                     # (B, S, r + dr)
+    if kv_cache is not None and cache_index is not None:
+        latent = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache, latent.astype(kv_cache.dtype), cache_index, axis=1)
+    new_cache = latent if kv_cache is not None else None
+    c_kv, k_rope_flat = latent[..., :r], latent[..., r:]
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    Sk = c_kv.shape[1]
+    # absolute positions of cached entries for the shared rope key
+    kpos = jnp.broadcast_to(jnp.arange(Sk)[None, :], (B, Sk))
+    k_rope = apply_rope(k_rope_flat[:, :, None, :], kpos, cfg.rope_theta)
+
+    k_nope = ctx.shard(dense(p["wk_up"], c_kv).reshape(B, Sk, H, dn),
+                       ("batch", "seq", "heads", None))
+    v = ctx.shard(dense(p["wv_up"], c_kv).reshape(B, Sk, H, dv),
+                  ("batch", "seq", "heads", None))
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, (B, Sk, H, dr))], -1)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+
+    kv_len = (cache_index + S if cache_index is not None else None)
+    out = fa.flash_attention(qf, k, v, mask_kind="causal",
+                             kv_valid_len=kv_len)
+    return dense(p["wo"], out.reshape(B, S, H * dv)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs: dense SwiGLU + capacity-factor MoE
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {"wg": dense_init(ks[0], d, f), "wu": dense_init(ks[1], d, f),
+            "wd": dense_init(ks[2], f, d)}
+
+
+def mlp_apply(p: Params, x):
+    h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wu"], x)
+    if h.ndim == 3:
+        h = ctx.shard(h, ("batch", "seq", "tp"))
+    return dense(p["wd"], h)
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, scale=0.02),
+        "wg": jax.random.normal(ks[1], (E, d, f)) * s,
+        "wu": jax.random.normal(ks[2], (E, d, f)) * s,
+        "wd": jax.random.normal(ks[3], (E, f, d)) * (1.0 / math.sqrt(f)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg,
+                               d_ff=cfg.expert_ff * cfg.n_shared_experts)
+    return p
+
+
+def _moe_route(p: Params, cfg: ModelConfig, xt):
+    """Shared router math: returns (gate_vals (T,K), gate_idx, pos (T,K),
+    in_cap (T,K), cap, aux)."""
+    E, K = cfg.n_experts, cfg.top_k
+    T = xt.shape[0]
+    logits = dense(p["router"], xt).astype(jnp.float32)     # (T, E)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    cap = max(int(cfg.capacity_factor * T * K / E), 1)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)    # (T, K, E)
+    flat = onehot.reshape(T * K, E)
+    pos_e = jnp.cumsum(flat, axis=0) * flat - 1              # (T*K, E)
+    pos = jnp.max(pos_e.reshape(T, K, E), axis=-1)           # (T, K)
+    in_cap = (pos >= 0) & (pos < cap)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jnp.sum(onehot, axis=1).astype(jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gate_vals, gate_idx, pos, in_cap, cap, onehot, aux
+
+
+def _moe_experts(p: Params, cfg: ModelConfig, xe, dtype):
+    """Batched expert FFN over (E, cap, d) buffers."""
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"].astype(dtype))
+    h = ctx.shard(h, ("ep", None, "tp"))
+    u = ctx.shard(u, ("ep", None, "tp"))
+    ye = ctx.shard(jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                              p["wd"].astype(dtype)),
+                   ("ep", None, None))                       # (E, cap, d)
+    return ye
+
+
+def moe_apply(p: Params, cfg: ModelConfig, x):
+    """Capacity-factor top-k MoE.  Static shapes (dry-run friendly): tokens
+    beyond an expert's capacity are dropped (residual passes through); the
+    expert (E) axis is shardable — under EP dispatch lowers to all-to-alls.
+
+    Two dispatch implementations (cfg.moe_impl):
+      * 'einsum' — classic one-hot dispatch/combine matmuls.  Simple, but
+        the dispatch tensor costs O(T*E*cap) FLOPs, which DWARFS the expert
+        FLOPs at deepseek scale (160 experts) — see EXPERIMENTS.md §Perf.
+      * 'gather' — scatter tokens into the (E*cap, d) buffer and gather
+        results back by index: zero dispatch FLOPs, same numerics.
+    Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    gate_vals, gate_idx, pos, in_cap, cap, onehot, aux = \
+        _moe_route(p, cfg, xt)
+
+    if cfg.moe_impl == "gather":
+        # scatter/gather dispatch: buffer row = expert * cap + position
+        buf_idx = jnp.where(in_cap, gate_idx * cap + pos, E * cap)  # (T,K)
+        xe = jnp.zeros((E * cap + 1, d), x.dtype)
+        tok_idx = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K))
+        xe = xe.at[buf_idx.reshape(-1)].add(
+            xt[tok_idx.reshape(-1)], mode="drop")
+        xe = ctx.shard(xe[:E * cap].reshape(E, cap, d), ("ep", None, None))
+        ye = _moe_experts(p, cfg, xe, x.dtype)
+        flat = jnp.concatenate(
+            [ye.reshape(E * cap, d), jnp.zeros((1, d), ye.dtype)])
+        picked = flat[buf_idx.reshape(-1)].reshape(T, K, d)
+        out = jnp.sum(picked * (gate_vals
+                                * in_cap.astype(jnp.float32)
+                                )[..., None].astype(x.dtype), axis=1)
+    else:
+        # group-local dispatch (cfg.moe_groups = G): tokens compete for
+        # capacity only within their group, so the dispatch one-hots are
+        # (G, Tg, E, cap/G) and dispatch FLOPs drop by G while the expert
+        # batch keeps the same total capacity (MaxText num_groups).
+        G = max(cfg.moe_groups, 1)
+        Tg, capg = T // G, max(cap // G, 1)
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        if G > 1:
+            # recompute positions group-locally
+            oh_g = onehot.reshape(G, Tg * K, E)
+            pos_g = jnp.cumsum(oh_g, axis=1) * oh_g - 1      # (G, Tg*K, E)
+            pos = jnp.max(pos_g.reshape(G, Tg, K, E), axis=-1)
+            in_cap_g = (pos >= 0) & (pos < capg)
+            pos_c = jnp.clip(pos, 0, capg - 1)
+            ohg = onehot.reshape(G, Tg, K, E).astype(x.dtype)
+            disp = jnp.einsum(
+                "gtke,gtkc->gtec", ohg,
+                jax.nn.one_hot(pos_c, capg, dtype=x.dtype)
+                * in_cap_g[..., None].astype(x.dtype))       # (G,Tg,E,capg)
+            comb = disp * jnp.einsum(
+                "gtk,gtke->gte",
+                gate_vals.reshape(G, Tg, K)
+                * in_cap_g.astype(jnp.float32),
+                ohg.astype(jnp.float32)).astype(x.dtype)[..., None]
+            xg = xt.reshape(G, Tg, d)
+            xe = jnp.einsum("gtd,gtec->egcd", xg, disp)      # (E,G,capg,d)
+            xe = ctx.shard(xe.reshape(E, G * capg, d), ("ep", None, None))
+            ye = _moe_experts(p, cfg, xe, x.dtype)
+            ye = ye.reshape(E, G, capg, d)
+            out = jnp.einsum("egcd,gtec->gtd", ye, comb).reshape(T, d)
+        else:
+            disp = jnp.einsum(
+                "tke,tkc->tec", onehot.astype(x.dtype),
+                jax.nn.one_hot(pos_c, cap, dtype=x.dtype)
+                * in_cap[..., None].astype(x.dtype))         # (T, E, cap)
+            comb = disp * jnp.einsum(
+                "tk,tke->te", gate_vals * in_cap.astype(jnp.float32),
+                onehot.astype(jnp.float32)).astype(x.dtype)[:, :, None]
+            xe = ctx.shard(jnp.einsum("td,tec->ecd", xt, disp),
+                           ("ep", None, None))               # (E, cap, d)
+            ye = _moe_experts(p, cfg, xe, x.dtype)
+            out = jnp.einsum("ecd,tec->td", ye, comb)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(p["shared"], xt)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (Falcon-Mamba / Hymba SSM heads)
+# ---------------------------------------------------------------------------
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (dc, di)) * 0.2,
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * ds),
+        "dt_proj": dense_init(ks[3], dt_rank, di, bias=True),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,)),
+        "out_proj": dense_init(ks[4], di, d),
+    }
+
+
+def mamba_apply(p: Params, cfg: ModelConfig, x, state=None):
+    """Mamba-1: in-proj -> causal conv1d -> selective SSM scan -> gate.
+
+    state: None (full-sequence scan) or (conv_state (B, dc-1, di),
+    ssm_state (B, di, ds)) for single-step decode.
+    Returns (y, new_state)."""
+    from repro.kernels.mamba_scan import ops as ms
+    B, S, d = x.shape
+    di, ds, dc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dt_rank = max(d // 16, 1)
+
+    xz = dense(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)                        # (B, S, di)
+    xs = ctx.shard(xs, ("batch", "seq", "tp"))
+    z = ctx.shard(z, ("batch", "seq", "tp"))
+
+    if state is None:
+        pad = jnp.zeros((B, dc - 1, di), xs.dtype)
+        new_conv = jnp.concatenate([pad, xs], 1)[:, -(dc - 1):, :] \
+            if dc > 1 else jnp.zeros((B, 0, di), xs.dtype)
+        xc = jnp.concatenate([pad, xs], axis=1)
+        conv = sum(xc[:, i:i + S, :] * p["conv_w"][i].astype(xs.dtype)
+                   for i in range(dc))
+    else:
+        conv_state, ssm_state = state
+        xc = jnp.concatenate([conv_state.astype(xs.dtype), xs], axis=1)
+        new_conv = xc[:, -(dc - 1):, :] if dc > 1 \
+            else jnp.zeros((B, 0, di), xs.dtype)
+        conv = sum(xc[:, i:i + S, :] * p["conv_w"][i].astype(xs.dtype)
+                   for i in range(dc))
+    u = jax.nn.silu(conv + p["conv_b"].astype(xs.dtype))
+
+    proj = dense(p["x_proj"], u)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    delta = jax.nn.softplus(dense(p["dt_proj"], dt)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                 # (di, ds)
+
+    h0 = (None if state is None else state[1])
+    y, hT = ms.selective_scan(u.astype(jnp.float32), delta, A,
+                              Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                              h0=h0)
+    y = (y + u.astype(jnp.float32) * p["D"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    return out, (new_conv, hT)

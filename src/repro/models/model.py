@@ -1,0 +1,276 @@
+"""Model assembly: ``build_model(cfg)`` -> init / forward / loss / prefill /
+decode_step for every architecture family.
+
+The returned functions are pure (params and caches are explicit pytrees) so
+they compose directly with pjit sharding, the AdamW optimizer, checkpointing
+and the dry-run launcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import ctx
+from . import layers as Ly
+from . import transformer as Tr
+from .config import ModelConfig
+
+Params = Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable                 # (params, batch) -> (logits, aux)
+    loss: Callable                    # (params, batch) -> (loss, metrics)
+    init_cache: Callable              # (batch, max_seq) -> cache
+    prefill: Callable                 # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable             # (params, tokens, cache, index) -> ...
+
+
+def _embed_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"embed": jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32) * 0.02,
+         "final_norm": Ly.rmsnorm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = Ly.dense_init(ks[1], cfg.d_model, cfg.padded_vocab)
+    return p
+
+
+def _logits(p: Params, cfg: ModelConfig, x):
+    h = Ly.rmsnorm(p["final_norm"], x)
+    if cfg.tie_embeddings:
+        out = h @ p["embed"].T.astype(h.dtype)
+    else:
+        out = Ly.dense(p["lm_head"], h)
+    if cfg.padded_vocab != cfg.vocab:
+        # mask the padding ids (keeps the vocab-sharded layout intact)
+        ids = jnp.arange(cfg.padded_vocab)
+        out = jnp.where(ids >= cfg.vocab, jnp.asarray(-1e9, out.dtype), out)
+    return out
+
+
+def _positions(batch, B, S, cfg: ModelConfig):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.mrope_sections:
+        pos = jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+def _xent(logits, labels, mask=None):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only families (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+def _build_decoder(cfg: ModelConfig) -> Model:
+    kind = cfg.family if cfg.family != "vlm" else "dense"
+    dt = jnp.dtype(cfg.dtype)
+
+    def init(key) -> Params:
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = _embed_init(k1, cfg)
+        p["blocks"] = Tr.stack_init(k2, cfg, cfg.n_layers, kind)
+        if cfg.meta_tokens:
+            p["meta"] = jax.random.normal(
+                k3, (cfg.meta_tokens, cfg.d_model), jnp.float32) * 0.02
+        return p
+
+    def embed_inputs(p, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(p["embed"], tokens, axis=0).astype(dt)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            # vision stub: patch embeddings from the frontend replace the
+            # leading positions (M-RoPE position ids come with the batch)
+            pe = batch["patch_embeds"].astype(dt)
+            x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+        if cfg.meta_tokens:
+            meta = jnp.broadcast_to(p["meta"].astype(dt)[None],
+                                    (B, cfg.meta_tokens, cfg.d_model))
+            x = jnp.concatenate([meta, x], axis=1)
+        return ctx.shard(x, ("batch", "seq", None))
+
+    def forward(p, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_inputs(p, batch)
+        pos = _positions(batch, B, x.shape[1], cfg)
+        x, _, aux = Tr.stack_apply(p["blocks"], cfg, kind, x, pos)
+        if cfg.meta_tokens:
+            x = x[:, cfg.meta_tokens:]
+        return _logits(p, cfg, x), aux
+
+    def loss(p, batch):
+        logits, aux = forward(p, batch)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        l = _xent(logits, labels, batch.get("loss_mask"))
+        total = l + 0.01 * aux
+        return total, {"xent": l, "aux": aux}
+
+    # ---- caches -------------------------------------------------------------
+    def init_cache(batch_size: int, max_seq: int):
+        L, B = cfg.n_layers, batch_size
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        if cfg.family == "ssm":
+            return (jnp.zeros((L, B, cfg.ssm_conv - 1, cfg.d_inner), dt),
+                    jnp.zeros((L, B, cfg.d_inner, cfg.ssm_state),
+                              jnp.float32))
+        if cfg.family == "hybrid":
+            W = min(cfg.window or max_seq, max_seq) + cfg.meta_tokens
+            attn = (jnp.zeros((L, B, W, KV, hd), dt),
+                    jnp.zeros((L, B, W, KV, hd), dt),
+                    jnp.full((L, B, W), -1, jnp.int32))
+            ssm = (jnp.zeros((L, B, cfg.ssm_conv - 1, cfg.d_inner), dt),
+                   jnp.zeros((L, B, cfg.d_inner, cfg.ssm_state),
+                             jnp.float32))
+            return (attn, ssm)
+        if cfg.use_mla:
+            return jnp.zeros(
+                (L, B, max_seq, cfg.kv_lora_rank + cfg.qk_rope_dim), dt)
+        return (jnp.zeros((L, B, max_seq, KV, hd), dt),
+                jnp.zeros((L, B, max_seq, KV, hd), dt))
+
+    def prefill(p, batch, cache):
+        """Process the prompt, fill the cache, return last-token logits."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_inputs(p, batch)
+        St = x.shape[1]
+        pos = _positions(batch, B, St, cfg)
+        if cfg.family in ("ssm",):
+            x, new_cache, _ = Tr.stack_apply(p["blocks"], cfg, kind, x, pos,
+                                             caches=cache)
+        elif cfg.family == "hybrid":
+            x, raw, _ = Tr.stack_apply(p["blocks"], cfg, kind, x, pos,
+                                       collect_caches=True)
+            (k_full, v_full), m_state = raw[0], raw[1]
+            W = cache[0][0].shape[2]
+            ck, cv, kpos = cache[0]
+            take = min(W, St)
+            ck = ck.at[:, :, -take:].set(k_full[:, :, St - take:].astype(dt))
+            cv = cv.at[:, :, -take:].set(v_full[:, :, St - take:].astype(dt))
+            kpos = kpos.at[:, :, -take:].set(
+                jnp.broadcast_to(jnp.arange(St - take, St)[None, None],
+                                 (cfg.n_layers, B, take)))
+            new_cache = ((ck, cv, kpos), m_state)
+        else:
+            x, new_cache, _ = Tr.stack_apply(p["blocks"], cfg, kind, x, pos,
+                                             caches=cache, cache_index=0)
+        if cfg.meta_tokens:
+            x = x[:, cfg.meta_tokens:]
+        return _logits(p, cfg, x[:, -1:]), new_cache
+
+    def decode_step(p, tokens, cache, index):
+        """One decode step.  tokens: (B, 1); index: current absolute position
+        (traced scalar ok on the blocked-attention path)."""
+        B = tokens.shape[0]
+        x = jnp.take(p["embed"], tokens, axis=0).astype(dt)
+        pos = jnp.broadcast_to(jnp.asarray(index)[None, None], (B, 1))
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+        if cfg.family == "ssm":
+            x, new_cache, _ = Tr.stack_apply(p["blocks"], cfg, kind, x, pos,
+                                             caches=cache)
+        else:
+            x, new_cache, _ = Tr.stack_apply(p["blocks"], cfg, kind, x, pos,
+                                             caches=cache, cache_index=index)
+        return _logits(p, cfg, x), new_cache
+
+    return Model(cfg, init, forward, loss, init_cache, prefill, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+def _build_encdec(cfg: ModelConfig) -> Model:
+    dt = jnp.dtype(cfg.dtype)
+
+    def init(key) -> Params:
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = _embed_init(k1, cfg)
+        p["encoder"] = Tr.stack_init(k2, cfg, cfg.enc_layers, "enc")
+        p["decoder"] = Tr.stack_init(k3, cfg, cfg.n_layers, "dec")
+        return p
+
+    def encode(p, batch):
+        """audio_embeds: (B, frames, d) — the conv frontend is a STUB; the
+        input spec provides post-conv frame embeddings (DESIGN.md Sec. 4)."""
+        x = batch["audio_embeds"].astype(dt)
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _, _ = Tr.stack_apply(p["encoder"], cfg, "enc", x, pos)
+        return x
+
+    def forward(p, batch):
+        enc = encode(p, batch)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(p["embed"], tokens, axis=0).astype(dt)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, _, aux = Tr.stack_apply(p["decoder"], cfg, "dec", x, pos,
+                                   enc_out=enc)
+        return _logits(p, cfg, x), aux
+
+    def loss(p, batch):
+        logits, aux = forward(p, batch)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        l = _xent(logits, labels, batch.get("loss_mask"))
+        return l, {"xent": l, "aux": aux}
+
+    def init_cache(batch_size: int, max_seq: int):
+        L, B = cfg.n_layers, batch_size
+        KV, hd = cfg.n_kv_heads, cfg.head_dim
+        self_kv = (jnp.zeros((L, B, max_seq, KV, hd), dt),
+                   jnp.zeros((L, B, max_seq, KV, hd), dt))
+        enc = jnp.zeros((B, cfg.enc_positions, cfg.d_model), dt)
+        return {"self": self_kv, "enc": enc}
+
+    def prefill(p, batch, cache):
+        enc = encode(p, batch)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(p["embed"], tokens, axis=0).astype(dt)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x, self_kv, _ = Tr.stack_apply(p["decoder"], cfg, "dec", x, pos,
+                                       caches=cache["self"], cache_index=0,
+                                       enc_out=enc)
+        return _logits(p, cfg, x[:, -1:]), {"self": self_kv, "enc": enc}
+
+    def decode_step(p, tokens, cache, index):
+        B = tokens.shape[0]
+        x = jnp.take(p["embed"], tokens, axis=0).astype(dt)
+        pos = jnp.broadcast_to(jnp.asarray(index)[None, None], (B, 1))
+        x, self_kv, _ = Tr.stack_apply(p["decoder"], cfg, "dec", x, pos,
+                                       caches=cache["self"],
+                                       cache_index=index,
+                                       enc_out=cache["enc"])
+        return _logits(p, cfg, x), {"self": self_kv, "enc": cache["enc"]}
+
+    return Model(cfg, init, forward, loss, init_cache, prefill, decode_step)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_decoder(cfg)

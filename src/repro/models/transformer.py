@@ -1,0 +1,204 @@
+"""Block and model assembly for all 10 architectures.
+
+Layer stacking uses ``jax.lax.scan`` over axis-0-stacked per-layer params, so
+the lowered HLO is depth-independent (critical for the 512-device dry-run
+compiles) and the remat policy applies per scanned layer.
+
+Block kinds (selected by ModelConfig.family):
+    dense   — GQA attention + SwiGLU MLP               (qwen2/stablelm/internlm2)
+    moe     — GQA (grok) or MLA (deepseek) + MoE FFN
+    ssm     — Mamba-1 mixer only                        (falcon-mamba)
+    hybrid  — parallel attention/SSM heads + MLP        (hymba)
+    encdec  — Whisper encoder/decoder stacks
+    vlm     — dense + M-RoPE positions + patch-embed splice (qwen2-vl)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import ctx
+from . import layers as Ly
+from .config import ModelConfig
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+def block_init(key, cfg: ModelConfig, kind: Optional[str] = None) -> Params:
+    kind = kind or cfg.family
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": Ly.rmsnorm_init(cfg.d_model)}
+    if kind in ("dense", "vlm"):
+        p["attn"] = Ly.attention_init(ks[0], cfg)
+        p["ln2"] = Ly.rmsnorm_init(cfg.d_model)
+        p["mlp"] = Ly.mlp_init(ks[1], cfg)
+    elif kind == "moe":
+        p["attn"] = (Ly.mla_init(ks[0], cfg) if cfg.use_mla
+                     else Ly.attention_init(ks[0], cfg))
+        p["ln2"] = Ly.rmsnorm_init(cfg.d_model)
+        p["moe"] = Ly.moe_init(ks[1], cfg)
+    elif kind == "ssm":
+        p["mamba"] = Ly.mamba_init(ks[0], cfg)
+    elif kind == "hybrid":
+        p["attn"] = Ly.attention_init(ks[0], cfg)
+        p["mamba"] = Ly.mamba_init(ks[1], cfg)
+        p["attn_norm"] = Ly.rmsnorm_init(cfg.d_model)
+        p["ssm_norm"] = Ly.rmsnorm_init(cfg.d_model)
+        p["ln2"] = Ly.rmsnorm_init(cfg.d_model)
+        p["mlp"] = Ly.mlp_init(ks[2], cfg)
+    elif kind == "enc":
+        enc_cfg = cfg
+        p["attn"] = Ly.attention_init(ks[0], enc_cfg)
+        p["ln2"] = Ly.rmsnorm_init(cfg.d_model)
+        p["mlp"] = Ly.mlp_init(ks[1], cfg)
+    elif kind == "dec":
+        p["attn"] = Ly.attention_init(ks[0], cfg)
+        p["ln_x"] = Ly.rmsnorm_init(cfg.d_model)
+        p["xattn"] = Ly.attention_init(ks[1], cfg, cross=True)
+        p["ln2"] = Ly.rmsnorm_init(cfg.d_model)
+        p["mlp"] = Ly.mlp_init(ks[2], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_apply(p: Params, cfg: ModelConfig, kind: str, x, positions,
+                kv_cache=None, cache_index=None, enc_out=None,
+                window_override: Optional[int] = None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+    h = Ly.rmsnorm(p["ln1"], x)
+
+    if kind == "ssm":
+        y, new_cache = Ly.mamba_apply(p["mamba"], cfg, h, state=kv_cache)
+        return x + y, new_cache, aux
+
+    if kind == "hybrid":
+        win = cfg.window if window_override is None else window_override
+        a_cache = None if kv_cache is None else kv_cache[0]
+        m_state = None if kv_cache is None else kv_cache[1]
+        if cache_index is not None:          # decode: O(window) rolling cache
+            attn_out, a_new = Ly.attention_decode_rolling(
+                p["attn"], cfg, h, cache_index, a_cache, win)
+        else:
+            attn_out, a_new = Ly.attention_apply(
+                p["attn"], cfg, h, positions, mask_kind="window", window=win)
+        ssm_out, m_new = Ly.mamba_apply(p["mamba"], cfg, h, state=m_state)
+        # Hymba: fuse the two heads' outputs after per-branch normalization
+        y = 0.5 * Ly.rmsnorm(p["attn_norm"], attn_out) \
+            + 0.5 * Ly.rmsnorm(p["ssm_norm"], ssm_out)
+        x = x + y
+        h2 = Ly.rmsnorm(p["ln2"], x)
+        x = x + Ly.mlp_apply(p["mlp"], h2)
+        return x, (a_new, m_new), aux
+
+    if kind == "moe" and cfg.use_mla:
+        y, new_cache = Ly.mla_apply(p["attn"], cfg, h, positions,
+                                    kv_cache=kv_cache,
+                                    cache_index=cache_index)
+    elif kind == "enc":
+        y, _ = Ly.attention_apply(p["attn"], cfg, h, positions,
+                                  mask_kind="none")
+    else:
+        y, new_cache = Ly.attention_apply(
+            p["attn"], cfg, h, positions, mask_kind="causal",
+            kv_cache=kv_cache, cache_index=cache_index)
+    x = x + y
+
+    if kind == "dec":
+        hx = Ly.rmsnorm(p["ln_x"], x)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1])[None], enc_out.shape[:2])
+        y, _ = Ly.attention_apply(p["xattn"], cfg, hx, positions,
+                                  kv_x=enc_out, kv_positions=enc_pos,
+                                  mask_kind="none")
+        x = x + y
+
+    h2 = Ly.rmsnorm(p["ln2"], x)
+    if kind == "moe":
+        y, aux = Ly.moe_apply(p["moe"], cfg, h2)
+    else:
+        y = Ly.mlp_apply(p["mlp"], h2)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacked layers (scan) + remat
+# ---------------------------------------------------------------------------
+def stack_init(key, cfg: ModelConfig, n_layers: int, kind: str) -> Params:
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: block_init(k, cfg, kind))(keys)
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+
+
+def _remat_group(L: int) -> int:
+    """Largest divisor of L <= ceil(sqrt(L)): sqrt-checkpointing group size
+    (saves L/G layer boundaries instead of L)."""
+    import math as _m
+    g = max(int(_m.ceil(_m.sqrt(L))), 1)
+    while g > 1 and L % g != 0:
+        g -= 1
+    return g
+
+
+def stack_apply(params: Params, cfg: ModelConfig, kind: str, x, positions,
+                caches=None, cache_index=None, enc_out=None,
+                window_override=None, collect_caches: bool = False):
+    """scan over layers; caches is a pytree with leading layer axis.
+    collect_caches=True forces the flat path that stacks per-layer new
+    caches (hybrid prefill builds its rolling cache from them).
+
+    Training path (caches=None, remat on): layers scan in sqrt(L) GROUPS
+    with the whole group rematerialized — the backward keeps only L/G layer
+    boundaries live instead of L (at 80 layers x 128 MB boundaries that is
+    the difference between 10 GB and 1.3 GB per device), and per-layer K/V
+    are never stacked."""
+    def body(x, xs):
+        p_l, c_l = xs
+        x = ctx.shard(x, ("batch", "seq", None))
+        y, c_new, aux = block_apply(p_l, cfg, kind, x, positions,
+                                    kv_cache=c_l, cache_index=cache_index,
+                                    enc_out=enc_out,
+                                    window_override=window_override)
+        return y, (c_new, aux)
+
+    if caches is None and cfg.remat != "none" and not collect_caches:
+        L = jax.tree_util.tree_leaves(params)[0].shape[0]
+        G = cfg.remat_group if (cfg.remat_group and
+                                L % cfg.remat_group == 0) \
+            else _remat_group(L)
+
+        def group_body(x, gparams):
+            def inner(x, p_l):
+                x = ctx.shard(x, ("batch", "seq", None))
+                y, _, aux = block_apply(p_l, cfg, kind, x, positions,
+                                        enc_out=enc_out,
+                                        window_override=window_override)
+                return y, aux
+            return jax.lax.scan(inner, x, gparams)
+
+        gb = jax.checkpoint(group_body, policy=_remat_policy(cfg),
+                            prevent_cse=False)
+        params_g = jax.tree.map(
+            lambda a: a.reshape((L // G, G) + a.shape[1:]), params)
+        x, auxs = jax.lax.scan(gb, x, params_g)
+        return x, None, jnp.sum(auxs)
+
+    x, (new_caches, auxs) = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches, jnp.sum(auxs)

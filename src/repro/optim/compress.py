@@ -1,0 +1,53 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for cross-pod gradient reduction).
+
+On a multi-pod mesh the pod-axis all-reduce crosses the slowest links; int8
+quantization cuts those bytes 4x.  Error feedback (Karimireddy et al.) keeps
+the quantization bias out of the optimization path: the residual of each
+quantization is added back before the next one, making the scheme
+convergent.  Unit-tested for convergence on a quadratic in
+tests/test_substrates.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params) -> Dict:
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def compress_grads(grads, err_state):
+    """Quantize (grad + error) per leaf; returns (int8 tree, scales tree,
+    new error state)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return q, s, x - deq
+
+    out = jax.tree.map(one, grads, err_state)
+    istup = lambda t: isinstance(t, tuple)
+    qs = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+    ss = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+    es = jax.tree.map(lambda t: t[2], out, is_leaf=istup)
+    return qs, ss, es
+
+
+def decompress_grads(qs, ss):
+    return jax.tree.map(dequantize_int8, qs, ss)

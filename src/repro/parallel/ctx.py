@@ -1,0 +1,109 @@
+"""Activation-sharding context.
+
+GSPMD propagates weight shardings well, but for activations on odd-shaped
+models (6 attention heads vs a 16-way model axis, batch vs fused scans) its
+choices can be catastrophic — the whisper train cell replicated the full
+batch into every attention residual before these constraints existed
+(EXPERIMENTS.md §Perf, iteration 0).  The launcher installs this context
+around tracing; the model code calls ``shard(x, (...logical dims...))`` at
+the few layout-critical points.  With no context installed (unit tests,
+plain CPU runs) every call is a no-op.
+
+Logical dim names:
+    batch — FSDP axes, applied iff the dim is divisible
+    seq   — "data" iff ParallelConfig.seq_shard and batch didn't claim it
+    heads/tp/ep — the tensor axis, iff divisible
+    None  — unconstrained
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+
+def _state():
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, pc) -> None:
+    """pc: repro.models.config.ParallelConfig"""
+    # activation BATCH sharding always uses the data axes; pc.fsdp_axes
+    # only controls weight sharding
+    fs = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tp = pc.tensor_axis if pc.tensor_axis in mesh.shape else None
+    prev = _state()
+    _tls.ctx = dict(mesh=mesh, fs=fs or None, tp=tp,
+                    seq_shard=bool(pc.seq_shard),
+                    seq_tp=bool(getattr(pc, "seq_tp", False)))
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def shard(x, dims: Tuple[Optional[str], ...]):
+    """Apply a with_sharding_constraint resolving logical dim names.
+    No-op without an installed context."""
+    ctx = _state()
+    if ctx is None or x.ndim != len(dims):
+        return x
+    mesh, fs, tp = ctx["mesh"], ctx["fs"], ctx["tp"]
+    used = set()
+    spec = [None] * len(dims)
+    # pass 1: tensor-axis claims (heads/tp/ep outrank seq_tp's model use)
+    for i, (d, name) in enumerate(zip(x.shape, dims)):
+        if name in ("heads", "tp", "ep"):
+            if tp and tp not in used and d % mesh.shape.get(tp, 1) == 0:
+                spec[i] = tp
+                used.add(tp)
+    # pass 2: batch / sequence / capacity dims
+    for i, (d, name) in enumerate(zip(x.shape, dims)):
+        if spec[i] is not None:
+            continue
+        if name == "batch":
+            if fs and "batch" not in used and d % _axis_size(mesh, fs) == 0:
+                spec[i] = fs
+                used.add("batch")
+        elif name == "seq":
+            if (ctx["seq_tp"] and tp and tp not in used
+                    and d % mesh.shape.get(tp, 1) == 0):
+                # Megatron SP: residual stream seq-sharded over MODEL
+                spec[i] = tp
+                used.add(tp)
+            elif (ctx["seq_shard"] and "batch" not in used
+                    and "data" not in used
+                    and "data" in mesh.shape and d % mesh.shape["data"] == 0):
+                spec[i] = "data"
+                used.add("data")
+        elif name == "cap":
+            # MoE capacity dim: spread over the data axis so dispatch
+            # scatter traffic stays shard-local (EP x DP buffer layout)
+            if ("data" not in used and "data" in mesh.shape
+                    and d % mesh.shape["data"] == 0):
+                spec[i] = "data"
+                used.add("data")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def active() -> bool:
+    return _state() is not None

@@ -1,0 +1,192 @@
+"""Logical sharding rules: param/optimizer/activation/cache PartitionSpecs.
+
+Layout philosophy (DESIGN.md Sec. 5):
+* every large weight is 2D-sharded — the contraction-safe dim over the
+  ``model`` (TP) axis, the other over the ``("pod","data")`` FSDP axes —
+  so parameters AND optimizer state scale with the full chip count
+  (ZeRO-3 x TP), and adding pods never changes the rules;
+* a dim is only sharded if divisible by the mesh-axis extent (GQA kv=8
+  against a 16-way model axis falls back to replication — the Monad
+  advisor's "sequence-sharded decode" covers that case for KV caches);
+* MoE experts shard over ``model`` when the expert count divides it
+  (deepseek: 160/16); otherwise experts replicate and each expert is
+  TP-sharded internally (grok: 8 experts, d_ff 32768/16) — exactly the
+  resource-vs-communication tradeoff Level A reasons about.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ParallelConfig
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        if a in mesh.shape:
+            s *= mesh.shape[a]
+    return s
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % max(_axis_size(mesh, axes), 1) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Resolved mesh axes for this run (missing axes are dropped)."""
+    fsdp: Tuple[str, ...]
+    tensor: str
+
+    def fs(self, mesh: Mesh):
+        return tuple(a for a in self.fsdp if a in mesh.shape) or None
+
+    def tp(self, mesh: Mesh):
+        return self.tensor if self.tensor in mesh.shape else None
+
+
+def make_rules(pc: ParallelConfig) -> AxisRules:
+    return AxisRules(fsdp=tuple(pc.fsdp_axes), tensor=pc.tensor_axis)
+
+
+def param_spec(path: Tuple[str, ...], leaf, cfg: ModelConfig,
+               mesh: Mesh, rules: AxisRules) -> P:
+    """PartitionSpec for one parameter leaf, by its tree path."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    stacked = "blocks" in names or "encoder" in names or "decoder" in names
+    pre = (None,) if stacked else ()
+    fs, tp = rules.fs(mesh), rules.tp(mesh)
+    shp = leaf.shape[1:] if stacked else leaf.shape
+
+    def guard(spec_dims):
+        out = []
+        for dim, ax in zip(shp, spec_dims):
+            out.append(ax if ax is not None and _div(dim, mesh, ax) else None)
+        return P(*pre, *out)
+
+    if name == "embed":
+        return guard((tp, fs))
+    if name in ("scale", "b", "conv_b", "D", "meta"):
+        if name == "b" and parent in ("wq", "wk", "wv", "wg", "wu"):
+            return guard((tp,))
+        return P(*pre, *([None] * len(shp)))
+    if parent in ("wq", "wk", "wv") or parent in ("wg", "wu"):
+        return guard((fs, tp))
+    if parent in ("wo", "wd") or parent == "out_proj":
+        return guard((tp, fs))
+    if parent == "lm_head":
+        return guard((fs, tp))
+    if parent == "router":
+        return guard((fs, None))
+    if name in ("wg", "wu") and len(shp) == 3:                 # MoE (E, d, f)
+        if _div(shp[0], mesh, tp):
+            return guard((tp, fs, None))                       # EP
+        return guard((None, fs, tp))                           # expert-TP
+    if name == "wd" and len(shp) == 3:                         # MoE (E, f, d)
+        if _div(shp[0], mesh, tp):
+            return guard((tp, None, fs))
+        return guard((None, tp, fs))
+    if parent == "in_proj":                                    # mamba (d, 2di)
+        return guard((fs, tp))
+    if name == "conv_w":
+        return guard((None, tp))
+    if parent == "x_proj":
+        return guard((tp, None))
+    if parent == "dt_proj":
+        return guard((None, tp))
+    if name == "A_log":
+        return guard((tp, None))
+    if parent in ("wkv_down",):                                # MLA down-proj
+        return guard((fs, None))
+    if parent in ("wk_up", "wv_up"):
+        return guard((None, tp))
+    # default: replicate
+    return P(*pre, *([None] * len(shp)))
+
+
+def param_shardings(params_shape, cfg: ModelConfig, mesh: Mesh,
+                    rules: AxisRules):
+    """NamedSharding tree matching a params (or ShapeDtypeStruct) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_spec(p, l, cfg, mesh, rules)),
+        params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+DATA_AXES = ("pod", "data")     # batch parallelism axes (always on; the
+                                # fsdp_axes knob only controls WEIGHT sharding)
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in DATA_AXES if a in mesh.shape) or None
+
+
+def batch_spec(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh,
+               batch: int, seq: int) -> Dict[str, P]:
+    fs = _batch_axes(mesh)
+    bax = fs if batch % max(_axis_size(mesh, fs), 1) == 0 else None
+    sax = "data" if (pc.seq_shard and bax is None
+                     and seq % max(_axis_size(mesh, "data"), 1) == 0) else None
+    specs = {"tokens": P(bax, sax), "labels": P(bax, sax),
+             "loss_mask": P(bax, sax)}
+    if cfg.family == "encdec":
+        specs["audio_embeds"] = P(bax, None, None)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(bax, None, None)
+        specs["positions"] = P(bax, sax, None)
+    return specs
+
+
+def cache_spec(cfg: ModelConfig, pc: ParallelConfig, mesh: Mesh,
+               batch: int):
+    """PartitionSpecs for the KV/SSM cache pytree (decode cells).
+
+    decode_kv='sequence': shard the cache SEQ dim over the model axis —
+    flash-decoding-style partial-softmax reduction, the layout the advisor
+    picks whenever kv_heads doesn't divide the model axis (GQA kv=8 vs 16).
+    decode_kv='heads': classic head-sharded cache."""
+    rules = make_rules(pc)
+    tp = rules.tp(mesh)
+    fs = _batch_axes(mesh)
+    bax = fs if batch % max(_axis_size(mesh, fs), 1) == 0 else None
+    mode = pc.decode_kv
+    if mode == "auto":
+        kv_ok = cfg.n_kv_heads > 0 and _div(cfg.n_kv_heads, mesh, tp)
+        mode = "heads" if kv_ok else "sequence"
+
+    def kv(leaf_ndim_5: bool = True):
+        if mode == "heads":
+            return P(None, bax, None, tp, None)
+        return P(None, bax, tp, None, None)
+
+    if cfg.family == "ssm":
+        return (P(None, bax, None, tp), P(None, bax, tp, None))
+    if cfg.family == "hybrid":
+        attn = (kv(), kv(), P(None, bax, None))
+        ssm = (P(None, bax, None, tp), P(None, bax, tp, None))
+        return (attn, ssm)
+    if cfg.use_mla:
+        # compressed latent cache (L, B, S, r+dr): shard seq over model
+        return P(None, bax, tp, None)
+    if cfg.family == "encdec":
+        return {"self": (kv(), kv()), "enc": P(bax, None, None)}
+    return (kv(), kv())
+
+
+def like_tree(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

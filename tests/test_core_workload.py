@@ -1,0 +1,112 @@
+"""Unit tests for the workload IR and the Map/Bind/Reduce mapping formalism,
+including element-level validation of the Omega transfer-volume closed form.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workload import (Edge, WorkloadGraph, contraction, conv2d,
+                                 matmul, mttkrp)
+from repro.core import mapping
+
+
+def test_matmul_ir():
+    w = matmul("mm", 4, 5, 6)
+    assert w.macs == 4 * 5 * 6
+    assert w.flops == 2 * w.macs
+    assert w.tensor_size("A") == 24
+    assert w.tensor_size("B") == 30
+    assert w.tensor_size("C") == 20
+    arr = w.to_arrays()
+    assert arr["bounds"][:3].tolist() == [4, 5, 6]
+    assert arr["loopmask"].sum() == 3
+    assert arr["is_out"].tolist()[:3] == [False, False, True]
+
+
+def test_conv_footprint_sliding_window():
+    w = conv2d("cv", N=1, K=2, C=3, P=4, Q=5, R=3, S=3)
+    # input footprint: N * C * (P+R-1) * (Q+S-1)
+    assert w.tensor_size("I") == 1 * 3 * (4 + 3 - 1) * (5 + 3 - 1)
+    assert w.tensor_size("W") == 2 * 3 * 3 * 3
+    assert w.tensor_size("O") == 1 * 2 * 4 * 5
+
+
+def test_mttkrp_three_inputs():
+    w = mttkrp("mk", 4, 5, 6, 7)
+    assert w.macs == 4 * 5 * 6 * 7
+    assert w.flops_per_instance == 3
+
+
+def test_graph_external_and_final():
+    g = WorkloadGraph(
+        [matmul("a", 4, 4, 4), matmul("b", 4, 4, 4)],
+        [Edge(0, 1, "C", "A")])
+    ext = g.external_inputs()
+    assert (0, "A") in ext and (0, "B") in ext and (1, "B") in ext
+    assert (1, "A") not in ext
+    assert g.final_outputs() == [(1, "C")]
+    assert g.topo_order() == [0, 1]
+
+
+def test_graph_cycle_detection():
+    with pytest.raises(ValueError):
+        WorkloadGraph(
+            [matmul("a", 2, 2, 2), matmul("b", 2, 2, 2)],
+            [Edge(0, 1, "C", "A"), Edge(1, 0, "C", "A")]).topo_order()
+
+
+# ---------------------------------------------------------------------------
+# Map / Bind / Reduce + Omega (element-level oracle for the fast evaluator)
+# ---------------------------------------------------------------------------
+def test_map_instances_modulo():
+    w = matmul("mm", 4, 4, 2)
+    cl = mapping.Cluster({"pe": (2, 2)})
+    coords = mapping.map_instances(w, cl, {"pe": ("i", "j")})
+    inst = mapping.enumerate_instances(w)
+    assert np.all(coords[:, 0] == inst[:, 0] % 2)
+    assert np.all(coords[:, 1] == inst[:, 1] % 2)
+
+
+def test_reduce_gathers_by_core():
+    w = matmul("mm", 4, 4, 1)
+    cl = mapping.Cluster({"core": (2, 2)})
+    coords = mapping.map_instances(w, cl, {"core": ("i", "j")})
+    groups = mapping.reduce_graph(coords)
+    assert len(groups) == 4
+    assert sum(len(v) for v in groups.values()) == w.macs
+
+
+@given(m=st.integers(2, 6), n=st.integers(2, 6), k=st.integers(2, 6),
+       n2=st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_omega_matches_tensor_size(m, n, k, n2):
+    """|Omega| (element-level last-writer -> first-reader pairs) equals the
+    producer tensor size used by the fast evaluator as transfer volume."""
+    a = matmul("a", m, n, k)
+    b = matmul("b", m, n2, n)          # consumes a's C as its A (m x n)
+    pairs = mapping.omega(a, b, "C", "A")
+    assert len(pairs) == a.tensor_size("C")
+    g = WorkloadGraph([a, b], [Edge(0, 1, "C", "A")])
+    assert g.transfer_elems(g.edges[0]) == len(pairs)
+
+
+def test_omega_orders_last_writer_first_reader():
+    a = matmul("a", 2, 2, 3)
+    b = matmul("b", 2, 2, 2)
+    pairs = mapping.omega(a, b, "C", "A")
+    inst_a = mapping.enumerate_instances(a)
+    inst_b = mapping.enumerate_instances(b)
+    for wi, ri in pairs:
+        # writer is the LAST k-instance (k = bound-1)
+        assert inst_a[wi][2] == 2
+        # reader is the FIRST instance touching that element
+        el = tuple(inst_a[wi][:2])
+        earlier = [j for j in range(ri)
+                   if (inst_b[j][0], inst_b[j][2]) == el]
+        assert not earlier
+
+
+def test_bind_sequence():
+    bmap = mapping.bind([(0, 0), (0, 1)], [2, 3])
+    assert bmap[(0, 0)] == 2 and bmap[(0, 1)] == 3

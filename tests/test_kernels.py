@@ -1,0 +1,185 @@
+"""Per-kernel correctness: Pallas (interpret mode) and fast jnp paths vs the
+pure-jnp oracles, swept over shapes/dtypes/mask kinds, plus hypothesis
+property tests and gradient checks for the flash-attention custom VJP."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ops import (_fa_diff,
+                                               flash_attention_blocked)
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gp_cov.gp_cov import matern52_pallas
+from repro.kernels.gp_cov.ref import matern52_ref
+from repro.kernels.mamba_scan.mamba_scan import selective_scan_pallas
+from repro.kernels.mamba_scan.ops import selective_scan_assoc
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FA_SHAPES = [
+    # (B, Sq, Sk, H, KV, D, mask, window, kv_valid)
+    (1, 32, 32, 4, 4, 16, "causal", 0, None),       # MHA
+    (2, 64, 64, 8, 2, 32, "causal", 0, None),       # GQA
+    (1, 64, 64, 4, 1, 64, "window", 16, None),      # MQA sliding window
+    (2, 32, 32, 4, 2, 16, "none", 0, None),         # encoder
+    (2, 8, 64, 4, 2, 16, "causal", 0, 40),          # decode-ish, cache mask
+    (1, 16, 48, 2, 2, 8, "none", 0, 33),            # unaligned valid len
+]
+
+
+@pytest.mark.parametrize("shape", FA_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_matches_ref(shape, dtype):
+    B, Sq, Sk, H, KV, D, mk, w, kvl = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D), dtype)
+    ref = attention_ref(q, k, v, mk, w, kvl)
+    out = flash_attention_pallas(q, k, v, mk, w, kvl, block_q=8, block_k=16,
+                                 interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", FA_SHAPES)
+def test_flash_blocked_matches_ref(shape):
+    B, Sq, Sk, H, KV, D, mk, w, kvl = shape
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, KV, D))
+    v = jax.random.normal(ks[2], (B, Sk, KV, D))
+    ref = attention_ref(q, k, v, mk, w, kvl)
+    out = flash_attention_blocked(q, k, v, mk, w, kvl, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_blocked_traced_valid_len():
+    """decode path: kv_valid_len may be a traced scalar."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 16))
+    k = jax.random.normal(ks[1], (2, 64, 2, 16))
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    f = jax.jit(lambda n: flash_attention_blocked(q, k, v, "causal", 0, n))
+    for n in (3, 17, 64):
+        ref = attention_ref(q, k, v, "causal", 0, n)
+        np.testing.assert_allclose(np.asarray(f(n)), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+@given(seed=st.integers(0, 1000), sq=st.sampled_from([8, 24, 40]),
+       sk=st.sampled_from([16, 48]))
+@settings(max_examples=10, deadline=None)
+def test_flash_vjp_matches_autodiff_of_ref(seed, sq, sk):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, 4, 16))
+    k = jax.random.normal(ks[1], (1, sk, 2, 16))
+    v = jax.random.normal(ks[2], (1, sk, 2, 16))
+    f1 = lambda q, k, v: jnp.sum(jnp.sin(
+        _fa_diff(q, k, v, "causal", 0, None, 16)))
+    f2 = lambda q, k, v: jnp.sum(jnp.sin(attention_ref(q, k, v, "causal")))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+MS_SHAPES = [(1, 16, 8, 4, 8), (2, 32, 16, 8, 8), (1, 64, 32, 16, 16)]
+
+
+@pytest.mark.parametrize("B,S,Di,Ds,chunk", MS_SHAPES)
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_mamba_pallas_matches_ref(B, S, Di, Ds, chunk, with_h0):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    u = jax.random.normal(ks[0], (B, S, Di))
+    dl = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, Ds)) * 0.3)
+    Bc = jax.random.normal(ks[3], (B, S, Ds))
+    Cc = jax.random.normal(ks[4], (B, S, Ds))
+    h0 = jax.random.normal(ks[5], (B, Di, Ds)) if with_h0 else None
+    yr, hr = selective_scan_ref(u, dl, A, Bc, Cc, h0)
+    yp, hp = selective_scan_pallas(u, dl, A, Bc, Cc, h0, chunk=chunk,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(hr),
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_mamba_assoc_matches_ref(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    B, S, Di, Ds = 2, 24, 8, 4
+    u = jax.random.normal(ks[0], (B, S, Di))
+    dl = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, Ds)) * 0.3)
+    Bc = jax.random.normal(ks[3], (B, S, Ds))
+    Cc = jax.random.normal(ks[4], (B, S, Ds))
+    h0 = jax.random.normal(ks[5], (B, Di, Ds))
+    yr, hr = selective_scan_ref(u, dl, A, Bc, Cc, h0)
+    ya, ha = selective_scan_assoc(u, dl, A, Bc, Cc, h0)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yr),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(hr),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_mamba_chunked_equals_two_calls():
+    """state threading: scanning [0:S] equals scanning [0:S/2] then
+    [S/2:S] with the carried state — the decode-step invariant."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, Di, Ds = 1, 32, 8, 4
+    u = jax.random.normal(ks[0], (B, S, Di))
+    dl = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, Ds)) * 0.3)
+    Bc = jax.random.normal(ks[3], (B, S, Ds))
+    Cc = jax.random.normal(ks[4], (B, S, Ds))
+    y_full, h_full = selective_scan_ref(u, dl, A, Bc, Cc)
+    h = S // 2
+    y1, h1 = selective_scan_assoc(u[:, :h], dl[:, :h], A, Bc[:, :h],
+                                  Cc[:, :h])
+    y2, h2 = selective_scan_assoc(u[:, h:], dl[:, h:], A, Bc[:, h:],
+                                  Cc[:, h:], h0=h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# GP covariance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,m,d,blk", [(16, 16, 4, 8), (32, 24, 7, 8),
+                                       (64, 64, 12, 32)])
+@pytest.mark.parametrize("ls", [0.1, 0.5, 2.0])
+def test_gp_cov_pallas_matches_ref(n, m, d, blk, ls):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    X1 = jax.random.normal(ks[0], (n, d))
+    X2 = jax.random.normal(ks[1], (m, d))
+    ref = matern52_ref(X1, X2, ls)
+    out = matern52_pallas(X1, X2, ls, block=blk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gp_cov_psd_and_unit_diag():
+    X = jax.random.normal(jax.random.PRNGKey(1), (24, 5))
+    K = matern52_pallas(X, X, 0.7, block=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.diag(K)), 1.0, atol=1e-5)
+    evs = np.linalg.eigvalsh(np.asarray(K) + 1e-6 * np.eye(24))
+    assert evs.min() > 0

@@ -1,0 +1,144 @@
+"""Tests for the launch-side analysis stack: the loop-aware HLO analyzer
+(trip-count multiplication, wire-byte pricing), the roofline math, the
+input specs, and the autosharding advisor's feasibility logic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autosharding.advisor import ShardPlan, exhaustive_best, predict
+from repro.configs import ARCH_IDS, cells, get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.specs import batch_specs, input_specs
+from repro.models.config import SHAPES
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_analyzer_counts_scan_trips():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = _compile(f, x, x)
+    an = H.ModuleAnalysis(c.as_text()).totals()
+    assert an["flops"] == pytest.approx(2 * 256 ** 3 * 10, rel=1e-6)
+
+
+def test_analyzer_counts_nested_scan_trips():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(g, x, x)
+    an = H.ModuleAnalysis(c.as_text()).totals()
+    assert an["flops"] == pytest.approx(2 * 128 ** 3 * 20, rel=1e-6)
+
+
+def test_analyzer_vs_xla_on_loop_free():
+    """Without loops the analyzer must agree with XLA's own count."""
+    def f(a, b):
+        return (a @ b) @ b
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = _compile(f, x, x)
+    an = H.ModuleAnalysis(c.as_text()).totals()
+    xf, _ = H.cost_analysis_terms(c)
+    assert an["flops"] == pytest.approx(xf, rel=1e-6)
+
+
+def test_collective_wire_factors():
+    txt = """
+ENTRY %main (x: f32[16]) -> f32[16] {
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}
+  %ag = f32[4096]{0} all-gather(%x), replica_groups={{0,1,2,3}}
+  ROOT %cp = f32[1024]{0} collective-permute(%x), source_target_pairs={{0,1}}
+}
+"""
+    s = H.collective_stats(txt)
+    assert s["wire_bytes"]["all-reduce"] == pytest.approx(
+        2 * 4096 * 3 / 4)                      # 2 * size * (n-1)/n
+    assert s["wire_bytes"]["all-gather"] == pytest.approx(
+        4 * 4096 * 3 / 4)                      # out * (n-1)/n
+    assert s["wire_bytes"]["collective-permute"] == pytest.approx(4096)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = H.roofline(flops_per_device=197e12, bytes_per_device=819e9 / 2,
+                   wire_bytes_per_device=0.0, n_chips=256,
+                   model_flops=197e12 * 256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.bottleneck == "compute"
+    assert r.roofline_frac == pytest.approx(1.0)
+    assert r.useful_ratio == pytest.approx(1.0)
+
+
+def test_roofline_decode_bandwidth_floor():
+    r = H.roofline(1e9, 819e9, 0.0, 256, model_flops=1e9 * 256,
+                   model_min_bytes=819e9 * 256)
+    # ideal = compulsory bytes at full bandwidth = 1s; step = memory 1s
+    assert r.roofline_frac == pytest.approx(1.0, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen2_72b", "deepseek_v2_236b",
+                                  "falcon_mamba_7b", "whisper_tiny",
+                                  "qwen2_vl_72b", "hymba_1_5b"])
+def test_input_specs_shapes(arch):
+    sp = input_specs(arch, "train_4k")
+    assert sp["batch"]["tokens"].shape == (256, 4096)
+    assert all(isinstance(l, jax.ShapeDtypeStruct)
+               for l in jax.tree_util.tree_leaves(sp["params"]))
+    if SHAPES["decode_32k"].name in [c for c in cells(arch)]:
+        sd = input_specs(arch, "decode_32k")
+        assert sd["tokens"].shape == (128, 1)
+        # serving weights are bf16
+        mats = [l for l in jax.tree_util.tree_leaves(sd["params"])
+                if l.ndim >= 2]
+        assert all(m.dtype == jnp.bfloat16 for m in mats)
+
+
+def test_cells_cover_40_grid():
+    total = sum(len(cells(a)) for a in ARCH_IDS)
+    skipped = sum(1 for a in ARCH_IDS if "long_500k" not in cells(a))
+    assert total + skipped == 40          # 10 archs x 4 shapes
+
+
+# ---------------------------------------------------------------------------
+# advisor
+# ---------------------------------------------------------------------------
+def test_advisor_rejects_infeasible_hbm():
+    cfg = get_config("grok_1_314b")          # 314B params
+    sc = SHAPES["train_4k"]
+    tiny = ShardPlan(data=1, model=4, microbatch=1, remat="none")
+    s = predict(cfg, sc, tiny)
+    assert not s.feasible                    # 314B on 4 chips cannot fit
+
+
+def test_advisor_best_is_feasible_and_balanced():
+    cfg = get_config("qwen2_72b")
+    plan, score, scored = exhaustive_best(cfg, SHAPES["train_4k"],
+                                          chips=256)
+    assert score.feasible
+    assert score.hbm_gb < 16.0
+    # feasible plans must be a strict subset
+    assert 0 < sum(1 for _, s in scored if s.feasible) < len(scored)
+
+
+def test_advisor_decode_prefers_sequence_kv_for_gqa8():
+    cfg = get_config("qwen2_72b")            # kv=8
+    plan, score, _ = exhaustive_best(cfg, SHAPES["decode_32k"], chips=256)
+    if plan.model > 8:
+        assert plan.decode_kv == "sequence"

@@ -1,0 +1,184 @@
+"""Property-based tests on model-layer invariants (hypothesis)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.models import layers as Ly
+from repro.models.config import ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=128)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+@given(shift=st.integers(1, 64), seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_rope_relative_position_invariance(shift, seed):
+    """q.k after RoPE depends only on relative positions: shifting both
+    queries' and keys' absolute positions by the same amount must not
+    change the attention scores."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    q = jax.random.normal(ks[0], (1, 6, 2, 16))
+    k = jax.random.normal(ks[1], (1, 6, 2, 16))
+    p0 = jnp.arange(6)[None, :]
+    s0 = jnp.einsum("bqhd,bkhd->bhqk",
+                    Ly.apply_rope(q, p0), Ly.apply_rope(k, p0))
+    p1 = p0 + shift
+    s1 = jnp.einsum("bqhd,bkhd->bhqk",
+                    Ly.apply_rope(q, p1), Ly.apply_rope(k, p1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_rope_preserves_norm():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    p = jnp.arange(8)[None, :].repeat(2, 0)
+    r = Ly.apply_rope(q, p)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(q), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1), atol=1e-4, rtol=1e-4)
+
+
+def test_mrope_sections_match_plain_rope_for_equal_streams():
+    """M-RoPE with identical t/h/w position streams == plain RoPE."""
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 16))
+    p = jnp.arange(8)[None, :]
+    p3 = jnp.broadcast_to(p[..., None], (1, 8, 3))
+    a = Ly.apply_rope(q, p, sections=())
+    b = Ly.apply_rope(q, p3, sections=(4, 2, 2))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+@given(scale=st.floats(0.1, 100.0), seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_rmsnorm_scale_invariance(scale, seed):
+    p = Ly.rmsnorm_init(16)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 3, 16))
+    a = Ly.rmsnorm(p, x)
+    b = Ly.rmsnorm(p, x * scale)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_rmsnorm_unit_rms():
+    p = Ly.rmsnorm_init(64)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 7.0
+    y = np.asarray(Ly.rmsnorm(p, x), np.float64)
+    rms = np.sqrt((y ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# attention causality
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 50), t=st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_attention_causality(seed, t):
+    """Perturbing future tokens must not change past outputs."""
+    cfg = _cfg()
+    p = Ly.attention_init(jax.random.PRNGKey(0), cfg)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (1, 8, cfg.d_model))
+    pos = jnp.arange(8)[None, :]
+    y0, _ = Ly.attention_apply(p, cfg, x, pos, mask_kind="causal")
+    x2 = x.at[:, t:].add(jax.random.normal(ks[1], (1, 8 - t, cfg.d_model)))
+    y1, _ = Ly.attention_apply(p, cfg, x2, pos, mask_kind="causal")
+    np.testing.assert_allclose(np.asarray(y0[:, :t]), np.asarray(y1[:, :t]),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_sliding_window_attention_locality():
+    """With window w, token i must not see tokens < i - w + 1."""
+    cfg = _cfg()
+    p = Ly.attention_init(jax.random.PRNGKey(0), cfg)
+    S, w = 16, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, S, cfg.d_model))
+    pos = jnp.arange(S)[None, :]
+    y0, _ = Ly.attention_apply(p, cfg, x, pos, mask_kind="window", window=w)
+    # perturb token 0: outputs at positions >= w must be unchanged
+    x2 = x.at[:, 0].add(100.0)
+    y1, _ = Ly.attention_apply(p, cfg, x2, pos, mask_kind="window", window=w)
+    np.testing.assert_allclose(np.asarray(y0[:, w:]), np.asarray(y1[:, w:]),
+                               atol=1e-4, rtol=1e-4)
+    assert float(jnp.abs(y0[:, 0] - y1[:, 0]).max()) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 30))
+@settings(max_examples=8, deadline=None)
+def test_moe_infinite_capacity_equals_dense_mixture(seed):
+    """With capacity >= T*K/E the dispatch drops nothing: the MoE output
+    must equal the explicit gate-weighted mixture of expert MLPs."""
+    cfg = _cfg(family="moe", n_experts=4, top_k=2, expert_ff=32,
+               capacity_factor=16.0)
+    p = Ly.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 8, cfg.d_model))
+    out, _ = Ly.moe_apply(p, cfg, x)
+
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    gv, gi = jax.lax.top_k(probs, 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xt)
+    for e in range(4):
+        h = jax.nn.silu(xt @ p["wg"][e]) * (xt @ p["wu"][e])
+        ye = h @ p["wd"][e]
+        wsel = jnp.where(gi == e, gv, 0.0).sum(-1)[:, None]
+        ref = ref + wsel * ye
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+def test_moe_capacity_drops_monotone():
+    """Lower capacity factor must never increase the routed mass."""
+    cfg0 = _cfg(family="moe", n_experts=4, top_k=2, expert_ff=32)
+    p = Ly.moe_init(jax.random.PRNGKey(0), cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg0.d_model))
+    norms = []
+    for cf in (0.25, 1.0, 8.0):
+        out, _ = Ly.moe_apply(
+            p, dataclasses.replace(cfg0, capacity_factor=cf), x)
+        norms.append(float(jnp.sum(jnp.abs(out))))
+    assert norms[0] <= norms[1] <= norms[2]
+
+
+# ---------------------------------------------------------------------------
+# MLA cache equivalence
+# ---------------------------------------------------------------------------
+def test_mla_cache_decode_matches_full_forward():
+    """Prefill+decode through the compressed-latent cache must match the
+    full-sequence MLA forward at the decoded position."""
+    cfg = get_reduced("deepseek_v2_236b")
+    p = Ly.mla_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, _ = Ly.mla_apply(p, cfg, x, pos)
+
+    cache = jnp.zeros((B, S, cfg.kv_lora_rank + cfg.qk_rope_dim))
+    _, cache = Ly.mla_apply(p, cfg, x[:, :S - 1], pos[:, :S - 1],
+                            kv_cache=cache, cache_index=0)
+    last, _ = Ly.mla_apply(p, cfg, x[:, S - 1:], pos[:, S - 1:],
+                           kv_cache=cache, cache_index=S - 1)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, -1]),
+                               atol=3e-4, rtol=3e-4)
