@@ -12,6 +12,7 @@ import numpy as np
 
 import repro.core as C
 from repro.core.constants import PACKAGING_NAMES
+from repro.explore.archive import pareto_front
 
 from .common import QUICK, cached
 
@@ -37,14 +38,11 @@ def compute():
 
 
 def _pareto(points):
-    pts = sorted((p["latency_ns"], p["cost_usd"]) for p in points)
-    front = []
-    best = float("inf")
-    for l, c in pts:
-        if c < best:
-            best = c
-            front.append((l, c))
-    return front
+    """(latency, cost) rows of the nondominated subset, sorted by latency —
+    dominance itself delegates to the canonical ``repro.explore.archive``
+    implementation."""
+    pts = [(p["latency_ns"], p["cost_usd"]) for p in points]
+    return sorted(pts[i] for i in pareto_front(pts))
 
 
 def run(quick: bool = True):

@@ -9,7 +9,11 @@ from pathlib import Path
 from typing import Callable, Dict, List
 
 ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
-QUICK = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+# QUICK=1 forces the CI-style smoke budgets even when REPRO_BENCH_FULL=1;
+# by default quick mode is on unless REPRO_BENCH_FULL=1 opts into the big
+# search budgets.
+QUICK = (os.environ.get("QUICK") == "1"
+         or os.environ.get("REPRO_BENCH_FULL", "0") != "1")
 
 
 def timed(fn: Callable, *args, repeat: int = 3, **kw):

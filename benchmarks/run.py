@@ -10,8 +10,8 @@ REPRO_BENCH_FULL=1 for the bigger search budgets) to recompute.
 import sys
 
 from . import (bench_validation, bench_cost_fig3, bench_comparison,
-               bench_codesign, bench_pareto, bench_tt, bench_roofline,
-               bench_autoshard, bench_kernels)
+               bench_codesign, bench_pareto, bench_explore, bench_tt,
+               bench_roofline, bench_autoshard, bench_kernels)
 from .common import QUICK, emit
 
 MODULES = {
@@ -20,6 +20,7 @@ MODULES = {
     "comparison": bench_comparison,    # Fig. 7 (Simba / NN-Baton / Monad)
     "codesign": bench_codesign,        # Fig. 8 ladder
     "pareto": bench_pareto,            # Fig. 9
+    "explore": bench_explore,          # repro.explore front + cache service
     "tt": bench_tt,                    # Fig. 10 case study
     "roofline": bench_roofline,        # dry-run roofline table
     "autoshard": bench_autoshard,      # Level-B advisor

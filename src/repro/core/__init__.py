@@ -22,8 +22,9 @@ from .evaluate import SystemSpec, evaluate_system, make_batch_evaluator
 from .encoding import (ALL_FIELDS, ARCH_FIELDS, BO_FIELDS, INTEG_FIELDS,
                        SA_FIELDS, DesignSpace, balanced_init, mutate,
                        random_design)
-from .optimizer import (OBJ_COST_EDP, OBJ_EDP, OBJ_ENERGY, OBJ_LATENCY,
-                        SAConfig, SearchResult, make_sa, optimize)
+from .optimizer import (METRIC_KEYS, OBJ_COST_EDP, OBJ_EDP, OBJ_ENERGY,
+                        OBJ_LATENCY, SAConfig, SearchResult, make_sa,
+                        optimize, pareto_front, two_stage_optimize)
 from .baselines import Baseline, make_baseline
 from .cost import die_cost, die_yield, dies_per_wafer, monolithic_cost, package_cost
 from . import presets

@@ -31,6 +31,10 @@ from .network import N_FAMILIES
 
 F = jnp.float32
 
+# the objective axes every engine (scalarized BO x SA, NSGA-II fronts,
+# Pareto archives) agrees on, in canonical order
+METRIC_KEYS = ("latency_ns", "energy_pj", "cost_usd", "area_mm2")
+
 # objective weights over log-metrics: (latency, energy, cost, area)
 OBJ_EDP = (1.0, 1.0, 0.0, 0.0)
 OBJ_LATENCY = (1.0, 0.0, 0.0, 0.0)
@@ -38,18 +42,29 @@ OBJ_ENERGY = (0.0, 1.0, 0.0, 0.0)
 OBJ_COST_EDP = (1.0, 1.0, 1.0, 0.0)     # cost-effectiveness (Fig. 9/10)
 
 
+def metric_stack(metrics: Dict) -> jnp.ndarray:
+    """(4,) raw metric vector in ``METRIC_KEYS`` order (archive rows)."""
+    return jnp.stack([jnp.asarray(metrics[k], F) for k in METRIC_KEYS])
+
+
+def log_metric_stack(metrics: Dict) -> jnp.ndarray:
+    """(4,) clipped log-metric vector — the shared evaluation path under
+    both the scalarized engines here and ``repro.explore.nsga``."""
+    return jnp.stack([jnp.log(jnp.maximum(metrics[k], 1e-3))
+                      for k in METRIC_KEYS])
+
+
+def penalty_log(space: DesignSpace, design: Dict, metrics: Dict):
+    """log feasibility penalty (shared by scalarized + front explorers)."""
+    return jnp.log(feasibility_penalty(space, design, metrics))
+
+
 def objective_from_metrics(space: DesignSpace, design: Dict, metrics: Dict,
                            weights) -> jnp.ndarray:
     """sum_i w_i * log(metric_i) + log(feasibility penalty); minimize."""
     w = jnp.asarray(weights, F)
-    vals = jnp.stack([
-        jnp.log(jnp.maximum(metrics["latency_ns"], 1e-3)),
-        jnp.log(jnp.maximum(metrics["energy_pj"], 1e-3)),
-        jnp.log(jnp.maximum(metrics["cost_usd"], 1e-3)),
-        jnp.log(jnp.maximum(metrics["area_mm2"], 1e-3)),
-    ])
-    pen = jnp.log(feasibility_penalty(space, design, metrics))
-    return jnp.sum(w * vals) + 8.0 * pen
+    return (jnp.sum(w * log_metric_stack(metrics))
+            + 8.0 * penalty_log(space, design, metrics))
 
 
 # ---------------------------------------------------------------------------
@@ -66,6 +81,23 @@ class SAConfig:
 # compiled SA runners, keyed on everything that shapes the compiled code;
 # all workload graphs with the same padded dims share one compilation.
 _SA_CACHE: dict = {}
+
+# compiled stacked-designs -> metrics evaluators, shared by every spec with
+# equal padded dims (used by the archive-recording path below)
+_BATCH_EVAL_CACHE: dict = {}
+
+
+def _batch_metrics(spec: SystemSpec, tech):
+    from .evaluate import evaluate_arrays
+    dims = (spec.W, spec.CH, spec.E)
+    key = (dims, tech)
+    if key not in _BATCH_EVAL_CACHE:
+        _BATCH_EVAL_CACHE[key] = jax.jit(
+            lambda ds, arr: jax.vmap(
+                lambda d: evaluate_arrays(arr, d, dims, tech))(ds))
+    f = _BATCH_EVAL_CACHE[key]
+    arr = {k: jnp.asarray(v) for k, v in spec.arrays.items()}
+    return lambda ds: f(ds, arr)
 
 
 def make_sa(spec: SystemSpec, space: DesignSpace,
@@ -261,11 +293,17 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
              sa_fields: Tuple[str, ...] = SA_FIELDS,
              n_init: int = 8, n_iter: int = 24,
              sa: SAConfig = SAConfig(), tech=None,
-             init_design: Optional[Dict] = None) -> SearchResult:
+             init_design: Optional[Dict] = None,
+             archive=None) -> SearchResult:
     """Nested BO(low-dim) x SA(high-dim) search (paper Fig. 6b).
 
     Setting ``bo_fields=()`` degenerates to pure SA over ``sa_fields`` —
     used by the Fig.-8 ablation ladder and the baseline mapping searches.
+
+    ``archive`` (a ``repro.explore.archive.ParetoArchive``) optionally
+    records every SA-refined design with its raw metric vector, so
+    scalarized runs feed the same Pareto cache the exploration service
+    serves fronts from.
     """
     from .constants import DEFAULT_TECH
     tech = tech or DEFAULT_TECH
@@ -277,6 +315,7 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
     X, Y, designs = [], [], []
     history = []
     base = init_design or random_design(jax.random.PRNGKey(int(rng.integers(2**31))), space)
+    metrics_fn = jax.jit(lambda d: evaluate_system(spec, d, tech))
 
     def eval_point(d0, i):
         kd = jax.random.PRNGKey(int(rng.integers(2 ** 31)))
@@ -319,7 +358,19 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
 
     ib = int(np.argmin(Y))
     best = designs[ib]
-    metrics = jax.jit(lambda d: evaluate_system(spec, d, tech))(best)
+    metrics = metrics_fn(best)
+    if archive is not None and designs:
+        # one batched (vmapped) evaluation + insert for every SA-refined
+        # design of the run — no per-iteration device round-trips, one
+        # compilation shared across runs with equal padded dims
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *designs)
+        mb = _batch_metrics(spec, tech)(stacked)
+        raw = jnp.stack([jnp.asarray(mb[k], F) for k in METRIC_KEYS],
+                        axis=-1)
+        feas = jax.vmap(
+            lambda d, m: feasibility_penalty(space, d, m))(stacked, mb) \
+            <= 1.0 + 1e-6
+        archive.insert(stacked, raw, mask=feas)
     return SearchResult(design=best, objective=float(Y[ib]),
                         metrics={k: np.asarray(v) for k, v in metrics.items()},
                         history=history)
@@ -327,34 +378,26 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
 
 # ---------------------------------------------------------------------------
 # the paper's two-stage flow (Sec. IV-A): the architecture stage keeps a
-# Pareto set; the integration stage's design-selector picks from it
+# Pareto set; the integration stage's design-selector picks from it.
+# The dominance convention lives in ONE place — repro.explore.archive —
+# and is re-exported here for the engine and its tests.
 # ---------------------------------------------------------------------------
-def pareto_front(points):
-    """Indices of the Pareto-optimal rows of an (n, k) objective array
-    (all objectives minimized)."""
-    pts = np.asarray(points, np.float64)
-    keep = []
-    for i in range(len(pts)):
-        dominated = False
-        for j in range(len(pts)):
-            if j != i and np.all(pts[j] <= pts[i]) \
-                    and np.any(pts[j] < pts[i]):
-                dominated = True
-                break
-        if not dominated:
-            keep.append(i)
-    return keep
+from ..explore.archive import pareto_front  # noqa: E402  (canonical impl)
 
 
 def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
                        n_candidates: int = 3,
                        sa: SAConfig = SAConfig(steps=250, chains=4),
-                       tech=None) -> SearchResult:
+                       tech=None, archive=None) -> SearchResult:
     """Stage 1 (architecture): search arch fields under several objective
     scalarizations, keep the Pareto-optimal candidates over
     (latency, energy, area).  Stage 2 (integration): for each kept
     candidate, open the integration fields (packaging/network/placement)
-    and optimize EDP; the best pair wins — the selector made explicit."""
+    and optimize EDP; the best pair wins — the selector made explicit.
+
+    Both stages run through the same evaluation/objective path as the
+    ``repro.explore`` front explorer (``log_metric_stack`` + penalty), and
+    an optional ``archive`` records every refined candidate."""
     from .constants import DEFAULT_TECH
     tech = tech or DEFAULT_TECH
     keys = jax.random.split(key, 8)
@@ -366,7 +409,7 @@ def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
         r = optimize(spec, space, keys[i], weights=w,
                      bo_fields=("shape", "spatial"),
                      sa_fields=("order", "tiling", "pipe"),
-                     n_init=4, n_iter=6, sa=sa, tech=tech)
+                     n_init=4, n_iter=6, sa=sa, tech=tech, archive=archive)
         cands.append(r.design)
         m = r.metrics
         objs.append([float(m["latency_ns"]), float(m["energy_pj"]),
@@ -379,7 +422,7 @@ def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
                      bo_fields=("packaging", "family"),
                      sa_fields=("placement",),
                      n_init=2, n_iter=4, sa=sa, tech=tech,
-                     init_design=cands[ci])
+                     init_design=cands[ci], archive=archive)
         if best is None or r.objective < best.objective:
             best = r
     best.history.append(("pareto_kept", len(keep)))

@@ -1,0 +1,45 @@
+"""``repro.explore`` — multi-objective Pareto-front exploration service.
+
+Three layers (see README "Exploration service"):
+
+* ``archive``  — canonical dominance math + fixed-capacity jit-compatible
+  Pareto archive with an on-disk cache keyed by (SystemSpec, DesignSpace).
+* ``nsga``     — NSGA-II-style evolutionary front explorer: one
+  ``lax.scan`` over vmapped populations, reusing the core encoding's
+  ``mutate``/``random_design`` moves and the shared evaluation path.
+* ``service``  — the query API: ``explore(graph, objectives, budget)``,
+  batching concurrent same-spec queries into one vmapped run and serving
+  warm queries straight from the archive cache.
+
+``archive`` is imported eagerly (it is dependency-free and is the canonical
+home of ``pareto_front``, which ``repro.core.optimizer`` re-exports);
+``nsga``/``service`` load lazily so importing ``repro.core`` never cycles
+back through ``repro.explore``.
+"""
+
+import importlib
+
+from .archive import (BIG, ParetoArchive, crowding_distance,  # noqa: F401
+                      dominance_counts, dominates, hypervolume_2d,
+                      pareto_front, spec_space_key)
+
+_LAZY = {
+    "NSGAConfig": ".nsga", "make_nsga": ".nsga",
+    "ExplorationService": ".service", "ExploreQuery": ".service",
+    "ExploreResult": ".service", "default_service": ".service",
+    "explore": ".service",
+    "nsga": ".nsga", "service": ".service",
+}
+
+__all__ = ["ParetoArchive", "pareto_front", "dominates", "dominance_counts",
+           "crowding_distance", "hypervolume_2d", "spec_space_key",
+           *sorted(k for k in _LAZY if k not in ("nsga", "service"))]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        mod = importlib.import_module(_LAZY[name], __name__)
+        if name in ("nsga", "service"):
+            return mod
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

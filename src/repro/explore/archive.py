@@ -1,0 +1,262 @@
+"""Pareto archive: the canonical dominance math + a fixed-capacity,
+jit-compatible nondominated archive with a persistent on-disk cache.
+
+This module is deliberately standalone (jax/numpy only, no ``repro.core``
+imports) so both the optimizer (``repro.core.optimizer``) and the benchmark
+suite can use one dominance convention without import cycles:
+
+    a dominates b  <=>  all(a <= b) and any(a < b)      (all minimized)
+
+Layers:
+
+* ``pareto_front`` / ``dominance_counts`` / ``crowding_distance`` — the
+  vectorized dominance primitives (vmapped O(n^2) comparisons; each
+  insertion is a single fused comparison against the whole archive).
+* ``ParetoArchive`` — fixed-capacity archive over stacked design pytrees
+  plus an (n, k) objective matrix.  Insertion concatenates the batch,
+  recomputes the nondominated mask and prunes to capacity by crowding
+  distance (boundary points carry infinite crowding, so extremes survive).
+* ``spec_space_key`` / ``save`` / ``load`` — persistence keyed by a
+  canonical hash of the (SystemSpec, DesignSpace) pair, so a re-run of the
+  same exploration problem warm-starts from disk instead of recomputing.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F = jnp.float32
+BIG = 1e30         # sentinel objective for invalid / non-finite rows
+
+
+# ---------------------------------------------------------------------------
+# dominance primitives (host + jit variants share one convention)
+# ---------------------------------------------------------------------------
+def pareto_front(points) -> List[int]:
+    """Indices of the Pareto-optimal rows of an (n, k) objective array
+    (all objectives minimized).  Duplicate points are all kept — neither
+    strictly dominates the other.  This is THE canonical implementation;
+    ``repro.core.optimizer.pareto_front`` and ``benchmarks.bench_pareto``
+    both delegate here."""
+    pts = np.asarray(points, np.float64)
+    if pts.ndim == 1:
+        pts = pts[:, None]
+    n = len(pts)
+    if n == 0:
+        return []
+    le = np.all(pts[:, None, :] <= pts[None, :, :], axis=-1)   # le[i,j]: i<=j
+    lt = np.any(pts[:, None, :] < pts[None, :, :], axis=-1)
+    dominated = np.any(le & lt, axis=0)                        # any i dom j
+    return [int(i) for i in np.flatnonzero(~dominated)]
+
+
+def dominates(a, b):
+    """True iff point ``a`` dominates ``b`` (jnp, all minimized)."""
+    return jnp.all(a <= b) & jnp.any(a < b)
+
+
+def dominance_counts(objs, valid):
+    """(n,) number of *valid* points dominating each row of ``objs`` (n, k).
+    Zero => nondominated.  One fused (n, n, k) comparison — the vmapped
+    'O(1) scans' insertion primitive."""
+    le = jnp.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
+    lt = jnp.any(objs[:, None, :] < objs[None, :, :], axis=-1)
+    dom = le & lt & valid[:, None]
+    return jnp.sum(dom, axis=0)
+
+
+def crowding_distance(objs, valid):
+    """NSGA-II crowding distance over the ``valid`` subset of ``objs`` (n, k).
+    Boundary points (per-objective min/max among valid rows) get +inf;
+    invalid rows get 0.  jit/vmap-safe (fixed shapes, argsort-based)."""
+    n = objs.shape[0]
+    nv = jnp.sum(valid)
+
+    def per_objective(col):
+        c = jnp.where(valid, col, jnp.inf)         # invalid rows sort last
+        order = jnp.argsort(c)
+        s = c[order]
+        lo = s[0]
+        hi = s[jnp.clip(nv - 1, 0, n - 1)]
+        rng = jnp.maximum(hi - lo, 1e-12)
+        prev = jnp.concatenate([s[:1], s[:-1]])
+        nxt = jnp.concatenate([s[1:], s[-1:]])
+        i = jnp.arange(n)
+        gap = (nxt - prev) / rng
+        gap = jnp.where((i == 0) | (i == nv - 1), jnp.inf, gap)
+        gap = jnp.where(i < nv, gap, 0.0)
+        return jnp.zeros(n, F).at[order].set(gap.astype(F))
+
+    return jnp.sum(jax.vmap(per_objective, in_axes=1, out_axes=1)(
+        objs.astype(F)), axis=1)
+
+
+def hypervolume_2d(points, ref) -> float:
+    """Exact 2-D hypervolume (area dominated w.r.t. ``ref``, both objectives
+    minimized).  Non-finite points and points not dominating ``ref`` are
+    ignored; dominated points contribute nothing."""
+    pts = np.asarray(points, np.float64).reshape(-1, 2)
+    ref = np.asarray(ref, np.float64)
+    ok = np.all(np.isfinite(pts), axis=1) & np.all(pts < ref[None, :], axis=1)
+    pts = pts[ok]
+    if len(pts) == 0:
+        return 0.0
+    pts = pts[np.argsort(pts[:, 0], kind="stable")]
+    hv, ymin = 0.0, ref[1]
+    for x, y in pts:
+        if y < ymin:
+            hv += (ref[0] - x) * (ymin - y)
+            ymin = y
+    return float(hv)
+
+
+# ---------------------------------------------------------------------------
+# jit-compatible archive update
+# ---------------------------------------------------------------------------
+def _sanitize(objs):
+    return jnp.where(jnp.isfinite(objs), objs.astype(F), F(BIG))
+
+
+@jax.jit
+def _archive_update(objs, valid, designs, new_objs, new_valid, new_designs):
+    """Merge a batch into the archive state and prune to capacity.
+
+    All shapes static (capacity from ``objs.shape[0]``, batch from
+    ``new_objs.shape[0]``); one call = one vmapped dominance pass over
+    archive+batch, so insertion cost is independent of insertion history."""
+    cap = objs.shape[0]
+    a_objs = jnp.concatenate([objs, _sanitize(new_objs)], axis=0)
+    a_valid = jnp.concatenate([valid, new_valid], axis=0)
+    a_valid = a_valid & jnp.all(a_objs < BIG, axis=-1)
+    a_designs = jax.tree.map(
+        lambda x, y: jnp.concatenate([x, y], axis=0), designs, new_designs)
+
+    nd = dominance_counts(a_objs, a_valid)
+    front = (nd == 0) & a_valid
+    crowd = crowding_distance(a_objs, front)
+    # ranking (ascending): nondominated by descending crowding (boundary
+    # points carry inf crowding => kept first), then dominated/invalid rows.
+    keyv = jnp.where(front, -jnp.minimum(crowd, F(1e9)),
+                     F(BIG) + nd.astype(F))
+    order = jnp.argsort(keyv)[:cap]
+    return (a_objs[order], front[order],
+            jax.tree.map(lambda x: x[order], a_designs))
+
+
+class ParetoArchive:
+    """Fixed-capacity nondominated archive over stacked design pytrees.
+
+    ``template`` is one design point (a dict of arrays) fixing the leaf
+    shapes/dtypes; objectives are an (n, ``n_obj``) matrix, all minimized.
+    After every ``insert`` the archive contains only mutually nondominated
+    points (capacity permitting — overflow is pruned by crowding distance,
+    which always preserves per-objective boundary points)."""
+
+    def __init__(self, capacity: int, template: Dict, n_obj: int = 4,
+                 obj_keys: Optional[Sequence[str]] = None):
+        self.capacity = int(capacity)
+        self.n_obj = int(n_obj)
+        self.obj_keys = tuple(obj_keys) if obj_keys else None
+        self.objs = np.full((capacity, n_obj), BIG, np.float32)
+        self.valid = np.zeros(capacity, bool)
+        self.designs = {
+            k: np.zeros((capacity,) + np.asarray(v).shape,
+                        np.asarray(v).dtype)
+            for k, v in template.items()}
+        self.n_evals = 0            # total evaluations recorded against this
+        #                             archive (cache-freshness metadata)
+        self.searched = ()          # objective names search effort was ever
+        #                             spent on (cache-coverage metadata)
+
+    def __len__(self) -> int:
+        return int(self.valid.sum())
+
+    def insert(self, designs: Dict, objs, mask=None, count_evals=True):
+        """Insert a stacked batch: ``designs`` leaves (m, ...), ``objs``
+        (m, n_obj).  Non-finite objective rows are dropped."""
+        objs = jnp.asarray(objs, F).reshape(-1, self.n_obj)
+        m = objs.shape[0]
+        new_valid = (jnp.ones(m, bool) if mask is None
+                     else jnp.asarray(mask, bool))
+        new_designs = {k: jnp.asarray(v).reshape((m,) + self.designs[k].shape[1:])
+                       for k, v in designs.items()}
+        o, v, d = _archive_update(
+            jnp.asarray(self.objs), jnp.asarray(self.valid),
+            {k: jnp.asarray(v) for k, v in self.designs.items()},
+            objs, new_valid, new_designs)
+        self.objs = np.asarray(o)
+        self.valid = np.asarray(v)
+        self.designs = {k: np.asarray(x) for k, x in d.items()}
+        if count_evals:
+            self.n_evals += int(m)
+        return self
+
+    def front(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """(stacked designs of the valid rows, their (n, n_obj) objectives)."""
+        sel = np.flatnonzero(self.valid)
+        return ({k: v[sel] for k, v in self.designs.items()},
+                self.objs[sel].astype(np.float64))
+
+    # ---- persistence -------------------------------------------------------
+    def save(self, path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        meta = dict(capacity=self.capacity, n_obj=self.n_obj,
+                    n_evals=self.n_evals, searched=list(self.searched),
+                    obj_keys=list(self.obj_keys or ()))
+        np.savez_compressed(
+            path, __meta=np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8),
+            objs=self.objs, valid=self.valid,
+            **{f"d_{k}": v for k, v in self.designs.items()})
+        return path
+
+    @classmethod
+    def load(cls, path) -> "ParetoArchive":
+        with np.load(Path(path)) as z:
+            meta = json.loads(bytes(z["__meta"]).decode())
+            designs = {k[2:]: z[k] for k in z.files if k.startswith("d_")}
+            template = {k: v[0] for k, v in designs.items()}
+            arc = cls(meta["capacity"], template, n_obj=meta["n_obj"],
+                      obj_keys=meta["obj_keys"] or None)
+            arc.objs = z["objs"].copy()
+            arc.valid = z["valid"].copy()
+            arc.designs = {k: v.copy() for k, v in designs.items()}
+            arc.n_evals = int(meta["n_evals"])
+            arc.searched = tuple(meta.get("searched", ()))
+        return arc
+
+
+# ---------------------------------------------------------------------------
+# canonical (SystemSpec, DesignSpace) hashing for the on-disk cache
+# ---------------------------------------------------------------------------
+def spec_space_key(spec, space, extra=None) -> str:
+    """Stable content hash of an exploration problem: the padded workload
+    arrays plus every static ``DesignSpace`` bound.  Equal workload graphs
+    explored under equal bounds share one archive file, whatever Python
+    objects they were built from.  ``extra`` folds any further
+    cache-identity (e.g. the evaluator's ``TechConstants``, whose ``repr``
+    is stable for a frozen dataclass) into the key.  Duck-typed so this
+    module stays free of ``repro.core`` imports."""
+    h = hashlib.sha256()
+    if extra is not None:
+        h.update(repr(extra).encode())
+    h.update(repr((int(spec.W), int(spec.CH), int(spec.E))).encode())
+    for k in sorted(spec.arrays):
+        a = np.asarray(spec.arrays[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(a.tobytes())
+    h.update(repr((tuple(space.max_shape), int(space.max_logB),
+                   int(space.max_total_pes), int(space.fixed_packaging),
+                   int(space.fixed_family),
+                   bool(space.allow_pipeline))).encode())
+    return h.hexdigest()[:20]

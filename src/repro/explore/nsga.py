@@ -1,0 +1,184 @@
+"""NSGA-II-style evolutionary front explorer (Gemini-style co-exploration).
+
+Where ``repro.core.optimizer`` scalarizes the four objectives into one
+number, this engine keeps the whole population nondominated-ranked and
+returns a *front*.  The entire evolution is a single jitted ``lax.scan``
+over vmapped populations:
+
+    generation = variate (field crossover + ``encoding.mutate`` moves)
+               -> evaluate (vmapped ``evaluate_arrays``)
+               -> environmental selection over parents+children
+                  (dominance counts, crowding-distance tie-break)
+
+Evaluation and objectives are the same path the scalarized engines use
+(``log_metric_stack`` + ``feasibility_penalty``), so a design judged good
+here is good there and vice versa.  Compiled runners are cached on the
+padded workload dims exactly like ``make_sa`` — every graph with equal
+(W, CH, E) shares one compilation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.encoding import (ALL_FIELDS, DesignSpace, feasibility_penalty,
+                             mutate, random_design)
+from ..core.evaluate import SystemSpec, evaluate_arrays
+from ..core.optimizer import METRIC_KEYS, log_metric_stack, metric_stack
+from .archive import BIG, crowding_distance, dominance_counts
+
+F = jnp.float32
+
+# design fields, in a fixed order, for the field-level crossover
+_DESIGN_KEYS = ("shape", "spatial", "order", "tiling", "pipe", "logB",
+                "packaging", "family", "placement")
+
+
+@dataclasses.dataclass(frozen=True)
+class NSGAConfig:
+    pop: int = 64                 # population size (vmapped width)
+    generations: int = 32         # scan length; evals = pop * generations
+    fields: Tuple[str, ...] = ALL_FIELDS
+    crossover_rate: float = 0.35  # per-field probability of taking the mate
+    mutations: int = 2            # chained encoding.mutate moves per child
+    immigrants: float = 0.125     # fraction of children replaced by fresh
+    #                               random designs (keeps the front spread)
+
+
+# compiled runners keyed like the SA cache: padded dims + static config
+_NSGA_CACHE: dict = {}
+
+
+def make_nsga(spec: SystemSpec, space: DesignSpace,
+              objectives: Tuple[str, ...] = METRIC_KEYS,
+              cfg: NSGAConfig = NSGAConfig(), tech=None):
+    """Build a jitted front explorer.
+
+    Returns ``run(key, pop0, arrays=None) ->
+    (pop, raw, sel, ev_designs, ev_raw, ev_feas)`` where ``pop0`` is a
+    stacked design pytree of width ``cfg.pop``; ``raw`` is the (pop, 4)
+    matrix of raw metrics in ``METRIC_KEYS`` order and ``sel`` the
+    (pop, n_obj) penalized log-objectives selection ranked on.
+    ``ev_designs`` / ``ev_raw`` / ``ev_feas`` are EVERY evaluated design
+    of the run, stacked (generations, pop, ...) — the archive fodder:
+    nothing the explorer paid for is thrown away.  ``ev_feas`` marks
+    designs with no feasibility penalty; infeasible points may stay in
+    the evolving population (the penalty steers them out) but must not be
+    archived or served.  The population is elitist (nondominated parents
+    survive unless crowd-pruned), so ``pop`` carries the running front;
+    total evaluations = ``cfg.pop * cfg.generations``.
+    """
+    from ..core.constants import DEFAULT_TECH
+    tech = tech or DEFAULT_TECH
+    dims = (spec.W, spec.CH, spec.E)
+    idx = tuple(METRIC_KEYS.index(o) for o in objectives)
+    if not idx:
+        raise ValueError("objectives must name at least one metric")
+
+    cache_key = (dims, idx, cfg, tech, space.max_shape, space.max_logB,
+                 space.max_total_pes, space.fixed_packaging,
+                 space.fixed_family, space.allow_pipeline)
+    if cache_key not in _NSGA_CACHE:
+        n_imm = int(round(cfg.pop * cfg.immigrants))
+        # immigrants are drawn OUTSIDE the scanned/jitted evolution (as a
+        # scan input) — random_design's permutation sorts are expensive to
+        # compile and belong in one small vmapped kernel, not in the body
+        imm_fn = jax.jit(jax.vmap(jax.vmap(
+            lambda k: random_design(k, space)))) if n_imm else None
+        _NSGA_CACHE[cache_key] = (
+            jax.jit(_build_run(space, dims, idx, cfg, tech)), imm_fn, n_imm)
+    jitted, imm_fn, n_imm = _NSGA_CACHE[cache_key]
+
+    def runner(key, pop0, arrays=None):
+        arr = {k: jnp.asarray(v) for k, v in (arrays or spec.arrays).items()}
+        k_run, k_imm = jax.random.split(jnp.asarray(key))
+        imm = None
+        if n_imm:
+            kk = jax.random.split(k_imm, cfg.generations * n_imm)
+            imm = imm_fn(kk.reshape(cfg.generations, n_imm, *kk.shape[1:]))
+        return jitted(k_run, pop0, arr, imm)
+
+    return runner
+
+
+def _build_run(space, dims, idx, cfg, tech):
+    N = cfg.pop
+    obj_idx = jnp.asarray(idx, jnp.int32)
+
+    def eval_one(d, arr):
+        m = evaluate_arrays(arr, d, dims, tech)
+        raw = metric_stack(m)
+        p = feasibility_penalty(space, d, m)
+        sel = log_metric_stack(m)[obj_idx] + 8.0 * jnp.log(p)
+        return raw, sel, p <= 1.0 + 1e-6       # feasible <=> no penalty
+
+    def eval_pop(pop, arr):
+        return jax.vmap(lambda d: eval_one(d, arr))(pop)
+
+    def crossover(key, a, b):
+        ks = jax.random.split(key, len(_DESIGN_KEYS))
+        out = {}
+        for i, f in enumerate(_DESIGN_KEYS):
+            take = jax.random.uniform(ks[i]) < cfg.crossover_rate
+            out[f] = jnp.where(take, b[f], a[f])
+        return out
+
+    n_imm = int(round(N * cfg.immigrants))
+
+    def step(arr, carry, k, imm_g):
+        pop, raw, sel = carry
+        k_mate, k_cx, k_mut = jax.random.split(k, 3)
+        nl = jnp.sum(arr["loopmask"], axis=1).astype(jnp.int32)
+
+        # --- variation: whole-field crossover with a random mate, then a
+        # few chained single-field mutate moves (the SA neighborhood)
+        partners = jax.random.randint(k_mate, (N,), 0, N)
+        mates = jax.tree.map(lambda x: x[partners], pop)
+        children = jax.vmap(crossover)(jax.random.split(k_cx, N), pop, mates)
+        for r in range(cfg.mutations):
+            kr = jax.random.split(jax.random.fold_in(k_mut, r), N)
+            children = jax.vmap(
+                lambda kk, d: mutate(kk, d, space, cfg.fields,
+                                     nl=nl, bounds=arr["bounds"]))(
+                kr, children)
+        if n_imm:
+            # random immigrants fight convergence collapse of the front
+            children = jax.tree.map(
+                lambda c, f: c.at[:n_imm].set(f), children, imm_g)
+        craw, csel, cfeas = eval_pop(children, arr)
+
+        # --- environmental selection over the 2N parent+child pool
+        a_pop = jax.tree.map(lambda x, y: jnp.concatenate([x, y]),
+                             pop, children)
+        a_raw = jnp.concatenate([raw, craw])
+        a_sel = jnp.concatenate([sel, csel])
+        finite = jnp.all(jnp.isfinite(a_sel), axis=-1)
+        a_sane = jnp.where(jnp.isfinite(a_sel), a_sel, F(BIG))
+        nd = dominance_counts(a_sane, finite)
+        crowd = crowding_distance(a_sane, finite)
+        # ascending rank: fewer dominators first, crowding breaks ties;
+        # non-finite rows sort last
+        keyv = jnp.where(finite,
+                         nd.astype(F) * F(1e6) - jnp.minimum(crowd, F(1e5)),
+                         F(BIG))
+        order = jnp.argsort(keyv)[:N]
+        return (jax.tree.map(lambda x: x[order], a_pop),
+                a_raw[order], a_sel[order]), (children, craw, cfeas)
+
+    def run(key, pop0, arr, imm):
+        # the initial population carries +inf objectives: its (variated)
+        # offspring are evaluated in generation 0 and unevaluated parents
+        # rank last.  Keeping ALL evaluation inside the scan body means the
+        # (large) evaluate_arrays graph is compiled exactly once.
+        raw0 = jnp.full((N, len(METRIC_KEYS)), jnp.inf, F)
+        sel0 = jnp.full((N, len(idx)), jnp.inf, F)
+        keys = jax.random.split(key, cfg.generations)
+        (pop, raw, sel), (ev_designs, ev_raw, ev_feas) = jax.lax.scan(
+            lambda c, xs: step(arr, c, *xs), (pop0, raw0, sel0), (keys, imm))
+        return pop, raw, sel, ev_designs, ev_raw, ev_feas
+
+    return run

@@ -1,0 +1,292 @@
+"""The exploration *service*: ``explore(graph, objectives, budget)``.
+
+Turns the one-shot DSE scripts into a reusable, cache-accelerated query
+API.  Three tricks make repeated / concurrent exploration cheap:
+
+* **Query batching** — ``explore_batch`` groups concurrent queries whose
+  (SystemSpec, DesignSpace) hash matches into ONE NSGA-II run over the
+  union of their objectives and the max of their budgets; every query then
+  projects its own front out of the shared archive.  One vmapped
+  evaluation serves the whole group.
+* **Archive cache** — before spending compute, the service consults the
+  per-problem ``ParetoArchive`` (in memory, then on disk under
+  ``cache_dir``).  A query whose budget is already covered by recorded
+  evaluations is answered straight from the archive: no evaluator, no jit.
+* **Warm starts** — when compute IS needed, the initial population is
+  seeded from the cached front (topped up with ``random_design`` samples),
+  so follow-up queries with bigger budgets refine rather than restart.
+
+The archive rows are always the full 4-metric vector (``METRIC_KEYS``), so
+one cache serves latency-energy, latency-cost, ... projections alike.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import warnings
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.constants import DEFAULT_TECH
+from ..core.encoding import DesignSpace, random_design
+from ..core.evaluate import SystemSpec
+from ..core.optimizer import METRIC_KEYS
+from ..core.workload import WorkloadGraph
+from .archive import ParetoArchive, pareto_front, spec_space_key
+from .nsga import NSGAConfig, make_nsga
+
+DEFAULT_CACHE_DIR = "artifacts/explore_cache"
+DEFAULT_OBJECTIVES = ("latency_ns", "cost_usd")
+
+
+@dataclasses.dataclass
+class ExploreQuery:
+    """One front request.  ``space_kwargs`` are forwarded to ``DesignSpace``
+    (e.g. ``max_shape``, ``max_total_pes``) and participate in the cache
+    key, so differently-bounded explorations never share an archive."""
+    graph: WorkloadGraph
+    objectives: Tuple[str, ...] = DEFAULT_OBJECTIVES
+    budget: int = 2048              # total design evaluations this query
+    #                                 is willing to pay for (cold)
+    ch_max: int = 4
+    space_kwargs: Optional[Dict] = None
+
+    def __post_init__(self):
+        self.objectives = tuple(self.objectives)
+        if not self.objectives:
+            raise ValueError("at least one objective required")
+        bad = [o for o in self.objectives if o not in METRIC_KEYS]
+        if bad:
+            raise ValueError(f"unknown objectives {bad}; pick from "
+                             f"{METRIC_KEYS}")
+
+
+@dataclasses.dataclass
+class ExploreResult:
+    objectives: Tuple[str, ...]
+    front_objs: np.ndarray          # (n, len(objectives)) nondominated rows
+    front_metrics: np.ndarray       # (n, 4) full METRIC_KEYS rows
+    front_designs: List[Dict[str, np.ndarray]]
+    from_cache: bool                # True => served without any evaluation
+    n_evals_run: int                # evaluations spent by the shared run
+    #                                 that answered this query's GROUP (the
+    #                                 cost is reported on every result of
+    #                                 the group, booked once in the
+    #                                 archive); 0 when served from cache
+    elapsed_s: float                # wall time of the group's answer
+    cache_key: str
+
+
+class ExplorationService:
+    """Holds per-problem archives (memory + disk) and a shared NSGA engine.
+
+    ``cache_dir`` defaults to ``$REPRO_EXPLORE_CACHE`` or
+    ``artifacts/explore_cache``; archives live at ``<cache_dir>/<key>.npz``.
+    """
+
+    def __init__(self, cache_dir=None, capacity: int = 256,
+                 nsga: NSGAConfig = NSGAConfig(), tech=None):
+        # nsga.generations is not used on the query path — each query's
+        # budget sets the scan length (see _refine); the config's pop /
+        # fields / crossover / mutation / immigrant knobs apply as given.
+        self.cache_dir = Path(
+            cache_dir or os.environ.get("REPRO_EXPLORE_CACHE",
+                                        DEFAULT_CACHE_DIR))
+        self.capacity = int(capacity)
+        self.nsga = nsga
+        self.tech = tech
+        self._archives: Dict[str, ParetoArchive] = {}
+
+    # ---- cache plumbing ----------------------------------------------------
+    def _path(self, key: str) -> Path:
+        return self.cache_dir / f"{key}.npz"
+
+    def problem_key(self, spec: SystemSpec, space: DesignSpace) -> str:
+        """Archive identity for one exploration problem under THIS
+        service's tech constants — metrics evaluated under a different
+        ``TechConstants`` must never be served as this problem's front."""
+        return spec_space_key(spec, space, extra=self.tech or DEFAULT_TECH)
+
+    def archive_for(self, spec: SystemSpec, space: DesignSpace,
+                    key: Optional[str] = None) -> ParetoArchive:
+        """The (possibly empty) archive for one exploration problem —
+        memory first, then disk, else freshly created."""
+        key = key or self.problem_key(spec, space)
+        if key in self._archives:
+            return self._archives[key]
+        arc = None
+        p = self._path(key)
+        if p.exists():
+            try:
+                arc = ParetoArchive.load(p)
+            except Exception as e:          # a cache is disposable: never
+                #                             let a damaged file kill a query
+                warnings.warn(f"discarding unreadable explore cache {p}: {e}")
+                p.unlink(missing_ok=True)
+        if arc is None:
+            template = jax.tree.map(
+                np.asarray, random_design(jax.random.PRNGKey(0), space))
+            arc = ParetoArchive(self.capacity, template,
+                                n_obj=len(METRIC_KEYS),
+                                obj_keys=METRIC_KEYS)
+        self._archives[key] = arc
+        return arc
+
+    def save(self, key: str):
+        if key in self._archives:
+            self._archives[key].save(self._path(key))
+
+    # ---- the query API -----------------------------------------------------
+    def explore(self, graph: WorkloadGraph,
+                objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+                budget: int = 2048, ch_max: int = 4,
+                space_kwargs: Optional[Dict] = None,
+                key=None) -> ExploreResult:
+        q = ExploreQuery(graph, tuple(objectives), budget, ch_max,
+                         space_kwargs)
+        return self.explore_batch([q], key=key)[0]
+
+    def explore_batch(self, queries: Sequence[ExploreQuery],
+                      key=None) -> List[ExploreResult]:
+        """Answer a batch of queries, merging same-problem queries into one
+        vmapped NSGA run (union objectives, max budget)."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        # group by canonical problem hash
+        groups: Dict[str, Dict] = {}
+        order: List[Tuple[str, int]] = []      # (cache_key, slot in group)
+        for q in queries:
+            spec = SystemSpec.build(q.graph, ch_max=q.ch_max)
+            space = DesignSpace(spec, **(q.space_kwargs or {}))
+            ck = self.problem_key(spec, space)
+            g = groups.setdefault(ck, dict(spec=spec, space=space,
+                                           queries=[]))
+            order.append((ck, len(g["queries"])))
+            g["queries"].append(q)
+
+        group_results: Dict[str, List[ExploreResult]] = {}
+        for i, (ck, g) in enumerate(groups.items()):
+            group_results[ck] = self._run_group(
+                ck, g["spec"], g["space"], g["queries"],
+                jax.random.fold_in(key, i))
+        return [group_results[ck][slot] for ck, slot in order]
+
+    # ---- one problem group -------------------------------------------------
+    def _run_group(self, ck: str, spec: SystemSpec, space: DesignSpace,
+                   queries: List[ExploreQuery], key) -> List[ExploreResult]:
+        t0 = time.perf_counter()
+        arc = self.archive_for(spec, space, key=ck)
+        budget = max(q.budget for q in queries)
+        union = tuple(k for k in METRIC_KEYS
+                      if any(k in q.objectives for q in queries))
+        # warm only when the recorded evaluations cover BOTH the budget and
+        # every queried objective — points found while optimizing other
+        # axes are no substitute for search effort on these ones
+        warm = (len(arc) > 0 and arc.n_evals >= budget
+                and all(o in arc.searched for o in union))
+
+        n_run = 0
+        if not warm:
+            n_run = self._refine(arc, spec, space, union, budget, key)
+            arc.searched = tuple(k for k in METRIC_KEYS
+                                 if k in arc.searched or k in union)
+            self.save(ck)
+
+        elapsed = time.perf_counter() - t0
+        designs, metrics = arc.front()
+        results = []
+        for q in queries:
+            idx = [METRIC_KEYS.index(o) for o in q.objectives]
+            cols = metrics[:, idx]
+            keep = pareto_front(cols) if len(cols) else []
+            results.append(ExploreResult(
+                objectives=q.objectives,
+                front_objs=cols[keep],
+                front_metrics=metrics[keep],
+                front_designs=[{k: v[i] for k, v in designs.items()}
+                               for i in keep],
+                from_cache=warm, n_evals_run=n_run,
+                elapsed_s=elapsed, cache_key=ck))
+        return results
+
+    def _refine(self, arc: ParetoArchive, spec: SystemSpec,
+                space: DesignSpace, objectives: Tuple[str, ...],
+                budget: int, key) -> int:
+        """Spend ~``budget`` evaluations improving the archive: warm-start
+        the population from the cached front, evolve, re-insert.
+
+        The query budget — not ``self.nsga.generations`` — fixes the scan
+        length here; both the population (for sub-``nsga.pop`` budgets) and
+        the generation count are quantized to powers of two, so a
+        long-lived service compiles O(log^2(max_budget)) scan variants
+        instead of one per distinct budget; the service's ``nsga`` config
+        supplies the population ceiling and variation knobs.
+        """
+        pop = self.nsga.pop
+        if budget < pop:        # pow2 >= budget, floored at 8
+            pop = min(pop, max(8, 1 << max(0, budget - 1).bit_length()))
+        generations = -(-budget // pop)                 # ceil(budget / pop)
+        generations = 1 << max(0, generations - 1).bit_length() \
+            if generations > 1 else 1
+        cfg = dataclasses.replace(self.nsga, pop=pop,
+                                  generations=generations)
+        k_init, k_run = jax.random.split(key)
+
+        pop0 = jax.vmap(lambda k: random_design(k, space))(
+            jax.random.split(k_init, pop))
+        fr_designs, _ = arc.front()
+        n_warm = min(len(arc), pop)
+        if n_warm:
+            pop0 = {k: jnp.concatenate(
+                [jnp.asarray(fr_designs[k][:n_warm]),
+                 jnp.asarray(v)[n_warm:]])
+                for k, v in pop0.items()}
+
+        run = make_nsga(spec, space, objectives, cfg, tech=self.tech)
+        _pop, _raw, _sel, ev_designs, ev_raw, ev_feas = run(k_run, pop0)
+        # archive EVERY evaluation of the run, not just the survivors —
+        # masked to feasible designs so the archive (and every front served
+        # from it) never carries a constraint-violating point
+        arc.insert(
+            jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                         ev_designs),
+            ev_raw.reshape(-1, ev_raw.shape[-1]),
+            mask=ev_feas.reshape(-1), count_evals=False)
+        n_run = pop * generations      # one vmapped evaluation per scan step
+        arc.n_evals += n_run
+        return n_run
+
+
+# ---------------------------------------------------------------------------
+# module-level convenience: a default singleton service
+# ---------------------------------------------------------------------------
+_DEFAULT: Optional[ExplorationService] = None
+
+
+def default_service(**kwargs) -> ExplorationService:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = ExplorationService(**kwargs)
+    elif kwargs:
+        raise RuntimeError(
+            "the default exploration service is already initialized; "
+            "construct ExplorationService(...) directly for a custom "
+            "configuration")
+    return _DEFAULT
+
+
+def explore(graph: WorkloadGraph,
+            objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+            budget: int = 2048, ch_max: int = 4,
+            space_kwargs: Optional[Dict] = None,
+            service: Optional[ExplorationService] = None,
+            key=None) -> ExploreResult:
+    """One-call front query against the process-wide default service."""
+    svc = service or default_service()
+    return svc.explore(graph, objectives, budget, ch_max, space_kwargs,
+                       key=key)

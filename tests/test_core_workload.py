@@ -4,7 +4,10 @@ including element-level validation of the Omega transfer-volume closed form.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.workload import (Edge, WorkloadGraph, contraction, conv2d,
                                  matmul, mttkrp)

@@ -1,0 +1,292 @@
+"""Tests for the ``repro.explore`` subsystem: dominance/archive invariants
+(no dominated point survives insertion, capacity pruning keeps boundary
+points), NSGA-II front correctness against a brute-force dominance sweep,
+and the service's cache round-trip (save -> load -> warm-start yields
+identical fronts)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as C
+from repro.explore.archive import (ParetoArchive, hypervolume_2d,
+                                   pareto_front, spec_space_key)
+from repro.explore.nsga import NSGAConfig, make_nsga
+from repro.explore.service import ExplorationService
+
+
+def _brute_front(pts):
+    """Reference O(n^2) double-loop dominance sweep."""
+    pts = np.asarray(pts, np.float64)
+    keep = []
+    for i in range(len(pts)):
+        dom = any(j != i and np.all(pts[j] <= pts[i])
+                  and np.any(pts[j] < pts[i]) for j in range(len(pts)))
+        if not dom:
+            keep.append(i)
+    return keep
+
+
+TINY_SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))   # <= 2 chiplets =>
+#                      every design satisfies the ch_max=2 node constraint
+
+
+def _tiny_problem(ch_max=2):
+    g = C.presets.bert_mms()["att2"]
+    spec = C.SystemSpec.build(g, ch_max=ch_max)
+    return g, spec, C.DesignSpace(spec, **TINY_SPACE_KW)
+
+
+# ---------------------------------------------------------------------------
+# canonical dominance math
+# ---------------------------------------------------------------------------
+def test_pareto_front_matches_bruteforce():
+    pts = np.random.default_rng(0).random((64, 3))
+    assert sorted(pareto_front(pts)) == sorted(_brute_front(pts))
+
+
+def test_pareto_front_is_the_optimizer_impl():
+    # one canonical implementation: the optimizer re-exports the archive's
+    from repro.core.optimizer import pareto_front as pf_opt
+    assert pf_opt is pareto_front
+    assert sorted(pf_opt([[1, 2], [2, 1], [2, 2], [0.5, 3]])) == [0, 1, 3]
+    assert pf_opt([[1, 1]]) == [0]
+
+
+def test_hypervolume_2d():
+    assert hypervolume_2d([(1, 5)], (10, 10)) == pytest.approx(45.0)
+    # two staircase points: [1,10]x[5,10] + [2,10]x[3,5]
+    assert hypervolume_2d([(1, 5), (2, 3)], (10, 10)) == pytest.approx(61.0)
+    # dominated + non-finite points contribute nothing
+    assert hypervolume_2d([(1, 5), (2, 6), (np.inf, 0)],
+                          (10, 10)) == pytest.approx(45.0)
+    assert hypervolume_2d(np.zeros((0, 2)), (1, 1)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# archive invariants
+# ---------------------------------------------------------------------------
+def _point_archive(capacity, n=0, seed=0):
+    arc = ParetoArchive(capacity, {"tag": np.zeros((), np.int32)}, n_obj=2)
+    if n:
+        pts = np.random.default_rng(seed).random((n, 2))
+        arc.insert({"tag": np.arange(n, dtype=np.int32)}, pts)
+    return arc
+
+
+def test_archive_no_dominated_point_survives():
+    arc = _point_archive(64)
+    rng = np.random.default_rng(1)
+    seen = []
+    for batch in range(4):                       # incremental insertions
+        pts = rng.random((20, 2))
+        seen.append(pts)
+        arc.insert({"tag": np.arange(20, dtype=np.int32)}, pts)
+        _, objs = arc.front()
+        # every archived point is mutually nondominated ...
+        assert len(pareto_front(objs)) == len(objs)
+    # ... and the archive front equals the brute-force front of all inserts
+    allpts = np.concatenate(seen)
+    expect = np.sort(allpts[_brute_front(allpts)], axis=0)
+    np.testing.assert_allclose(np.sort(objs, axis=0), expect, rtol=1e-6)
+    assert arc.n_evals == 80
+
+
+def test_archive_capacity_pruning_keeps_boundary_points():
+    x = np.linspace(0.0, 1.0, 50)
+    pts = np.stack([x, 1.0 - x], axis=1)         # 50 mutually nondominated
+    arc = _point_archive(8)
+    arc.insert({"tag": np.arange(50, dtype=np.int32)}, pts)
+    _, objs = arc.front()
+    assert len(objs) == 8                        # pruned to capacity
+    # crowding pruning must preserve the per-objective extremes
+    assert objs[:, 0].min() == pytest.approx(0.0)
+    assert objs[:, 1].min() == pytest.approx(0.0)
+
+
+def test_archive_drops_nonfinite_rows():
+    arc = _point_archive(8)
+    pts = np.array([[0.5, 0.5], [np.nan, 0.1], [0.1, np.inf]])
+    arc.insert({"tag": np.zeros(3, np.int32)}, pts)
+    _, objs = arc.front()
+    np.testing.assert_allclose(objs, [[0.5, 0.5]])
+
+
+def test_archive_save_load_roundtrip(tmp_path):
+    arc = _point_archive(16, n=30)
+    arc.searched = ("latency_ns", "cost_usd")
+    p = arc.save(tmp_path / "a.npz")
+    back = ParetoArchive.load(p)
+    assert back.searched == ("latency_ns", "cost_usd")
+    np.testing.assert_array_equal(back.objs, arc.objs)
+    np.testing.assert_array_equal(back.valid, arc.valid)
+    np.testing.assert_array_equal(back.designs["tag"], arc.designs["tag"])
+    assert back.n_evals == arc.n_evals == 30
+    assert back.capacity == 16 and back.n_obj == 2
+
+
+def test_spec_space_key_canonical():
+    g1, spec1, space1 = _tiny_problem()
+    g2, spec2, space2 = _tiny_problem()          # equal content, new objects
+    assert spec_space_key(spec1, space1) == spec_space_key(spec2, space2)
+    # any DesignSpace bound change => different archive
+    assert spec_space_key(spec1, C.DesignSpace(spec1, max_logB=2)) \
+        != spec_space_key(spec1, space1)
+    # different ch_max changes the padded dims => different archive
+    _, spec3, space3 = _tiny_problem(ch_max=3)
+    assert spec_space_key(spec3, space3) != spec_space_key(spec1, space1)
+    # extra cache-identity (the service folds its TechConstants in here)
+    assert spec_space_key(spec1, space1, extra="t") \
+        != spec_space_key(spec1, space1)
+
+
+def test_service_cache_is_tech_keyed(tmp_path):
+    from repro.core.constants import DEFAULT_TECH
+    import dataclasses as dc
+    _, spec, space = _tiny_problem()
+    a = ExplorationService(cache_dir=tmp_path)
+    b = ExplorationService(cache_dir=tmp_path, tech=DEFAULT_TECH)
+    # None normalizes to DEFAULT_TECH: same archive
+    assert a.problem_key(spec, space) == b.problem_key(spec, space)
+    other = dc.replace(DEFAULT_TECH,
+                       dram_bw=DEFAULT_TECH.dram_bw * 2)
+    c = ExplorationService(cache_dir=tmp_path, tech=other)
+    # different tech constants must never share an archive
+    assert c.problem_key(spec, space) != a.problem_key(spec, space)
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II explorer
+# ---------------------------------------------------------------------------
+def test_nsga_front_correct_vs_bruteforce_sweep():
+    _, spec, space = _tiny_problem()
+    cfg = NSGAConfig(pop=8, generations=3)
+    run = make_nsga(spec, space, ("latency_ns", "cost_usd"), cfg)
+    pop0 = jax.vmap(lambda k: C.random_design(k, space))(
+        jax.random.split(jax.random.PRNGKey(0), cfg.pop))
+    pop, raw, sel, ev_designs, ev_raw, ev_feas = run(
+        jax.random.PRNGKey(1), pop0)
+
+    raw = np.asarray(raw, np.float64)
+    assert raw.shape == (cfg.pop, 4) and np.all(np.isfinite(raw))
+    assert np.asarray(ev_raw).shape == (cfg.generations, cfg.pop, 4)
+    assert np.asarray(ev_feas).shape == (cfg.generations, cfg.pop)
+    assert np.asarray(ev_feas).dtype == bool
+    # final population's latency-cost front == brute-force dominance sweep
+    cols = raw[:, [0, 2]]
+    assert sorted(pareto_front(cols)) == sorted(_brute_front(cols))
+    # elitism: the front is nonempty and every design evaluable
+    assert len(pareto_front(cols)) >= 1
+    # every returned design stays inside the encoding bounds
+    sh = np.asarray(jax.tree.map(np.asarray, pop)["shape"])
+    assert sh.min() >= 1 and np.all(sh <= np.asarray(space.max_shape))
+
+
+# ---------------------------------------------------------------------------
+# the exploration service: batching + cache
+# ---------------------------------------------------------------------------
+def test_service_cache_roundtrip_and_warm_start(tmp_path):
+    g, spec, space = _tiny_problem()
+    mk = lambda: ExplorationService(cache_dir=tmp_path,
+                                    nsga=NSGAConfig(pop=8, generations=2))
+    svc = mk()
+    r1 = svc.explore(g, ("latency_ns", "cost_usd"), budget=16, ch_max=2,
+                     space_kwargs=TINY_SPACE_KW)
+    assert not r1.from_cache and r1.n_evals_run >= 16
+    assert len(r1.front_objs) >= 1
+    # the front the service returns is nondominated
+    assert len(pareto_front(r1.front_objs)) == len(r1.front_objs)
+
+    # identical query on the warm service: served from the archive
+    r2 = svc.explore(g, ("latency_ns", "cost_usd"), budget=16, ch_max=2,
+                     space_kwargs=TINY_SPACE_KW)
+    assert r2.from_cache and r2.n_evals_run == 0
+    np.testing.assert_allclose(r2.front_objs, r1.front_objs)
+    assert r2.elapsed_s < r1.elapsed_s
+
+    # fresh service, same cache dir: disk round-trip, identical front
+    r3 = mk().explore(g, ("latency_ns", "cost_usd"), budget=16, ch_max=2,
+                     space_kwargs=TINY_SPACE_KW)
+    assert r3.from_cache and r3.cache_key == r1.cache_key
+    np.testing.assert_allclose(r3.front_objs, r1.front_objs)
+
+    # bigger budget invalidates the cache and warm-starts instead
+    r4 = svc.explore(g, ("latency_ns", "cost_usd"), budget=48, ch_max=2,
+                     space_kwargs=TINY_SPACE_KW)
+    assert not r4.from_cache and r4.n_evals_run >= 32
+
+    # objectives never searched for must spend compute, however warm the
+    # archive is on other axes
+    r5 = svc.explore(g, ("energy_pj", "area_mm2"), budget=16, ch_max=2,
+                     space_kwargs=TINY_SPACE_KW)
+    assert not r5.from_cache and r5.n_evals_run >= 16
+
+
+def test_service_batches_same_spec_queries(tmp_path):
+    from repro.explore.service import ExploreQuery
+    g, _, _ = _tiny_problem()
+    svc = ExplorationService(cache_dir=tmp_path,
+                             nsga=NSGAConfig(pop=8, generations=2))
+    qs = [ExploreQuery(g, ("latency_ns", "cost_usd"), budget=16, ch_max=2,
+                       space_kwargs=TINY_SPACE_KW),
+          ExploreQuery(g, ("energy_pj", "area_mm2"), budget=16, ch_max=2,
+                       space_kwargs=TINY_SPACE_KW)]
+    ra, rb = svc.explore_batch(qs)
+    # one shared run answered both ...
+    assert ra.cache_key == rb.cache_key
+    assert not ra.from_cache and not rb.from_cache
+    # ... each projected onto its own objectives, each nondominated
+    for r in (ra, rb):
+        assert r.front_objs.shape[1] == 2
+        assert len(pareto_front(r.front_objs)) == len(r.front_objs)
+    # both served from one archive: total evals booked once
+    assert svc.archive_for(
+        *_tiny_problem()[1:], key=ra.cache_key).n_evals == ra.n_evals_run
+
+
+def test_service_front_contains_only_feasible_designs(tmp_path):
+    """NSGA may keep constraint-violating designs in its gene pool (the
+    penalty steers them out), but none may be archived or served."""
+    g, _, _ = _tiny_problem()
+    kw = dict(TINY_SPACE_KW, max_total_pes=2048)   # binding PE budget
+    svc = ExplorationService(cache_dir=tmp_path,
+                             nsga=NSGAConfig(pop=16, generations=2))
+    r = svc.explore(g, ("latency_ns", "cost_usd"), budget=48, ch_max=2,
+                    space_kwargs=kw)
+    for d in r.front_designs:
+        assert int(np.prod(d["shape"], axis=1).sum()) <= 2048
+    # the archive itself holds no infeasible point either
+    _, spec, _ = _tiny_problem()
+    space = C.DesignSpace(spec, **kw)
+    designs, _objs = svc.archive_for(spec, space).front()
+    for i in range(len(_objs)):
+        assert int(np.prod(designs["shape"][i], axis=1).sum()) <= 2048
+
+
+def test_optimize_records_into_archive():
+    """The scalarized BO x SA engine feeds the same Pareto cache the
+    service serves from: optimize(archive=...) batch-inserts every
+    SA-refined design with its raw metric vector."""
+    from repro.core.optimizer import SAConfig, optimize
+    g, spec, space = _tiny_problem()
+    arc = ParetoArchive(
+        32, jax.tree.map(np.asarray,
+                         C.random_design(jax.random.PRNGKey(0), space)),
+        n_obj=4, obj_keys=C.METRIC_KEYS)
+    r = optimize(spec, space, jax.random.PRNGKey(0), bo_fields=(),
+                 n_init=3, sa=SAConfig(steps=20, chains=2), archive=arc)
+    designs, objs = arc.front()
+    assert len(arc) >= 1 and arc.n_evals == 3
+    assert objs.shape[1] == 4 and np.all(np.isfinite(objs))
+    # archived rows are mutually nondominated designs within bounds
+    assert len(pareto_front(objs)) == len(objs)
+    assert np.asarray(designs["shape"]).min() >= 1
+
+
+def test_service_rejects_unknown_objective():
+    from repro.explore.service import ExploreQuery
+    g, _, _ = _tiny_problem()
+    with pytest.raises(ValueError):
+        ExploreQuery(g, objectives=("latency_ns", "nope"))
