@@ -30,6 +30,19 @@ def main():
     print(f"query answered from {src} in {res.elapsed_s:.2f}s "
           f"[archive {res.cache_key}]")
 
+    if res.trace is not None:       # cold runs carry per-generation telemetry
+        t = res.trace
+        print(f"\nconvergence ({t.generations} generations, "
+              f"plateaued={res.plateaued}, banked={res.n_evals_banked} "
+              f"of the budget):")
+        print(f"  {'gen':>5s} {'evals':>7s} {'front':>6s} "
+              f"{'log-hv':>10s} {'best':>9s} {'feas':>5s}")
+        step = max(1, t.generations // 8)
+        for i in list(range(0, t.generations, step))[-8:]:
+            print(f"  {i:5d} {t.n_evals[i]:7d} {t.front_size[i]:6d} "
+                  f"{t.hypervolume[i, 0]:10.2f} {t.best[i]:9.3f} "
+                  f"{t.feasible_frac[i]:5.2f}")
+
     print(f"\nlatency-cost Pareto front ({len(res.front_objs)} points):")
     print(f"  {'latency':>12s} {'cost':>10s} {'energy':>12s} {'packaging'}")
     order = np.argsort(res.front_objs[:, 0])

@@ -285,6 +285,11 @@ class SearchResult:
     objective: float
     metrics: Dict
     history: list                 # (iteration, best objective) trace
+    trace: Optional["ConvergenceTrace"] = None   # the shared convergence
+    #                               telemetry type (repro.explore.archive):
+    #                               the scalarized loop's running-best
+    #                               objective + cumulative SA evaluations,
+    #                               comparable against ExploreResult.trace
 
 
 def optimize(spec: SystemSpec, space: DesignSpace, key,
@@ -373,16 +378,20 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
         archive.insert(stacked, raw, mask=feas)
     return SearchResult(design=best, objective=float(Y[ib]),
                         metrics={k: np.asarray(v) for k, v in metrics.items()},
-                        history=history)
+                        history=history,
+                        trace=ConvergenceTrace.from_history(
+                            history, evals_per_step=sa.steps * sa.chains))
 
 
 # ---------------------------------------------------------------------------
 # the paper's two-stage flow (Sec. IV-A): the architecture stage keeps a
 # Pareto set; the integration stage's design-selector picks from it.
-# The dominance convention lives in ONE place — repro.explore.archive —
-# and is re-exported here for the engine and its tests.
+# The dominance convention AND the convergence-telemetry type live in ONE
+# place — repro.explore.archive — and are re-exported here for the engine
+# and its tests.
 # ---------------------------------------------------------------------------
-from ..explore.archive import pareto_front  # noqa: E402  (canonical impl)
+from ..explore.archive import (ConvergenceTrace,  # noqa: E402  (canonical)
+                               pareto_front)
 
 
 def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,

@@ -19,12 +19,14 @@ back through ``repro.explore``.
 
 import importlib
 
-from .archive import (BIG, ParetoArchive, crowding_distance,  # noqa: F401
-                      dominance_counts, dominates, hypervolume_2d,
-                      pareto_front, spec_space_key)
+from .archive import (BIG, HV_LOG_REF, ConvergenceTrace,  # noqa: F401
+                      ParetoArchive, crowding_distance, dominance_counts,
+                      dominates, hypervolume_2d, hypervolume_2d_jit,
+                      objective_pairs, pareto_front, spec_space_key)
 
 _LAZY = {
     "NSGAConfig": ".nsga", "make_nsga": ".nsga",
+    "BudgetPolicy": ".service",
     "ExplorationService": ".service", "ExploreQuery": ".service",
     "ExploreResult": ".service", "default_service": ".service",
     "explore": ".service",
@@ -32,7 +34,9 @@ _LAZY = {
 }
 
 __all__ = ["ParetoArchive", "pareto_front", "dominates", "dominance_counts",
-           "crowding_distance", "hypervolume_2d", "spec_space_key",
+           "crowding_distance", "hypervolume_2d", "hypervolume_2d_jit",
+           "objective_pairs", "spec_space_key", "ConvergenceTrace",
+           "HV_LOG_REF",
            *sorted(k for k in _LAZY if k not in ("nsga", "service"))]
 
 

@@ -23,6 +23,7 @@ Layers:
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import json
 from pathlib import Path
@@ -34,6 +35,14 @@ import numpy as np
 
 F = jnp.float32
 BIG = 1e30         # sentinel objective for invalid / non-finite rows
+
+# shared log-space hypervolume reference: all convergence telemetry (the
+# in-scan NSGA trace and the archive-projected plateau checks) measures
+# 2-D hypervolume over clipped log-metrics against (HV_LOG_REF,)*2, so
+# values are directly comparable across generations, scan segments and
+# the host/device implementations.  e^41 ~ 6e17 comfortably exceeds every
+# feasible raw metric; points beyond the reference contribute nothing.
+HV_LOG_REF = 41.0
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +126,144 @@ def hypervolume_2d(points, ref) -> float:
     return float(hv)
 
 
+def hypervolume_2d_jit(points, ref, valid=None):
+    """jit/vmap-safe exact 2-D hypervolume (both objectives minimized).
+
+    Same staircase as ``hypervolume_2d`` but fixed-shape jnp: filtered
+    points (non-finite, not dominating ``ref``, or masked out by
+    ``valid``) are moved onto the reference point where they contribute
+    zero area.  Used by the NSGA scan body to trace per-generation front
+    hypervolume with no host round-trip and no extra evaluations."""
+    pts = jnp.asarray(points, F).reshape(-1, 2)
+    ref = jnp.asarray(ref, F).reshape(2)
+    ok = jnp.all(jnp.isfinite(pts), axis=1) & jnp.all(pts < ref[None, :],
+                                                     axis=1)
+    if valid is not None:
+        ok = ok & jnp.asarray(valid, bool)
+    x = jnp.where(ok, pts[:, 0], ref[0])
+    y = jnp.where(ok, pts[:, 1], ref[1])
+    order = jnp.argsort(x)
+    xs, ys = x[order], y[order]
+    # running staircase minimum BEFORE each point (ref height to start)
+    ymin_prev = jnp.concatenate([ref[1:2], jax.lax.cummin(ys)[:-1]])
+    return jnp.sum((ref[0] - xs) * jnp.maximum(ymin_prev - ys, 0.0))
+
+
+def objective_pairs(n: int) -> Tuple[Tuple[int, int], ...]:
+    """All C(n, 2) index pairs (i < j) — the 2-D hypervolume projections
+    traced for an ``n``-objective exploration.  Empty for n < 2."""
+    return tuple((i, j) for i in range(n) for j in range(i + 1, n))
+
+
+# ---------------------------------------------------------------------------
+# convergence telemetry (shared by repro.explore.nsga / .service and the
+# scalarized repro.core.optimizer loop)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ConvergenceTrace:
+    """Per-generation convergence telemetry of one search run.
+
+    All arrays are indexed by generation (length ``G``).  ``hypervolume``
+    carries one column per objective *pair* (``pairs`` labels them): the
+    running (cumulative-best) 2-D hypervolume of the population's feasible
+    front over clipped log-metrics w.r.t. ``(HV_LOG_REF,)*2`` — monotone
+    non-decreasing by construction, so a plateau is a genuine convergence
+    signal rather than crowding-pruning noise.  ``best`` is the running
+    best penalized scalarized objective (monotone non-increasing).
+    ``archive_hv`` (optional, one row per scan *segment*) is the
+    archive-projected hypervolume the service's plateau detector ranks on.
+    """
+    objectives: Tuple[str, ...]
+    pairs: Tuple[Tuple[str, str], ...]
+    front_size: np.ndarray          # (G,) population front size
+    hypervolume: np.ndarray         # (G, P) running log-space hv per pair
+    best: np.ndarray                # (G,) running best scalarized objective
+    feasible_frac: np.ndarray       # (G,) feasible fraction of the children
+    n_evals: np.ndarray             # (G,) cumulative evaluations
+    archive_hv: Optional[np.ndarray] = None     # (S, P) per scan segment
+
+    def __post_init__(self):
+        self.objectives = tuple(self.objectives)
+        self.pairs = tuple(tuple(p) for p in self.pairs)
+
+    @property
+    def generations(self) -> int:
+        return len(self.front_size)
+
+    @classmethod
+    def from_scan(cls, objectives: Sequence[str], scan_trace: Dict,
+                  evals_per_generation: int) -> "ConvergenceTrace":
+        """Adopt the stacked (G, ...) telemetry a ``make_nsga`` run scanned
+        out (zero extra evaluations were spent producing it)."""
+        objectives = tuple(objectives)
+        g = np.asarray(scan_trace["front_size"]).shape[0]
+        return cls(
+            objectives=objectives,
+            pairs=tuple((objectives[i], objectives[j])
+                        for i, j in objective_pairs(len(objectives))),
+            front_size=np.asarray(scan_trace["front_size"], np.int64),
+            hypervolume=np.asarray(scan_trace["hypervolume"], np.float64),
+            best=np.asarray(scan_trace["best"], np.float64),
+            feasible_frac=np.asarray(scan_trace["feasible_frac"],
+                                     np.float64),
+            n_evals=(np.arange(g, dtype=np.int64) + 1)
+            * int(evals_per_generation))
+
+    @classmethod
+    def from_history(cls, history: Sequence, evals_per_step: int = 1,
+                     objectives: Sequence[str] = ("objective",)
+                     ) -> "ConvergenceTrace":
+        """Adapt a scalarized engine's ``(iteration, best)`` history (the
+        BO x SA loop tracks one incumbent, so ``front_size`` is 1 and there
+        are no hypervolume pairs)."""
+        vals = [float(v) for i, v in history
+                if isinstance(i, (int, np.integer))]
+        g = len(vals)
+        best = (np.minimum.accumulate(np.asarray(vals, np.float64))
+                if g else np.zeros(0))
+        return cls(objectives=tuple(objectives), pairs=(),
+                   front_size=np.ones(g, np.int64),
+                   hypervolume=np.zeros((g, 0)),
+                   best=best, feasible_frac=np.ones(g),
+                   n_evals=(np.arange(g, dtype=np.int64) + 1)
+                   * int(evals_per_step))
+
+    def extend(self, other: "ConvergenceTrace") -> "ConvergenceTrace":
+        """Concatenate a follow-on segment: evaluation counts accumulate,
+        and the running hv / best stay monotone across the seam."""
+        if other.objectives != self.objectives:
+            raise ValueError("cannot extend a trace across objective sets")
+        off = int(self.n_evals[-1]) if len(self.n_evals) else 0
+        cat = lambda a, b: np.concatenate([np.asarray(a), np.asarray(b)])
+        hv = np.maximum.accumulate(
+            cat(self.hypervolume, other.hypervolume), axis=0)
+        ahv = [a for a in (self.archive_hv, other.archive_hv)
+               if a is not None]
+        return ConvergenceTrace(
+            objectives=self.objectives, pairs=self.pairs,
+            front_size=cat(self.front_size, other.front_size),
+            hypervolume=hv,
+            best=np.minimum.accumulate(cat(self.best, other.best)),
+            feasible_frac=cat(self.feasible_frac, other.feasible_frac),
+            n_evals=cat(self.n_evals, np.asarray(other.n_evals) + off),
+            archive_hv=np.concatenate(ahv, axis=0) if ahv else None)
+
+    def summary(self) -> Dict:
+        """JSON-serializable digest persisted alongside the archive npz."""
+        g = self.generations
+        return dict(
+            generations=int(g),
+            n_evals=int(self.n_evals[-1]) if g else 0,
+            objectives=list(self.objectives),
+            pairs=[list(p) for p in self.pairs],
+            front_size_final=int(self.front_size[-1]) if g else 0,
+            hypervolume_final=[float(v) for v in self.hypervolume[-1]]
+            if g else [],
+            best_final=float(self.best[-1]) if g else None,
+            feasible_frac_mean=float(np.mean(self.feasible_frac))
+            if g else 0.0)
+
+
 # ---------------------------------------------------------------------------
 # jit-compatible archive update
 # ---------------------------------------------------------------------------
@@ -174,6 +321,13 @@ class ParetoArchive:
         #                             archive (cache-freshness metadata)
         self.searched = ()          # objective names search effort was ever
         #                             spent on (cache-coverage metadata)
+        self.budget_covered = 0     # largest query budget this archive has
+        #                             answered: plateau early-stopping may
+        #                             spend FEWER than ``n_evals`` requested
+        #                             evaluations, yet the query counts as
+        #                             covered (the front had converged)
+        self.trace_summary = {}     # last refinement's ConvergenceTrace
+        #                             .summary(), persisted for dashboards
 
     def __len__(self) -> int:
         return int(self.valid.sum())
@@ -204,13 +358,25 @@ class ParetoArchive:
         return ({k: v[sel] for k, v in self.designs.items()},
                 self.objs[sel].astype(np.float64))
 
+    def projected_hypervolume(self, pair: Tuple[int, int],
+                              ref: float = HV_LOG_REF) -> float:
+        """2-D hypervolume of the archived front projected onto a pair of
+        objective columns, over clipped log-metrics w.r.t. ``(ref, ref)`` —
+        the same scale the NSGA scan traces, so the service's plateau
+        detector compares archive state across scan segments directly."""
+        i, j = pair
+        pts = self.objs[self.valid][:, [i, j]].astype(np.float64)
+        return hypervolume_2d(np.log(np.maximum(pts, 1e-3)), (ref, ref))
+
     # ---- persistence -------------------------------------------------------
     def save(self, path) -> Path:
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         meta = dict(capacity=self.capacity, n_obj=self.n_obj,
                     n_evals=self.n_evals, searched=list(self.searched),
-                    obj_keys=list(self.obj_keys or ()))
+                    obj_keys=list(self.obj_keys or ()),
+                    budget_covered=self.budget_covered,
+                    trace_summary=self.trace_summary)
         np.savez_compressed(
             path, __meta=np.frombuffer(
                 json.dumps(meta).encode(), dtype=np.uint8),
@@ -231,6 +397,11 @@ class ParetoArchive:
             arc.designs = {k: v.copy() for k, v in designs.items()}
             arc.n_evals = int(meta["n_evals"])
             arc.searched = tuple(meta.get("searched", ()))
+            # archives written before budget accounting: evaluations
+            # recorded then were always full-budget spends
+            arc.budget_covered = int(meta.get("budget_covered",
+                                              meta["n_evals"]))
+            arc.trace_summary = dict(meta.get("trace_summary", {}))
         return arc
 
 

@@ -29,7 +29,8 @@ from ..core.encoding import (ALL_FIELDS, DesignSpace, feasibility_penalty,
                              mutate, random_design)
 from ..core.evaluate import SystemSpec, evaluate_arrays
 from ..core.optimizer import METRIC_KEYS, log_metric_stack, metric_stack
-from .archive import BIG, crowding_distance, dominance_counts
+from .archive import (BIG, HV_LOG_REF, crowding_distance, dominance_counts,
+                      hypervolume_2d_jit, objective_pairs)
 
 F = jnp.float32
 
@@ -59,10 +60,10 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
     """Build a jitted front explorer.
 
     Returns ``run(key, pop0, arrays=None) ->
-    (pop, raw, sel, ev_designs, ev_raw, ev_feas)`` where ``pop0`` is a
-    stacked design pytree of width ``cfg.pop``; ``raw`` is the (pop, 4)
-    matrix of raw metrics in ``METRIC_KEYS`` order and ``sel`` the
-    (pop, n_obj) penalized log-objectives selection ranked on.
+    (pop, raw, sel, ev_designs, ev_raw, ev_feas, trace)`` where ``pop0``
+    is a stacked design pytree of width ``cfg.pop``; ``raw`` is the
+    (pop, 4) matrix of raw metrics in ``METRIC_KEYS`` order and ``sel``
+    the (pop, n_obj) penalized log-objectives selection ranked on.
     ``ev_designs`` / ``ev_raw`` / ``ev_feas`` are EVERY evaluated design
     of the run, stacked (generations, pop, ...) — the archive fodder:
     nothing the explorer paid for is thrown away.  ``ev_feas`` marks
@@ -71,6 +72,18 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
     archived or served.  The population is elitist (nondominated parents
     survive unless crowd-pruned), so ``pop`` carries the running front;
     total evaluations = ``cfg.pop * cfg.generations``.
+
+    ``trace`` is the per-generation convergence telemetry, scanned out of
+    the same ``lax.scan`` with ZERO extra evaluations (pure dominance
+    math over objective vectors the run already paid for): a dict of
+    stacked arrays — ``front_size`` (G,) feasible nondominated count of
+    the post-selection population, ``hypervolume`` (G, P) running
+    (cumulative-best) 2-D hypervolume per objective pair over clipped
+    log-metrics w.r.t. ``HV_LOG_REF`` (monotone non-decreasing by
+    construction), ``best`` (G,) running best penalized scalarized
+    objective (monotone non-increasing), and ``feasible_frac`` (G,) the
+    feasible fraction of each generation's children.  Feed it to
+    ``ConvergenceTrace.from_scan`` for the host-side view.
     """
     from ..core.constants import DEFAULT_TECH
     tech = tech or DEFAULT_TECH
@@ -108,6 +121,8 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
 def _build_run(space, dims, idx, cfg, tech):
     N = cfg.pop
     obj_idx = jnp.asarray(idx, jnp.int32)
+    pairs = objective_pairs(len(idx))
+    hv_ref = jnp.asarray([HV_LOG_REF, HV_LOG_REF], F)
 
     def eval_one(d, arr):
         m = evaluate_arrays(arr, d, dims, tech)
@@ -129,8 +144,27 @@ def _build_run(space, dims, idx, cfg, tech):
 
     n_imm = int(round(N * cfg.immigrants))
 
+    def telemetry(sel_n, feas_n, cfeas, hv_run, best_run):
+        """Per-generation convergence stats over the selected population —
+        dominance/staircase math only, no design evaluations."""
+        finite = jnp.all(jnp.isfinite(sel_n), axis=-1)
+        ok = finite & feas_n
+        sane = jnp.where(jnp.isfinite(sel_n), sel_n, F(BIG))
+        nd = dominance_counts(sane, ok)
+        front_size = jnp.sum((nd == 0) & ok).astype(jnp.int32)
+        if pairs:
+            hv_now = jnp.stack([
+                hypervolume_2d_jit(sel_n[:, [i, j]], hv_ref, valid=ok)
+                for i, j in pairs])
+            hv_run = jnp.maximum(hv_run, hv_now)
+        scal = jnp.where(finite, jnp.sum(sane, axis=-1), F(BIG))
+        best_run = jnp.minimum(best_run, jnp.min(scal))
+        tr = dict(front_size=front_size, hypervolume=hv_run,
+                  best=best_run, feasible_frac=jnp.mean(cfeas.astype(F)))
+        return hv_run, best_run, tr
+
     def step(arr, carry, k, imm_g):
-        pop, raw, sel = carry
+        pop, raw, sel, feas, hv_run, best_run = carry
         k_mate, k_cx, k_mut = jax.random.split(k, 3)
         nl = jnp.sum(arr["loopmask"], axis=1).astype(jnp.int32)
 
@@ -156,6 +190,7 @@ def _build_run(space, dims, idx, cfg, tech):
                              pop, children)
         a_raw = jnp.concatenate([raw, craw])
         a_sel = jnp.concatenate([sel, csel])
+        a_feas = jnp.concatenate([feas, cfeas])
         finite = jnp.all(jnp.isfinite(a_sel), axis=-1)
         a_sane = jnp.where(jnp.isfinite(a_sel), a_sel, F(BIG))
         nd = dominance_counts(a_sane, finite)
@@ -166,8 +201,12 @@ def _build_run(space, dims, idx, cfg, tech):
                          nd.astype(F) * F(1e6) - jnp.minimum(crowd, F(1e5)),
                          F(BIG))
         order = jnp.argsort(keyv)[:N]
-        return (jax.tree.map(lambda x: x[order], a_pop),
-                a_raw[order], a_sel[order]), (children, craw, cfeas)
+        sel_n, feas_n = a_sel[order], a_feas[order]
+        hv_run, best_run, tr = telemetry(sel_n, feas_n, cfeas,
+                                         hv_run, best_run)
+        return ((jax.tree.map(lambda x: x[order], a_pop),
+                 a_raw[order], sel_n, feas_n, hv_run, best_run),
+                (children, craw, cfeas, tr))
 
     def run(key, pop0, arr, imm):
         # the initial population carries +inf objectives: its (variated)
@@ -176,9 +215,14 @@ def _build_run(space, dims, idx, cfg, tech):
         # (large) evaluate_arrays graph is compiled exactly once.
         raw0 = jnp.full((N, len(METRIC_KEYS)), jnp.inf, F)
         sel0 = jnp.full((N, len(idx)), jnp.inf, F)
+        feas0 = jnp.zeros((N,), bool)
+        hv0 = jnp.zeros((len(pairs),), F)
+        best0 = jnp.asarray(jnp.inf, F)
         keys = jax.random.split(key, cfg.generations)
-        (pop, raw, sel), (ev_designs, ev_raw, ev_feas) = jax.lax.scan(
-            lambda c, xs: step(arr, c, *xs), (pop0, raw0, sel0), (keys, imm))
-        return pop, raw, sel, ev_designs, ev_raw, ev_feas
+        carry0 = (pop0, raw0, sel0, feas0, hv0, best0)
+        ((pop, raw, sel, _feas, _hv, _best),
+         (ev_designs, ev_raw, ev_feas, trace)) = jax.lax.scan(
+            lambda c, xs: step(arr, c, *xs), carry0, (keys, imm))
+        return pop, raw, sel, ev_designs, ev_raw, ev_feas, trace
 
     return run

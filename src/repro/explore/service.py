@@ -1,7 +1,7 @@
 """The exploration *service*: ``explore(graph, objectives, budget)``.
 
 Turns the one-shot DSE scripts into a reusable, cache-accelerated query
-API.  Three tricks make repeated / concurrent exploration cheap:
+API.  Four tricks make repeated / concurrent exploration cheap:
 
 * **Query batching** — ``explore_batch`` groups concurrent queries whose
   (SystemSpec, DesignSpace) hash matches into ONE NSGA-II run over the
@@ -15,9 +15,20 @@ API.  Three tricks make repeated / concurrent exploration cheap:
 * **Warm starts** — when compute IS needed, the initial population is
   seeded from the cached front (topped up with ``random_design`` samples),
   so follow-up queries with bigger budgets refine rather than restart.
+* **Adaptive budgets** (``BudgetPolicy``) — a query's budget is spent in
+  quantized scan *segments*; after each segment the archive-projected
+  hypervolume of the queried objective pairs is checked, and once its
+  relative improvement stays below ``plateau_rel`` for ``patience``
+  consecutive segments the refinement stops early.  The unspent
+  evaluations are *banked* in a per-problem budget ledger, and
+  ``explore_batch`` reallocates banked credit to the batch's
+  under-explored, still-improving archives (lowest eval-count first).
 
 The archive rows are always the full 4-metric vector (``METRIC_KEYS``), so
 one cache serves latency-energy, latency-cost, ... projections alike.
+Every cold answer carries a ``ConvergenceTrace`` — the per-generation
+telemetry the NSGA scan emits for free — and a summary is persisted with
+the archive npz.
 """
 
 from __future__ import annotations
@@ -38,11 +49,44 @@ from ..core.encoding import DesignSpace, random_design
 from ..core.evaluate import SystemSpec
 from ..core.optimizer import METRIC_KEYS
 from ..core.workload import WorkloadGraph
-from .archive import ParetoArchive, pareto_front, spec_space_key
+from .archive import (ConvergenceTrace, ParetoArchive, objective_pairs,
+                      pareto_front, spec_space_key)
 from .nsga import NSGAConfig, make_nsga
 
-DEFAULT_CACHE_DIR = "artifacts/explore_cache"
+# the default archive cache is anchored to the repo root (four levels above
+# this file: src/repro/explore/service.py), NOT the process CWD — otherwise
+# every working directory silently grows its own fragmented cache.
+# $REPRO_EXPLORE_CACHE (or an explicit ``cache_dir``) overrides it.
+DEFAULT_CACHE_DIR = (Path(__file__).resolve().parents[3]
+                     / "artifacts" / "explore_cache")
 DEFAULT_OBJECTIVES = ("latency_ns", "cost_usd")
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(0, int(n) - 1).bit_length() if n > 1 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetPolicy:
+    """How a query's evaluation budget is spent.
+
+    ``chunk_generations`` splits the NSGA scan into segments of that many
+    generations (quantized to a power of two, so segment runners compile
+    once per size); between segments the service is on the host and can
+    observe the archive.  With ``adaptive`` on, refinement stops early
+    once EVERY queried objective pair's archive-projected hypervolume
+    improved by less than ``plateau_rel`` (relative) for ``patience``
+    consecutive segments; the unspent evaluations are banked in the
+    service's per-problem ledger.  ``reallocate`` lets ``explore_batch``
+    spend banked credit on the batch's under-explored, still-improving
+    archives.  Single-objective queries have no hypervolume pairs and
+    never stop early."""
+    chunk_generations: int = 8
+    plateau_rel: float = 0.005
+    patience: int = 2
+    adaptive: bool = True
+    reallocate: bool = True
 
 
 @dataclasses.dataclass
@@ -81,17 +125,30 @@ class ExploreResult:
     #                                 archive); 0 when served from cache
     elapsed_s: float                # wall time of the group's answer
     cache_key: str
+    trace: Optional[ConvergenceTrace] = None    # per-generation telemetry
+    #                                 of the group's run (None on pure
+    #                                 cache hits — see the archive's
+    #                                 persisted ``trace_summary``)
+    plateaued: bool = False         # hypervolume plateaued => stopped early
+    n_evals_banked: int = 0         # evaluations the early stop banked
+    #                                 into the budget ledger
+    n_evals_realloc: int = 0        # extra evaluations this group received
+    #                                 from the batch's banked credit
 
 
 class ExplorationService:
     """Holds per-problem archives (memory + disk) and a shared NSGA engine.
 
-    ``cache_dir`` defaults to ``$REPRO_EXPLORE_CACHE`` or
+    ``cache_dir`` defaults to ``$REPRO_EXPLORE_CACHE`` or the repo-anchored
     ``artifacts/explore_cache``; archives live at ``<cache_dir>/<key>.npz``.
+    ``policy`` governs adaptive budget spending (see ``BudgetPolicy``);
+    ``ledger`` maps problem key -> evaluations banked by plateau early
+    stops, spendable by later batches' under-explored problems.
     """
 
     def __init__(self, cache_dir=None, capacity: int = 256,
-                 nsga: NSGAConfig = NSGAConfig(), tech=None):
+                 nsga: NSGAConfig = NSGAConfig(), tech=None,
+                 policy: BudgetPolicy = BudgetPolicy()):
         # nsga.generations is not used on the query path — each query's
         # budget sets the scan length (see _refine); the config's pop /
         # fields / crossover / mutation / immigrant knobs apply as given.
@@ -101,6 +158,8 @@ class ExplorationService:
         self.capacity = int(capacity)
         self.nsga = nsga
         self.tech = tech
+        self.policy = policy
+        self.ledger: Dict[str, int] = {}
         self._archives: Dict[str, ParetoArchive] = {}
 
     # ---- cache plumbing ----------------------------------------------------
@@ -155,7 +214,13 @@ class ExplorationService:
     def explore_batch(self, queries: Sequence[ExploreQuery],
                       key=None) -> List[ExploreResult]:
         """Answer a batch of queries, merging same-problem queries into one
-        vmapped NSGA run (union objectives, max budget)."""
+        vmapped NSGA run (union objectives, max budget).
+
+        After every group has spent (or banked) its own budget, banked
+        credit — this batch's plus any ledger balance carried over from
+        earlier early stops — is reallocated to the batch's still-improving
+        groups (the ones that exhausted their budget without plateauing),
+        lowest recorded eval-count first."""
         key = jax.random.PRNGKey(0) if key is None else key
         # group by canonical problem hash
         groups: Dict[str, Dict] = {}
@@ -169,38 +234,101 @@ class ExplorationService:
             order.append((ck, len(g["queries"])))
             g["queries"].append(q)
 
-        group_results: Dict[str, List[ExploreResult]] = {}
         for i, (ck, g) in enumerate(groups.items()):
-            group_results[ck] = self._run_group(
-                ck, g["spec"], g["space"], g["queries"],
-                jax.random.fold_in(key, i))
+            self._refine_group(ck, g, jax.random.fold_in(key, i))
+        if self.policy.reallocate:
+            self._reallocate(groups, jax.random.fold_in(key, len(groups)))
+
+        group_results = {ck: self._project_group(ck, g)
+                         for ck, g in groups.items()}
         return [group_results[ck][slot] for ck, slot in order]
 
     # ---- one problem group -------------------------------------------------
-    def _run_group(self, ck: str, spec: SystemSpec, space: DesignSpace,
-                   queries: List[ExploreQuery], key) -> List[ExploreResult]:
+    def _refine_group(self, ck: str, g: Dict, key) -> None:
+        """Phase 1: spend (or bank) the group's own budget.  Mutates ``g``
+        with the run's accounting; fronts are projected later, after any
+        cross-group budget reallocation topped the archive up."""
         t0 = time.perf_counter()
-        arc = self.archive_for(spec, space, key=ck)
-        budget = max(q.budget for q in queries)
-        union = tuple(k for k in METRIC_KEYS
-                      if any(k in q.objectives for q in queries))
-        # warm only when the recorded evaluations cover BOTH the budget and
-        # every queried objective — points found while optimizing other
-        # axes are no substitute for search effort on these ones
-        warm = (len(arc) > 0 and arc.n_evals >= budget
+        arc = g["arc"] = self.archive_for(g["spec"], g["space"], key=ck)
+        budget = max(q.budget for q in g["queries"])
+        union = g["union"] = tuple(
+            k for k in METRIC_KEYS
+            if any(k in q.objectives for q in g["queries"]))
+        # warm only when the covered budget (evaluations recorded, or
+        # credited by a plateau early stop) and every queried objective are
+        # covered — points found while optimizing other axes are no
+        # substitute for search effort on these ones
+        warm = (len(arc) > 0
+                and max(arc.n_evals, arc.budget_covered) >= budget
                 and all(o in arc.searched for o in union))
+        g.update(warm=warm, n_run=0, trace=None, plateaued=False,
+                 banked=0, realloc=0)
+        if warm:
+            g["elapsed"] = time.perf_counter() - t0
+            return
+        n_run, trace, plateaued, banked = self._refine(
+            arc, g["spec"], g["space"], union, budget, key)
+        arc.searched = tuple(k for k in METRIC_KEYS
+                             if k in arc.searched or k in union)
+        arc.budget_covered = max(arc.budget_covered, budget)
+        if banked:
+            self.ledger[ck] = self.ledger.get(ck, 0) + banked
+        g.update(n_run=n_run, trace=trace, plateaued=plateaued,
+                 banked=banked)
+        arc.trace_summary = trace.summary()
+        self.save(ck)
+        g["elapsed"] = time.perf_counter() - t0
 
-        n_run = 0
-        if not warm:
-            n_run = self._refine(arc, spec, space, union, budget, key)
-            arc.searched = tuple(k for k in METRIC_KEYS
-                                 if k in arc.searched or k in union)
+    def _reallocate(self, groups: Dict[str, Dict], key) -> None:
+        """Phase 2: spend the ledger on this batch's under-explored
+        archives — groups that ran to budget exhaustion WITHOUT plateauing
+        (their front was still improving), lowest eval-count first.  Spent
+        credit is drained FIFO from the ledger; credit no group can use
+        stays banked for future batches."""
+        pool = sum(self.ledger.values())
+        takers = sorted(
+            ((ck, g) for ck, g in groups.items()
+             if not g["warm"] and g["n_run"] and not g["plateaued"]),
+            key=lambda item: item[1]["arc"].n_evals)
+        for i, (ck, g) in enumerate(takers):
+            if pool < 8:                 # below the smallest runnable pop
+                break
+            arc = g["arc"]
+            t0 = time.perf_counter()
+            # quantize_down caps the spend at the available credit — the
+            # ledger must never be overdrawn by pow2 rounding
+            n_run, trace, plateaued, _ = self._refine(
+                arc, g["spec"], g["space"], g["union"], pool,
+                jax.random.fold_in(key, i), quantize_down=True)
+            pool -= n_run                # only what was actually spent
+            self._drain_ledger(n_run)
+            g["elapsed"] += time.perf_counter() - t0
+            g["n_run"] += n_run
+            g["realloc"] += n_run
+            g["plateaued"] = plateaued
+            g["trace"] = (g["trace"].extend(trace)
+                          if g["trace"] is not None else trace)
+            arc.trace_summary = g["trace"].summary()
             self.save(ck)
 
-        elapsed = time.perf_counter() - t0
-        designs, metrics = arc.front()
+    def _drain_ledger(self, spent: int) -> None:
+        for ck in list(self.ledger):
+            if spent <= 0:
+                break
+            take = min(self.ledger[ck], spent)
+            self.ledger[ck] -= take
+            spent -= take
+            if self.ledger[ck] <= 0:
+                del self.ledger[ck]
+
+    def _project_group(self, ck: str, g: Dict) -> List[ExploreResult]:
+        """Phase 3: project every query's front out of the group archive.
+        ``elapsed`` covers the group's own refinement (plus any
+        reallocation top-up it received), not the whole batch."""
+        designs, metrics = g["arc"].front()
+        elapsed = g["elapsed"]
         results = []
-        for q in queries:
+        for q in g["queries"]:
             idx = [METRIC_KEYS.index(o) for o in q.objectives]
             cols = metrics[:, idx]
             keep = pareto_front(cols) if len(cols) else []
@@ -210,56 +338,120 @@ class ExplorationService:
                 front_metrics=metrics[keep],
                 front_designs=[{k: v[i] for k, v in designs.items()}
                                for i in keep],
-                from_cache=warm, n_evals_run=n_run,
-                elapsed_s=elapsed, cache_key=ck))
+                from_cache=g["warm"], n_evals_run=g["n_run"],
+                elapsed_s=elapsed, cache_key=ck,
+                trace=g["trace"], plateaued=g["plateaued"],
+                n_evals_banked=g["banked"], n_evals_realloc=g["realloc"]))
         return results
 
     def _refine(self, arc: ParetoArchive, spec: SystemSpec,
                 space: DesignSpace, objectives: Tuple[str, ...],
-                budget: int, key) -> int:
-        """Spend ~``budget`` evaluations improving the archive: warm-start
-        the population from the cached front, evolve, re-insert.
+                budget: int, key, quantize_down: bool = False
+                ) -> Tuple[int, ConvergenceTrace, bool, int]:
+        """Spend up to ~``budget`` evaluations improving the archive:
+        warm-start the population from the cached front, evolve in scan
+        segments, re-insert every evaluation, stop early on plateau.
 
         The query budget — not ``self.nsga.generations`` — fixes the scan
-        length here; both the population (for sub-``nsga.pop`` budgets) and
-        the generation count are quantized to powers of two, so a
-        long-lived service compiles O(log^2(max_budget)) scan variants
-        instead of one per distinct budget; the service's ``nsga`` config
-        supplies the population ceiling and variation knobs.
+        length here; the population (for sub-``nsga.pop`` budgets), the
+        total generation count and the per-segment chunk are all quantized
+        to powers of two, so a long-lived service compiles
+        O(log^2(max_budget)) scan variants instead of one per distinct
+        budget; the service's ``nsga`` config supplies the population
+        ceiling and variation knobs.
+
+        Returns ``(n_run, trace, plateaued, banked)``: evaluations spent,
+        the concatenated per-generation ``ConvergenceTrace`` (with one
+        archive-projected hypervolume row per segment), whether the
+        hypervolume plateau stopped the run early, and the evaluations of
+        the *requested* budget that early stop left unspent (never more
+        than the caller offered, however the scan was quantized).
+
+        ``quantize_down`` floors instead of ceils the pow2 generation
+        quantization, guaranteeing the run never spends more than
+        ``budget`` — used when spending ledger credit, which must not be
+        exceeded.
         """
+        policy = self.policy
         pop = self.nsga.pop
-        if budget < pop:        # pow2 >= budget, floored at 8
-            pop = min(pop, max(8, 1 << max(0, budget - 1).bit_length()))
-        generations = -(-budget // pop)                 # ceil(budget / pop)
-        generations = 1 << max(0, generations - 1).bit_length() \
-            if generations > 1 else 1
-        cfg = dataclasses.replace(self.nsga, pop=pop,
-                                  generations=generations)
+        if budget < pop:        # sub-pop budgets shrink the population:
+            #                     pow2 ceil normally, pow2 floor when the
+            #                     budget is a hard cap; floored at 8
+            p = _pow2(budget)
+            if quantize_down and p > budget:
+                p >>= 1
+            pop = min(pop, max(8, p))
+        if quantize_down:       # largest pow2 <= budget/pop, floored at 1
+            generations = 1 << max(0, (budget // pop).bit_length() - 1)
+        else:
+            generations = _pow2(-(-budget // pop))      # ceil, then pow2
+        chunk = min(_pow2(policy.chunk_generations), generations)
+        n_seg = generations // chunk                    # pow2 => divides
+        cfg = dataclasses.replace(self.nsga, pop=pop, generations=chunk)
+        run = make_nsga(spec, space, objectives, cfg, tech=self.tech)
+        # archive-projected hypervolume pairs, in METRIC_KEYS column space
+        hv_pairs = [(METRIC_KEYS.index(objectives[i]),
+                     METRIC_KEYS.index(objectives[j]))
+                    for i, j in objective_pairs(len(objectives))]
         k_init, k_run = jax.random.split(key)
 
-        pop0 = jax.vmap(lambda k: random_design(k, space))(
-            jax.random.split(k_init, pop))
-        fr_designs, _ = arc.front()
-        n_warm = min(len(arc), pop)
-        if n_warm:
-            pop0 = {k: jnp.concatenate(
+        def seed(filler):
+            """Population for the next segment: archive front head (the
+            all-time best designs), ``filler`` tail (fresh random samples
+            for segment 0, then the carried evolving population)."""
+            fr_designs, _ = arc.front()
+            n_warm = min(len(arc), pop)
+            if not n_warm:
+                return filler
+            return {k: jnp.concatenate(
                 [jnp.asarray(fr_designs[k][:n_warm]),
                  jnp.asarray(v)[n_warm:]])
-                for k, v in pop0.items()}
+                for k, v in filler.items()}
 
-        run = make_nsga(spec, space, objectives, cfg, tech=self.tech)
-        _pop, _raw, _sel, ev_designs, ev_raw, ev_feas = run(k_run, pop0)
-        # archive EVERY evaluation of the run, not just the survivors —
-        # masked to feasible designs so the archive (and every front served
-        # from it) never carries a constraint-violating point
-        arc.insert(
-            jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
-                         ev_designs),
-            ev_raw.reshape(-1, ev_raw.shape[-1]),
-            mask=ev_feas.reshape(-1), count_evals=False)
-        n_run = pop * generations      # one vmapped evaluation per scan step
-        arc.n_evals += n_run
-        return n_run
+        filler = jax.vmap(lambda k: random_design(k, space))(
+            jax.random.split(k_init, pop))
+        trace = None
+        hv_hist: List[np.ndarray] = []
+        streak, plateaued, spent_g = 0, False, 0
+        for s in range(n_seg):
+            pop_s, _raw, _sel, ev_designs, ev_raw, ev_feas, tr = run(
+                jax.random.fold_in(k_run, s), seed(filler))
+            # archive EVERY evaluation of the segment, not just the
+            # survivors — masked to feasible designs so the archive (and
+            # every front served from it) never carries a
+            # constraint-violating point
+            arc.insert(
+                jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                             ev_designs),
+                ev_raw.reshape(-1, ev_raw.shape[-1]),
+                mask=ev_feas.reshape(-1), count_evals=False)
+            arc.n_evals += pop * chunk   # one vmapped evaluation per step
+            spent_g += chunk
+            filler = pop_s
+            seg_trace = ConvergenceTrace.from_scan(objectives, tr, pop)
+            hv_now = np.asarray([arc.projected_hypervolume(p)
+                                 for p in hv_pairs])
+            seg_trace.archive_hv = hv_now[None, :]
+            trace = seg_trace if trace is None else trace.extend(seg_trace)
+            # ---- plateau check on the archive-projected hypervolume ----
+            # an empty archive means NOTHING has been found yet — that is
+            # stagnation, not convergence, and must never stop the search
+            if policy.adaptive and hv_pairs and len(hv_hist) and len(arc):
+                rel = (hv_now - hv_hist[-1]) / np.maximum(
+                    np.abs(hv_hist[-1]), 1e-9)
+                streak = streak + 1 if np.all(rel < policy.plateau_rel) \
+                    else 0
+                if streak >= policy.patience and s + 1 < n_seg:
+                    plateaued = True
+                    hv_hist.append(hv_now)
+                    break
+            hv_hist.append(hv_now)
+        n_run = spent_g * pop
+        # the ledger may only be fed from budget the CALLER offered and
+        # this run left unspent — the pow2 quantization headroom above the
+        # requested budget is not real credit
+        banked = max(0, budget - n_run) if plateaued else 0
+        return n_run, trace, plateaued, banked
 
 
 # ---------------------------------------------------------------------------

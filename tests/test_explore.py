@@ -4,6 +4,8 @@ points), NSGA-II front correctness against a brute-force dominance sweep,
 and the service's cache round-trip (save -> load -> warm-start yields
 identical fronts)."""
 
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -11,10 +13,13 @@ import jax
 import jax.numpy as jnp
 
 import repro.core as C
-from repro.explore.archive import (ParetoArchive, hypervolume_2d,
+from repro.explore.archive import (HV_LOG_REF, ConvergenceTrace,
+                                   ParetoArchive, hypervolume_2d,
+                                   hypervolume_2d_jit, objective_pairs,
                                    pareto_front, spec_space_key)
 from repro.explore.nsga import NSGAConfig, make_nsga
-from repro.explore.service import ExplorationService
+from repro.explore.service import (BudgetPolicy, ExplorationService,
+                                   ExploreQuery)
 
 
 def _brute_front(pts):
@@ -63,6 +68,71 @@ def test_hypervolume_2d():
     assert hypervolume_2d([(1, 5), (2, 6), (np.inf, 0)],
                           (10, 10)) == pytest.approx(45.0)
     assert hypervolume_2d(np.zeros((0, 2)), (1, 1)) == 0.0
+
+
+def test_hypervolume_2d_jit_matches_host():
+    rng = np.random.default_rng(7)
+    for n in (1, 2, 17, 64):
+        pts = rng.random((n, 2)) * 4
+        pts[rng.random(n) < 0.2] = np.inf        # some filtered rows
+        ref = (3.0, 3.5)
+        assert float(hypervolume_2d_jit(pts, ref)) == pytest.approx(
+            hypervolume_2d(pts, ref), rel=1e-5)
+    # the validity mask drops points exactly like removing them
+    pts = rng.random((8, 2))
+    valid = rng.random(8) < 0.5
+    assert float(hypervolume_2d_jit(pts, (2, 2), valid=valid)) \
+        == pytest.approx(hypervolume_2d(pts[valid], (2, 2)), rel=1e-5)
+
+
+def test_objective_pairs():
+    assert objective_pairs(1) == ()
+    assert objective_pairs(2) == ((0, 1),)
+    assert objective_pairs(3) == ((0, 1), (0, 2), (1, 2))
+
+
+def test_archive_projected_hypervolume():
+    arc = ParetoArchive(8, {"tag": np.zeros((), np.int32)}, n_obj=2)
+    assert arc.projected_hypervolume((0, 1)) == 0.0   # empty archive
+    arc.insert({"tag": np.zeros(1, np.int32)}, np.array([[np.e, np.e]]))
+    # single point at log-coords (1, 1) against (ref, ref)
+    assert arc.projected_hypervolume((0, 1)) == pytest.approx(
+        (HV_LOG_REF - 1.0) ** 2, rel=1e-5)
+    # inserting a dominating point can only grow the projected hv
+    hv0 = arc.projected_hypervolume((0, 1))
+    arc.insert({"tag": np.zeros(1, np.int32)}, np.array([[1.0, 1.0]]))
+    assert arc.projected_hypervolume((0, 1)) >= hv0
+
+
+def test_convergence_trace_extend_and_summary():
+    tr = lambda hv, best, n0: ConvergenceTrace(
+        objectives=("latency_ns", "cost_usd"),
+        pairs=(("latency_ns", "cost_usd"),),
+        front_size=np.array([2, 3]), hypervolume=np.asarray(hv, float),
+        best=np.asarray(best, float), feasible_frac=np.ones(2),
+        n_evals=np.array([n0, 2 * n0]))
+    a = tr([[1.0], [2.0]], [5.0, 4.0], 8)
+    b = tr([[1.5], [2.5]], [4.5, 3.0], 8)   # dips below a's running max
+    c = a.extend(b)
+    assert c.generations == 4
+    np.testing.assert_array_equal(c.n_evals, [8, 16, 24, 32])
+    # the seam stays monotone: hv never drops, best never rises
+    np.testing.assert_allclose(c.hypervolume.ravel(), [1, 2, 2, 2.5])
+    np.testing.assert_allclose(c.best, [5, 4, 4, 3])
+    s = c.summary()
+    assert s["generations"] == 4 and s["n_evals"] == 32
+    assert s["hypervolume_final"] == [2.5] and s["best_final"] == 3.0
+    with pytest.raises(ValueError):
+        a.extend(ConvergenceTrace.from_history([(0, 1.0)]))
+
+
+def test_convergence_trace_from_history():
+    t = ConvergenceTrace.from_history(
+        [(0, 3.0), (1, 5.0), (2, 1.0), ("pareto_kept", 2)],
+        evals_per_step=10)
+    np.testing.assert_allclose(t.best, [3.0, 3.0, 1.0])   # running best
+    np.testing.assert_array_equal(t.n_evals, [10, 20, 30])
+    assert t.pairs == () and t.hypervolume.shape == (3, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -166,7 +236,7 @@ def test_nsga_front_correct_vs_bruteforce_sweep():
     run = make_nsga(spec, space, ("latency_ns", "cost_usd"), cfg)
     pop0 = jax.vmap(lambda k: C.random_design(k, space))(
         jax.random.split(jax.random.PRNGKey(0), cfg.pop))
-    pop, raw, sel, ev_designs, ev_raw, ev_feas = run(
+    pop, raw, sel, ev_designs, ev_raw, ev_feas, trace = run(
         jax.random.PRNGKey(1), pop0)
 
     raw = np.asarray(raw, np.float64)
@@ -182,6 +252,35 @@ def test_nsga_front_correct_vs_bruteforce_sweep():
     # every returned design stays inside the encoding bounds
     sh = np.asarray(jax.tree.map(np.asarray, pop)["shape"])
     assert sh.min() >= 1 and np.all(sh <= np.asarray(space.max_shape))
+
+
+def test_nsga_scans_out_convergence_trace():
+    """The scan emits per-generation telemetry with zero extra evals: the
+    running hypervolume is monotone non-decreasing, the running best is
+    monotone non-increasing, and the hv matches the host recomputation."""
+    _, spec, space = _tiny_problem()
+    cfg = NSGAConfig(pop=8, generations=4)
+    objectives = ("latency_ns", "cost_usd")
+    run = make_nsga(spec, space, objectives, cfg)
+    pop0 = jax.vmap(lambda k: C.random_design(k, space))(
+        jax.random.split(jax.random.PRNGKey(0), cfg.pop))
+    pop, raw, sel, _d, ev_raw, ev_feas, tr = run(jax.random.PRNGKey(1), pop0)
+
+    t = ConvergenceTrace.from_scan(objectives, tr, cfg.pop)
+    assert t.generations == cfg.generations
+    assert t.pairs == (("latency_ns", "cost_usd"),)
+    assert t.hypervolume.shape == (cfg.generations, 1)
+    assert np.all(np.diff(t.hypervolume, axis=0) >= 0)       # monotone
+    assert np.all(np.diff(t.best) <= 1e-6)
+    assert np.all((0 <= t.feasible_frac) & (t.feasible_frac <= 1))
+    assert np.all(t.front_size >= 0) and np.all(t.front_size <= cfg.pop)
+    np.testing.assert_array_equal(
+        t.n_evals, cfg.pop * (np.arange(cfg.generations) + 1))
+    # final-generation running hv >= hv of the final population's feasible
+    # log-front recomputed on the host (running max can only exceed it)
+    logs = np.log(np.maximum(np.asarray(raw, np.float64)[:, [0, 2]], 1e-3))
+    hv_host = hypervolume_2d(logs, (HV_LOG_REF, HV_LOG_REF))
+    assert t.hypervolume[-1, 0] >= hv_host * (1 - 1e-4)
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +385,156 @@ def test_optimize_records_into_archive():
 
 
 def test_service_rejects_unknown_objective():
-    from repro.explore.service import ExploreQuery
     g, _, _ = _tiny_problem()
     with pytest.raises(ValueError):
         ExploreQuery(g, objectives=("latency_ns", "nope"))
+
+
+# ---------------------------------------------------------------------------
+# convergence-aware exploration: telemetry, plateau stopping, budget ledger
+# ---------------------------------------------------------------------------
+def test_default_cache_dir_is_repo_anchored(tmp_path, monkeypatch):
+    """Regression: the default cache must not fragment across working
+    directories — it is anchored to the repo root unless overridden."""
+    from repro.explore import service as service_mod
+    monkeypatch.delenv("REPRO_EXPLORE_CACHE", raising=False)
+    monkeypatch.chdir(tmp_path)                  # CWD must be irrelevant
+    svc = ExplorationService()
+    assert svc.cache_dir.is_absolute()
+    root = Path(service_mod.__file__).resolve().parents[3]
+    assert svc.cache_dir == root / "artifacts" / "explore_cache"
+    assert svc.cache_dir == Path(service_mod.DEFAULT_CACHE_DIR)
+    # the env var and the explicit argument still override, in that order
+    monkeypatch.setenv("REPRO_EXPLORE_CACHE", str(tmp_path / "env"))
+    assert ExplorationService().cache_dir == tmp_path / "env"
+    assert ExplorationService(cache_dir=tmp_path / "arg").cache_dir \
+        == tmp_path / "arg"
+
+
+def test_explore_result_carries_convergence_trace(tmp_path):
+    g, _, _ = _tiny_problem()
+    svc = ExplorationService(cache_dir=tmp_path, nsga=NSGAConfig(pop=8),
+                             policy=BudgetPolicy(chunk_generations=2))
+    r = svc.explore(g, ("latency_ns", "cost_usd"), budget=32, ch_max=2,
+                    space_kwargs=TINY_SPACE_KW)
+    t = r.trace
+    assert isinstance(t, ConvergenceTrace)
+    assert t.objectives == ("latency_ns", "cost_usd")
+    # one generation of telemetry per pop-wide evaluation actually spent
+    assert t.n_evals[-1] == r.n_evals_run
+    assert len(t.front_size) == t.generations
+    # the acceptance gate: per-generation front size + hypervolume, the hv
+    # monotone non-decreasing for the archive-backed front
+    assert np.all(t.front_size >= 0)
+    assert np.all(np.diff(t.hypervolume, axis=0) >= 0)
+    assert np.all(np.diff(t.archive_hv, axis=0) >= -1e-6)
+    assert t.archive_hv.shape[1] == len(t.pairs)
+    # the trace summary is persisted with the archive npz
+    back = ParetoArchive.load(svc._path(r.cache_key))
+    assert back.trace_summary == t.summary()
+    assert back.budget_covered >= 32
+    # a warm (cache-served) answer spends nothing and carries no new trace
+    r2 = svc.explore(g, ("latency_ns", "cost_usd"), budget=32, ch_max=2,
+                     space_kwargs=TINY_SPACE_KW)
+    assert r2.from_cache and r2.trace is None
+
+
+@pytest.mark.slow
+def test_explore_deterministic_given_key(tmp_path):
+    """Same PRNG key + cold cache => identical fronts AND identical
+    convergence traces, bit for bit."""
+    g, _, _ = _tiny_problem()
+    results = []
+    for sub in ("a", "b"):
+        svc = ExplorationService(cache_dir=tmp_path / sub,
+                                 nsga=NSGAConfig(pop=8),
+                                 policy=BudgetPolicy(chunk_generations=2))
+        results.append(svc.explore(
+            g, ("latency_ns", "cost_usd"), budget=32, ch_max=2,
+            space_kwargs=TINY_SPACE_KW, key=jax.random.PRNGKey(7)))
+    ra, rb = results
+    np.testing.assert_array_equal(ra.front_objs, rb.front_objs)
+    np.testing.assert_array_equal(ra.front_metrics, rb.front_metrics)
+    assert ra.n_evals_run == rb.n_evals_run
+    np.testing.assert_array_equal(ra.trace.front_size, rb.trace.front_size)
+    np.testing.assert_array_equal(ra.trace.hypervolume,
+                                  rb.trace.hypervolume)
+    np.testing.assert_array_equal(ra.trace.best, rb.trace.best)
+    np.testing.assert_array_equal(ra.trace.feasible_frac,
+                                  rb.trace.feasible_frac)
+    np.testing.assert_array_equal(ra.trace.archive_hv, rb.trace.archive_hv)
+
+
+def test_plateau_early_stop_banks_budget(tmp_path):
+    """With an always-satisfied plateau threshold the service stops after
+    patience+1 segments and banks the rest of the budget in the ledger."""
+    g, _, _ = _tiny_problem()
+    svc = ExplorationService(
+        cache_dir=tmp_path, nsga=NSGAConfig(pop=8),
+        policy=BudgetPolicy(chunk_generations=1, plateau_rel=10.0,
+                            patience=1, reallocate=False))
+    r = svc.explore(g, ("latency_ns", "cost_usd"), budget=64, ch_max=2,
+                    space_kwargs=TINY_SPACE_KW)
+    # 8 generations planned (pop 8), stopped after segment 2 of 8
+    assert r.plateaued
+    assert r.n_evals_run == 16 and r.n_evals_banked == 48
+    assert svc.ledger == {r.cache_key: 48}
+    # early-stopped or not, the query's budget counts as covered: the
+    # identical query is served warm
+    r2 = svc.explore(g, ("latency_ns", "cost_usd"), budget=64, ch_max=2,
+                     space_kwargs=TINY_SPACE_KW)
+    assert r2.from_cache
+    # ... and budget coverage survives the disk round-trip
+    svc2 = ExplorationService(
+        cache_dir=tmp_path, nsga=NSGAConfig(pop=8),
+        policy=BudgetPolicy(chunk_generations=1, plateau_rel=10.0,
+                            patience=1, reallocate=False))
+    r3 = svc2.explore(g, ("latency_ns", "cost_usd"), budget=64, ch_max=2,
+                      space_kwargs=TINY_SPACE_KW)
+    assert r3.from_cache
+
+
+def test_plateau_disabled_spends_full_budget(tmp_path):
+    g, _, _ = _tiny_problem()
+    svc = ExplorationService(
+        cache_dir=tmp_path, nsga=NSGAConfig(pop=8),
+        policy=BudgetPolicy(chunk_generations=1, plateau_rel=10.0,
+                            patience=1, adaptive=False))
+    r = svc.explore(g, ("latency_ns", "cost_usd"), budget=64, ch_max=2,
+                    space_kwargs=TINY_SPACE_KW)
+    assert not r.plateaued and r.n_evals_run == 64
+    assert r.n_evals_banked == 0 and svc.ledger == {}
+    # chunked and single-scan spending agree on the accounting
+    assert r.trace.generations == 8 and r.trace.n_evals[-1] == 64
+
+
+@pytest.mark.slow
+def test_batch_reallocates_banked_budget(tmp_path):
+    """A plateaued problem's banked evaluations flow to the batch's
+    under-explored, still-improving problem."""
+    g1, _, _ = _tiny_problem()
+    g2 = C.presets.bert_mms()["att3"]
+    svc = ExplorationService(
+        cache_dir=tmp_path, nsga=NSGAConfig(pop=8),
+        policy=BudgetPolicy(chunk_generations=1, plateau_rel=10.0,
+                            patience=1))
+    qs = [ExploreQuery(g1, ("latency_ns", "cost_usd"), budget=64, ch_max=2,
+                       space_kwargs=TINY_SPACE_KW),
+          ExploreQuery(g2, ("latency_ns", "cost_usd"), budget=8, ch_max=2,
+                       space_kwargs=TINY_SPACE_KW)]
+    ra, rb = svc.explore_batch(qs)
+    assert ra.cache_key != rb.cache_key
+    # g1 plateaued and banked; g2 ran its whole (1-segment) budget without
+    # a plateau verdict, so it is the reallocation taker
+    assert ra.plateaued and ra.n_evals_banked > 0
+    assert rb.n_evals_realloc > 0
+    assert rb.n_evals_run == 8 + rb.n_evals_realloc
+    # the taker's archive really recorded the extra evaluations ...
+    spec2 = C.SystemSpec.build(g2, ch_max=2)
+    space2 = C.DesignSpace(spec2, **TINY_SPACE_KW)
+    assert svc.archive_for(spec2, space2).n_evals == rb.n_evals_run
+    # ... its trace covers them ...
+    assert rb.trace.n_evals[-1] == rb.n_evals_run
+    # ... and the spent credit was drained from the ledger
+    assert sum(svc.ledger.values()) \
+        == ra.n_evals_banked - rb.n_evals_realloc

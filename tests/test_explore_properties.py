@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) for the ``repro.explore.archive``
+dominance/hypervolume/crowding primitives — the optimizer-layer invariants
+every engine (NSGA-II fronts, Pareto archives, scalarized BO x SA) relies
+on.  Each property is a plain ``_check_*`` function driven by a seeded RNG
+so failures reproduce exactly from the printed seed."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.explore.archive import (crowding_distance, dominance_counts,  # noqa: E402
+                                   dominates, hypervolume_2d,
+                                   hypervolume_2d_jit, pareto_front)
+
+seeds = st.integers(0, 2**31 - 1)
+sizes = st.integers(1, 24)
+dims = st.integers(1, 4)
+
+
+def _cloud(seed, n, k, ties=True):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, k))
+    if ties:    # quantize so exact ties/duplicates actually occur
+        pts = np.round(pts * 4) / 4
+    return pts
+
+
+# ---------------------------------------------------------------------------
+# dominance relation: antisymmetric, transitive, consistent across impls
+# ---------------------------------------------------------------------------
+def _dom_matrix(pts):
+    le = np.all(pts[:, None, :] <= pts[None, :, :], axis=-1)
+    lt = np.any(pts[:, None, :] < pts[None, :, :], axis=-1)
+    return le & lt                                 # D[i, j]: i dominates j
+
+
+@given(seed=seeds, n=sizes, k=dims)
+@settings(max_examples=40, deadline=None)
+def test_dominance_antisymmetric(seed, n, k):
+    pts = _cloud(seed, n, k)
+    D = _dom_matrix(pts)
+    assert not np.any(D & D.T), "a dominates b AND b dominates a"
+    # the jnp scalar predicate agrees with the matrix on every pair
+    for i in range(min(n, 6)):
+        for j in range(min(n, 6)):
+            assert bool(dominates(jnp.asarray(pts[i]),
+                                  jnp.asarray(pts[j]))) == bool(D[i, j])
+
+
+@given(seed=seeds, n=sizes, k=dims)
+@settings(max_examples=40, deadline=None)
+def test_dominance_transitive(seed, n, k):
+    pts = _cloud(seed, n, k)
+    D = _dom_matrix(pts)
+    # D[i,j] & D[j,l] => D[i,l]: the boolean product may not escape D
+    chain = (D.astype(int) @ D.astype(int)) > 0
+    assert not np.any(chain & ~D)
+
+
+@given(seed=seeds, n=sizes, k=dims)
+@settings(max_examples=40, deadline=None)
+def test_pareto_front_consistent_with_dominance_counts(seed, n, k):
+    pts = _cloud(seed, n, k)
+    nd = np.asarray(dominance_counts(jnp.asarray(pts, jnp.float32),
+                                     jnp.ones(n, bool)))
+    assert sorted(pareto_front(pts)) == list(np.flatnonzero(nd == 0))
+    # every point outside the front is dominated by some front point
+    front = set(pareto_front(pts))
+    D = _dom_matrix(pts)
+    for j in range(n):
+        if j not in front:
+            assert any(D[i, j] for i in front)
+
+
+# ---------------------------------------------------------------------------
+# hypervolume: monotone under insertion, invariant to dominated points
+# ---------------------------------------------------------------------------
+@given(seed=seeds, n=sizes)
+@settings(max_examples=40, deadline=None)
+def test_hypervolume_monotone_under_insertion(seed, n):
+    pts = _cloud(seed, n, 2)
+    ref = (1.25, 1.25)
+    hv = hypervolume_2d(pts[:-1], ref) if n > 1 else 0.0
+    assert hypervolume_2d(pts, ref) >= hv - 1e-12
+    # and bounded by the whole dominated box
+    assert hypervolume_2d(pts, ref) <= ref[0] * ref[1] + 1e-12
+
+
+@given(seed=seeds, n=sizes)
+@settings(max_examples=40, deadline=None)
+def test_hypervolume_invariant_to_dominated_points(seed, n):
+    rng = np.random.default_rng(seed)
+    pts = _cloud(seed, n, 2)
+    ref = (1.5, 1.5)
+    hv = hypervolume_2d(pts, ref)
+    # append points dominated by existing ones: hv must not move
+    base = pts[rng.integers(0, n, size=5)]
+    dominated = base + rng.uniform(1e-3, 0.5, size=base.shape)
+    assert hypervolume_2d(np.vstack([pts, dominated]), ref) \
+        == pytest.approx(hv, rel=1e-12, abs=1e-12)
+    # keeping only the Pareto front changes nothing either
+    front = pts[pareto_front(pts)]
+    assert hypervolume_2d(front, ref) == pytest.approx(hv, rel=1e-12,
+                                                       abs=1e-12)
+
+
+@given(seed=seeds, n=sizes)
+@settings(max_examples=40, deadline=None)
+def test_hypervolume_jit_matches_host(seed, n):
+    pts = _cloud(seed, n, 2, ties=False)
+    ref = (1.25, 1.1)
+    assert float(hypervolume_2d_jit(pts, ref)) \
+        == pytest.approx(hypervolume_2d(pts, ref), rel=1e-5, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# crowding distance: boundary points always carry +inf, invalid rows 0
+# ---------------------------------------------------------------------------
+@given(seed=seeds, n=st.integers(3, 24), k=dims)
+@settings(max_examples=40, deadline=None)
+def test_crowding_distance_boundary_handling(seed, n, k):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, k))                       # distinct w.h.p.
+    valid = rng.random(n) < 0.7
+    valid[rng.integers(0, n)] = True               # at least one valid row
+    crowd = np.asarray(crowding_distance(jnp.asarray(pts, jnp.float32),
+                                         jnp.asarray(valid)))
+    assert np.all(crowd[~valid] == 0.0)
+    assert np.all(crowd[valid] >= 0.0)
+    vidx = np.flatnonzero(valid)
+    if len(vidx) >= 2:
+        for c in range(k):
+            col = pts[vidx, c]
+            assert np.isinf(crowd[vidx[np.argmin(col)]])
+            assert np.isinf(crowd[vidx[np.argmax(col)]])
+    else:
+        assert np.isinf(crowd[vidx[0]])            # lone point is boundary

@@ -1,0 +1,86 @@
+"""Golden-value regression tests freezing ``evaluate_system``'s 4-metric
+vector (``METRIC_KEYS``) for one fixed, hand-constructed design on preset
+workload graphs.
+
+The perf/energy/cost models are the substrate every optimizer, front
+explorer and benchmark ranks on — a silent drift in any of them would
+invalidate cached archives and every published front.  These tests pin the
+absolute numbers (within a float32 tolerance), so a model change must
+consciously update the golden table (and with it, bump/flush the explore
+caches) rather than slip through.
+
+The design is built from constants only (no PRNG), so the values are
+independent of jax's random-bit generation."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as C
+from repro.core.encoding import feasibility_penalty
+from repro.core.evaluate import evaluate_system
+from repro.core.optimizer import METRIC_KEYS, metric_stack
+from repro.core.workload import MAX_LOOPS
+
+
+def _fixed_design(spec):
+    """A deterministic, feasible design: 4x4 PE arrays, 2x2 cores, 2
+    chiplets per workload, identity loop orders, unit tiles, no pipeline,
+    passive interposer, mesh network, identity placement."""
+    W, CH, L = spec.W, spec.CH, MAX_LOOPS
+    return dict(
+        shape=jnp.asarray(np.tile([4, 4, 2, 2, 1, 2], (W, 1)), jnp.int32),
+        spatial=jnp.zeros((W, 6), jnp.int32),
+        order=jnp.asarray(np.tile(np.arange(L, dtype=np.int32), (W, 3, 1))),
+        tiling=jnp.ones((W, 2, L), jnp.int32),
+        pipe=jnp.full((W,), L, jnp.int32),          # L == not pipelined
+        logB=jnp.asarray(0, jnp.int32),
+        packaging=jnp.asarray(1, jnp.int32),        # passive interposer
+        family=jnp.asarray(2, jnp.int32),           # mesh
+        placement=jnp.asarray(np.arange(W * CH, dtype=np.int32)))
+
+
+def _graph(name):
+    if name == "att2":
+        return C.presets.bert_mms()["att2"]
+    if name == "res2":
+        return C.presets.resnet_convs()["res2"]
+    return C.presets.transformer_block()
+
+
+# (latency_ns, energy_pj, cost_usd, area_mm2) under DEFAULT_TECH — update
+# ONLY on a deliberate model change, never to quiet an unexpected diff.
+GOLDEN = {
+    "att2": (92995704.0, 20249282560.0,
+             9.310935020446777, 3.136559009552002),
+    "res2": (1272764416.0, 278478028800.0,
+             9.310935020446777, 3.136559009552002),
+    "transformer_block": (3324772864.0, 459914838016.0,
+                          26.559057235717773, 15.82420825958252),
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_metric_vector_matches_golden(name):
+    spec = C.SystemSpec.build(_graph(name), ch_max=2)
+    design = _fixed_design(spec)
+    metrics = evaluate_system(spec, design)
+    got = np.asarray(metric_stack(metrics), np.float64)
+    want = np.asarray(GOLDEN[name], np.float64)
+    # float32 pipeline: 1e-4 relative absorbs benign reassociation while
+    # still catching any real model drift (>0.01%)
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               err_msg=f"METRIC_KEYS={METRIC_KEYS}")
+    # the golden design must stay feasible — otherwise penalties, not the
+    # models, would be what these numbers pin
+    space = C.DesignSpace(spec)
+    assert float(feasibility_penalty(space, design, metrics)) \
+        == pytest.approx(1.0)
+
+
+def test_metric_stack_order_is_canonical():
+    """The golden vectors above are only meaningful while METRIC_KEYS
+    keeps its canonical order — freeze that too."""
+    assert METRIC_KEYS == ("latency_ns", "energy_pj", "cost_usd",
+                           "area_mm2")
