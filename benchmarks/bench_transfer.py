@@ -1,0 +1,112 @@
+"""Cross-workload transfer benchmark: warm-starting a *held-out* library
+graph from the migrated fronts of its nearest cached specs must beat a
+cold start — hypervolume-at-budget, exact-spend methodology.
+
+Scenario (``repro.core.presets.workload_library``): the service first
+explores two attention-block graphs (qwen2-72b, internlm2-1.8b), then
+queries the held-out qwen2.5-32b attention block it has never seen.
+
+Arms (same PRNG key, same pow2 segmenting, ``BudgetPolicy(adaptive=False)``
+so every arm spends EXACTLY its budget — the ``bench_explore`` adaptive-arm
+methodology):
+
+* ``cold``     — ``transfer=True`` against an EMPTY cache: no neighbor
+  exists, so the population is seeded by the ``balanced_init`` fallback and
+  spends the FULL budget ``B``.
+* ``transfer`` — ``transfer=True`` against the populated cache: the
+  population is seeded from the neighbors' migrated fronts and spends only
+  ``B/2`` (<= the 60%-of-budget acceptance bound).
+
+Gate: the transferred run's final archive-projected hypervolume must reach
+the cold run's, at half its evaluation spend, seeded from >= 1 neighbor.
+
+Timings are measured live; both cache directories are wiped up front so
+every arm is genuinely cold on disk.
+"""
+
+from __future__ import annotations
+
+import shutil
+import time
+
+import jax
+
+import repro.core as C
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import BudgetPolicy, ExplorationService
+
+from .common import ARTIFACTS, QUICK
+
+OBJECTIVES = ("latency_ns", "cost_usd")
+# bounded space (<= 2x2 core / 1x2 chiplet arrays) so the budgets below can
+# actually converge the front — the regime where a head start is measurable
+SPACE_KW = dict(max_shape=(8, 8, 2, 2, 1, 2))
+CH_MAX = 2
+NSGA = NSGAConfig(pop=32, immigrants=0.0, mutations=1)
+POLICY = BudgetPolicy(adaptive=False, reallocate=False)
+KEY = 42
+
+NEIGHBORS = ("attn_qwen2_72b", "attn_internlm2")
+HELD_OUT = "attn_qwen2_5_32b"
+
+
+def _service(tag: str) -> ExplorationService:
+    d = ARTIFACTS / f"transfer_cache_{tag}"
+    if d.exists():
+        shutil.rmtree(d)                     # every arm starts cold on disk
+    return ExplorationService(cache_dir=d, nsga=NSGA, policy=POLICY)
+
+
+def _explore(svc, graph, budget):
+    t0 = time.perf_counter()
+    res = svc.explore(graph, OBJECTIVES, budget=budget, ch_max=CH_MAX,
+                      space_kwargs=SPACE_KW, transfer=True,
+                      key=jax.random.PRNGKey(KEY))
+    return res, time.perf_counter() - t0
+
+
+def run(quick: bool = True):
+    lib = C.presets.workload_library()
+    budget = 1024 if QUICK else 4096         # pow2 x pop => exact spends
+
+    # --- cold arm: empty cache, balanced_init fallback, full budget -------
+    svc_cold = _service("cold")
+    cold, t_cold = _explore(svc_cold, lib[HELD_OUT], budget)
+    assert not cold.from_cache and cold.transferred_from == ()
+    assert cold.n_transfer_seeds >= 1        # the balanced_init seed
+    hv_cold = float(cold.trace.archive_hv[-1, 0])
+
+    # --- transfer arm: neighbors cached first, half budget ----------------
+    svc = _service("warm")
+    t_pop = 0.0
+    for name in NEIGHBORS:
+        _, dt = _explore(svc, lib[name], budget)
+        t_pop += dt
+    warm, t_warm = _explore(svc, lib[HELD_OUT], budget // 2)
+    assert not warm.from_cache
+    hv_warm = float(warm.trace.archive_hv[-1, 0])
+
+    ev_frac = warm.n_evals_run / max(cold.n_evals_run, 1)
+    ok = (hv_warm >= hv_cold and ev_frac <= 0.60
+          and len(warm.transferred_from) >= 1)
+    # the acceptance gate is ASSERTED, not just printed — a transfer
+    # regression must fail the CI smoke, not merely annotate a CSV row
+    assert ok, (f"transfer gate failed: hv_warm={hv_warm:.6g} vs "
+                f"hv_cold={hv_cold:.6g}, evals_frac={ev_frac:.2f}, "
+                f"neighbors={len(warm.transferred_from)}")
+    return [
+        {"name": "transfer/neighbor_populate", "us_per_call": t_pop * 1e6,
+         "derived": f"graphs={len(NEIGHBORS)} budget={budget}"},
+        {"name": "transfer/cold_arm", "us_per_call": t_cold * 1e6,
+         "derived": (f"evals={cold.n_evals_run} hv={hv_cold:.6g} "
+                     f"seeds={cold.n_transfer_seeds} (balanced_init)")},
+        {"name": "transfer/warm_arm", "us_per_call": t_warm * 1e6,
+         "derived": (f"evals={warm.n_evals_run} hv={hv_warm:.6g} "
+                     f"seeds={warm.n_transfer_seeds} "
+                     f"neighbors={len(warm.transferred_from)}")},
+        {"name": "transfer/gate", "us_per_call": 0,
+         "derived": (f"hv_ratio={hv_warm / max(hv_cold, 1e-12):.4f} "
+                     f"evals_frac={ev_frac:.2f} "
+                     f"({'PASS' if ok else 'FAIL'} hv>=cold & <=0.60 "
+                     f"& >=1 neighbor)")},
+    ]

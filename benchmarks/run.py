@@ -10,8 +10,8 @@ REPRO_BENCH_FULL=1 for the bigger search budgets) to recompute.
 import sys
 
 from . import (bench_validation, bench_cost_fig3, bench_comparison,
-               bench_codesign, bench_pareto, bench_explore, bench_tt,
-               bench_roofline, bench_autoshard, bench_kernels)
+               bench_codesign, bench_pareto, bench_explore, bench_transfer,
+               bench_tt, bench_roofline, bench_autoshard, bench_kernels)
 from .common import QUICK, emit
 
 MODULES = {
@@ -21,6 +21,7 @@ MODULES = {
     "codesign": bench_codesign,        # Fig. 8 ladder
     "pareto": bench_pareto,            # Fig. 9
     "explore": bench_explore,          # repro.explore front + cache service
+    "transfer": bench_transfer,        # cross-workload transfer warm-starts
     "tt": bench_tt,                    # Fig. 10 case study
     "roofline": bench_roofline,        # dry-run roofline table
     "autoshard": bench_autoshard,      # Level-B advisor

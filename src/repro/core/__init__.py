@@ -17,11 +17,13 @@ from .constants import (DEFAULT_TECH, DEFAULT_TPU, PACKAGING_NAMES,
                         PKG_ACTIVE, PKG_ORGANIC, PKG_PASSIVE, TechConstants,
                         TPUTarget)
 from .workload import (Edge, TensorRef, Workload, WorkloadGraph, contraction,
-                       conv2d, matmul, mttkrp)
+                       conv2d, matmul, mttkrp, workload_features,
+                       workload_signature)
 from .evaluate import SystemSpec, evaluate_system, make_batch_evaluator
 from .encoding import (ALL_FIELDS, ARCH_FIELDS, BO_FIELDS, INTEG_FIELDS,
-                       SA_FIELDS, DesignSpace, balanced_init, mutate,
-                       random_design)
+                       SA_FIELDS, DesignSpace, PortableDesign, SpaceDigest,
+                       balanced_init, from_portable, migrate, mutate,
+                       random_design, repair, space_digest, to_portable)
 from .optimizer import (METRIC_KEYS, OBJ_COST_EDP, OBJ_EDP, OBJ_ENERGY,
                         OBJ_LATENCY, SAConfig, SearchResult, make_sa,
                         optimize, pareto_front, two_stage_optimize)

@@ -25,7 +25,7 @@ import numpy as np
 
 from .encoding import (ALL_FIELDS, ARCH_FIELDS, BO_FIELDS, INTEG_FIELDS,
                        SA_FIELDS, DesignSpace, feasibility_penalty, mutate,
-                       random_design)
+                       random_design, repair)
 from .evaluate import SystemSpec, evaluate_system
 from .network import N_FAMILIES
 
@@ -299,11 +299,20 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
              n_init: int = 8, n_iter: int = 24,
              sa: SAConfig = SAConfig(), tech=None,
              init_design: Optional[Dict] = None,
+             seed_designs: Optional[Sequence[Dict]] = None,
              archive=None) -> SearchResult:
     """Nested BO(low-dim) x SA(high-dim) search (paper Fig. 6b).
 
     Setting ``bo_fields=()`` degenerates to pure SA over ``sa_fields`` —
     used by the Fig.-8 ablation ladder and the baseline mapping searches.
+
+    ``seed_designs`` (e.g. a transferred population migrated out of a
+    neighbor spec's archive via ``encoding.migrate``) replaces the leading
+    random restarts of the init phase; each seed is ``repair``-ed into
+    this space's feasible set first.  ``init_design`` keeps its historic
+    slot-0 meaning and precedes any seeds.  At most ``n_init`` entries are
+    consumed (one SA refinement each) — pass a larger ``n_init`` to spend
+    budget on a bigger transferred population.
 
     ``archive`` (a ``repro.explore.archive.ParetoArchive``) optionally
     records every SA-refined design with its raw metric vector, so
@@ -319,7 +328,9 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
 
     X, Y, designs = [], [], []
     history = []
-    base = init_design or random_design(jax.random.PRNGKey(int(rng.integers(2**31))), space)
+    inits = ([] if init_design is None else [init_design]) + [
+        {k: jnp.asarray(v) for k, v in repair(d, space).items()}
+        for d in (seed_designs or [])]
     metrics_fn = jax.jit(lambda d: evaluate_system(spec, d, tech))
 
     def eval_point(d0, i):
@@ -332,8 +343,8 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
     for i in range(n_init):
         d0 = random_design(jax.random.PRNGKey(int(rng.integers(2 ** 31))),
                            space)
-        if init_design is not None and i == 0:
-            d0 = init_design
+        if i < len(inits):
+            d0 = inits[i]
         db, ob = eval_point(d0, i)
         designs.append(db)
         Y.append(ob)
@@ -397,7 +408,9 @@ from ..explore.archive import (ConvergenceTrace,  # noqa: E402  (canonical)
 def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
                        n_candidates: int = 3,
                        sa: SAConfig = SAConfig(steps=250, chains=4),
-                       tech=None, archive=None) -> SearchResult:
+                       tech=None, archive=None,
+                       seed_designs: Optional[Sequence[Dict]] = None
+                       ) -> SearchResult:
     """Stage 1 (architecture): search arch fields under several objective
     scalarizations, keep the Pareto-optimal candidates over
     (latency, energy, area).  Stage 2 (integration): for each kept
@@ -406,7 +419,9 @@ def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
 
     Both stages run through the same evaluation/objective path as the
     ``repro.explore`` front explorer (``log_metric_stack`` + penalty), and
-    an optional ``archive`` records every refined candidate."""
+    an optional ``archive`` records every refined candidate.
+    ``seed_designs`` (a transferred population) warm-starts every stage-1
+    scalarization's init phase."""
     from .constants import DEFAULT_TECH
     tech = tech or DEFAULT_TECH
     keys = jax.random.split(key, 8)
@@ -418,7 +433,8 @@ def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
         r = optimize(spec, space, keys[i], weights=w,
                      bo_fields=("shape", "spatial"),
                      sa_fields=("order", "tiling", "pipe"),
-                     n_init=4, n_iter=6, sa=sa, tech=tech, archive=archive)
+                     n_init=4, n_iter=6, sa=sa, tech=tech, archive=archive,
+                     seed_designs=seed_designs)
         cands.append(r.design)
         m = r.metrics
         objs.append([float(m["latency_ns"]), float(m["energy_pj"]),

@@ -7,6 +7,10 @@
 * transformer_block — Fig. 4a: 2 heads = 5 matmuls with the 0->2, 1->3,
   2->4, 3->4 dependency structure, pipelineable across chiplets.
 * tt_chain  — Fig. 10: tensor-train contraction chain C23 -> C33 -> C43 -> C52.
+* workload_library — ~8 workload graphs *derived from the registered
+  ``repro.configs`` architectures* (attention blocks, MLP stacks, conv
+  chains, scan-style contraction chains): the scenario-diverse library the
+  cross-spec transfer subsystem is exercised on.
 """
 
 from __future__ import annotations
@@ -93,3 +97,102 @@ def validation_suite() -> Dict[str, WorkloadGraph]:
 def mttkrp_example(i: int = 256, j: int = 64, k: int = 128,
                    l: int = 128) -> WorkloadGraph:
     return WorkloadGraph([mttkrp("mttkrp", i, j, k, l)], [])
+
+
+# ---------------------------------------------------------------------------
+# model-derived workload library (cross-workload transfer scenarios)
+# ---------------------------------------------------------------------------
+def attention_block(cfg, seq: int = 256) -> WorkloadGraph:
+    """One self-attention block of a registered architecture: QKV
+    projection -> per-head QK^T -> scores x V -> output projection, chained
+    producer->consumer (per-head matmuls at head_dim width)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    qkv_cols = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    wls = [
+        matmul("qkv_proj", seq, qkv_cols, d),
+        matmul("qk_scores", seq, seq, hd),
+        matmul("av", seq, hd, seq),
+        matmul("out_proj", seq, d, cfg.n_heads * hd),
+    ]
+    edges = [Edge(0, 1, "C", "A"), Edge(1, 2, "C", "A"), Edge(2, 3, "C", "A")]
+    return WorkloadGraph(wls, edges)
+
+
+def mlp_stack(cfg, seq: int = 256) -> WorkloadGraph:
+    """Gated MLP of a registered architecture (MoE archs use the per-expert
+    width): gate and up projections feeding the down projection."""
+    d = cfg.d_model
+    ff = cfg.expert_ff if cfg.n_experts > 0 else cfg.d_ff
+    wls = [
+        matmul("gate_proj", seq, ff, d),
+        matmul("up_proj", seq, ff, d),
+        matmul("down_proj", seq, d, ff),
+    ]
+    edges = [Edge(0, 2, "C", "A"), Edge(1, 2, "C", "B")]
+    return WorkloadGraph(wls, edges)
+
+
+def conv_frontend(cfg, frames: int = 1500, mel: int = 80) -> WorkloadGraph:
+    """Whisper-style audio conv frontend: two stride-adjacent k=3 conv1d
+    layers (encoded as 7-loop conv2d with a unit Q axis)."""
+    d = cfg.d_model
+    c1 = conv2d("conv1", N=1, K=d, C=mel, P=frames, Q=1, R=3, S=1)
+    c2 = conv2d("conv2", N=1, K=d, C=d, P=frames // 2, Q=1, R=3, S=1)
+    return WorkloadGraph([c1, c2], [Edge(0, 1, "O", "I")])
+
+
+def scan_chain(cfg, seq: int = 512) -> WorkloadGraph:
+    """Mamba-style selective-scan dataflow as a contraction chain:
+    in-projection -> state contraction -> output projection (the tensor
+    sizes flow (t, d_inner) -> (t, n_state) -> (t, d_model))."""
+    d, di, n = cfg.d_model, cfg.d_inner, max(cfg.ssm_state, 1)
+    c_in = contraction("in_proj", {"t": seq}, {"di": di}, {"d": d})
+    c_h = contraction("state", {"t": seq}, {"n": n}, {"di": di})
+    c_out = contraction("out_proj", {"t": seq}, {"dm": d}, {"n": n})
+    return WorkloadGraph([c_in, c_h, c_out],
+                         [Edge(0, 1, "O", "A"), Edge(1, 2, "O", "A")])
+
+
+def hybrid_block(cfg, seq: int = 256) -> WorkloadGraph:
+    """Hymba-style parallel heads: sliding-window attention (scores over a
+    ``window`` span) beside an SSM state contraction, both feeding one
+    output projection."""
+    d, hd = cfg.d_model, cfg.head_dim
+    w = cfg.window or seq
+    di, n = cfg.d_inner, max(cfg.ssm_state, 1)
+    wls = [
+        matmul("win_scores", seq, min(w, seq), hd),
+        matmul("win_av", seq, hd, min(w, seq)),
+        contraction("ssm", {"t": seq}, {"n": n}, {"di": di}),
+        matmul("out_proj", seq, d, d),
+    ]
+    edges = [Edge(0, 1, "C", "A"), Edge(1, 3, "C", "A"),
+             Edge(2, 3, "O", "B")]
+    return WorkloadGraph(wls, edges)
+
+
+def workload_library() -> Dict[str, WorkloadGraph]:
+    """Scenario-diverse workload graphs derived from the registered
+    ``repro.configs`` architectures — attention blocks, MLP stacks, a conv
+    chain, scan-style contraction chains.  Genuinely different graphs (not
+    toy variants), so cross-spec transfer is exercised for real: similar
+    pairs exist (the three attention blocks; the two MLPs) alongside
+    structurally alien ones (conv vs. scan vs. attention)."""
+    from repro.configs import get_config      # lazy: keep repro.core light
+    qwen72 = get_config("qwen2_72b")
+    qwen32 = get_config("qwen2_5_32b")
+    intern = get_config("internlm2_1_8b")
+    deepseek = get_config("deepseek_v2_236b")
+    whisper = get_config("whisper_tiny")
+    mamba = get_config("falcon_mamba_7b")
+    hymba = get_config("hymba_1_5b")
+    return {
+        "attn_qwen2_72b": attention_block(qwen72),
+        "attn_qwen2_5_32b": attention_block(qwen32),
+        "attn_internlm2": attention_block(intern),
+        "mlp_qwen2_72b": mlp_stack(qwen72),
+        "mlp_deepseek_v2": mlp_stack(deepseek),
+        "conv_whisper": conv_frontend(whisper),
+        "scan_falcon_mamba": scan_chain(mamba),
+        "hybrid_hymba": hybrid_block(hymba),
+    }

@@ -17,6 +17,7 @@ the data-dependency set Omega and the communication graph).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -268,3 +269,99 @@ class WorkloadGraph:
         if len(order) != self.n:
             raise ValueError("workload graph has a cycle")
         return order
+
+    def depth(self) -> int:
+        """Longest producer->consumer chain length (nodes on the critical
+        dependency path; 1 for an edgeless graph)."""
+        dist = [1] * self.n
+        for u in self.topo_order():
+            for e in self.edges:
+                if e.src == u:
+                    dist[e.dst] = max(dist[e.dst], dist[u] + 1)
+        return max(dist) if dist else 0
+
+
+# ---------------------------------------------------------------------------
+# workload identity + feature embeddings (the cross-spec transfer substrate)
+# ---------------------------------------------------------------------------
+# Per-workload feature row layout (all sizes log2-scaled so magnitudes are
+# comparable across wildly different problem sizes):
+#   [0:L)       loop bounds in declared order, padded with 1
+#   [L:2L)      loop bounds sorted descending (permutation-invariant view)
+#   [2L:2L+T)   tensor sizes sorted descending, padded with 1
+#   then: n_loops, n_tensors, macs, output size, total footprint,
+#         in-degree, out-degree
+WL_FEATURE_DIM = 2 * MAX_LOOPS + MAX_TENSORS + 7
+# graph summary: n workloads, n edges, DAG depth, external inputs, final
+# outputs, total macs (log2), total producer->consumer elements (log2)
+GRAPH_SUMMARY_DIM = 7
+# workload_features(graph) = [mean rows | max rows | graph summary]
+WL_EMBED_DIM = 2 * WL_FEATURE_DIM + GRAPH_SUMMARY_DIM
+
+
+def workload_signature(w: Workload) -> str:
+    """Content hash of one workload's *structure*: padded loop bounds and
+    dim-group incidence, NOT its name.  Two workloads with equal signatures
+    are the same tensor program, so per-workload design records transfer
+    between them verbatim (``encoding.PortableDesign``)."""
+    arr = w.to_arrays()
+    h = hashlib.sha256()
+    h.update(repr(int(w.flops_per_instance)).encode())
+    for k in sorted(arr):
+        a = np.asarray(arr[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _log2(x) -> np.ndarray:
+    return np.log2(np.maximum(np.asarray(x, np.float64), 1.0))
+
+
+def workload_feature_row(w: Workload, in_deg: int = 0,
+                         out_deg: int = 0) -> np.ndarray:
+    """(WL_FEATURE_DIM,) numeric fingerprint of one workload — what
+    nearest-record matching ranks on when no exact signature match exists."""
+    bounds = np.ones(MAX_LOOPS, np.float64)
+    for i, (_, b) in enumerate(w.loops):
+        bounds[i] = b
+    tsizes = np.ones(MAX_TENSORS, np.float64)
+    for i, t in enumerate(w.tensors):
+        tsizes[i] = w.tensor_size(t.name)
+    return np.concatenate([
+        _log2(bounds),
+        np.sort(_log2(bounds))[::-1],
+        np.sort(_log2(tsizes))[::-1],
+        [float(len(w.loops)), float(len(w.tensors)),
+         float(_log2(w.macs)), float(_log2(w.tensor_size(w.output().name))),
+         float(_log2(tsizes.sum())), float(in_deg), float(out_deg)],
+    ])
+
+
+def graph_feature_rows(graph: WorkloadGraph) -> np.ndarray:
+    """(n, WL_FEATURE_DIM) per-workload feature matrix with edge degrees."""
+    indeg = np.zeros(graph.n, np.int64)
+    outdeg = np.zeros(graph.n, np.int64)
+    for e in graph.edges:
+        outdeg[e.src] += 1
+        indeg[e.dst] += 1
+    return np.stack([workload_feature_row(w, int(indeg[i]), int(outdeg[i]))
+                     for i, w in enumerate(graph.workloads)])
+
+
+def workload_features(graph: WorkloadGraph) -> np.ndarray:
+    """Fixed-dimension (WL_EMBED_DIM,) embedding of a whole workload graph:
+    mean- and max-pooled per-workload rows plus a graph-structure summary.
+    Graphs of any size land in ONE vector space, so the explore cache can
+    rank cached problems by similarity (``ArchiveManifest.nearest``) and
+    warm-start new graphs from their neighbors' fronts."""
+    rows = graph_feature_rows(graph)
+    transfer = sum(graph.transfer_elems(e) for e in graph.edges)
+    summary = np.asarray([
+        float(graph.n), float(len(graph.edges)), float(graph.depth()),
+        float(len(graph.external_inputs())), float(len(graph.final_outputs())),
+        float(_log2(sum(w.macs for w in graph.workloads))),
+        float(_log2(transfer)),
+    ])
+    return np.concatenate([rows.mean(axis=0), rows.max(axis=0), summary])

@@ -19,8 +19,9 @@ back through ``repro.explore``.
 
 import importlib
 
-from .archive import (BIG, HV_LOG_REF, ConvergenceTrace,  # noqa: F401
-                      ParetoArchive, crowding_distance, dominance_counts,
+from .archive import (BIG, HV_LOG_REF, MANIFEST_NAME,  # noqa: F401
+                      ArchiveManifest, ConvergenceTrace, ParetoArchive,
+                      atomic_savez, crowding_distance, dominance_counts,
                       dominates, hypervolume_2d, hypervolume_2d_jit,
                       objective_pairs, pareto_front, spec_space_key)
 
@@ -36,7 +37,7 @@ _LAZY = {
 __all__ = ["ParetoArchive", "pareto_front", "dominates", "dominance_counts",
            "crowding_distance", "hypervolume_2d", "hypervolume_2d_jit",
            "objective_pairs", "spec_space_key", "ConvergenceTrace",
-           "HV_LOG_REF",
+           "HV_LOG_REF", "ArchiveManifest", "MANIFEST_NAME", "atomic_savez",
            *sorted(k for k in _LAZY if k not in ("nsga", "service"))]
 
 

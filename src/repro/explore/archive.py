@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
+import warnings
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -265,6 +267,26 @@ class ConvergenceTrace:
 
 
 # ---------------------------------------------------------------------------
+# crash-safe npz persistence (archives + the cross-spec manifest)
+# ---------------------------------------------------------------------------
+def atomic_savez(path, **arrays) -> Path:
+    """``np.savez_compressed`` through a same-directory temp file and an
+    atomic ``os.replace``: a crash or kill mid-write leaves the previous
+    file (or nothing) in place, never a truncated npz.  The temp file is
+    opened explicitly so numpy cannot append a second ``.npz`` suffix."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(f".{path.name}.tmp{os.getpid()}")
+    try:
+        with open(tmp, "wb") as f:
+            np.savez_compressed(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        tmp.unlink(missing_ok=True)
+    return path
+
+
+# ---------------------------------------------------------------------------
 # jit-compatible archive update
 # ---------------------------------------------------------------------------
 def _sanitize(objs):
@@ -370,19 +392,16 @@ class ParetoArchive:
 
     # ---- persistence -------------------------------------------------------
     def save(self, path) -> Path:
-        path = Path(path)
-        path.parent.mkdir(parents=True, exist_ok=True)
         meta = dict(capacity=self.capacity, n_obj=self.n_obj,
                     n_evals=self.n_evals, searched=list(self.searched),
                     obj_keys=list(self.obj_keys or ()),
                     budget_covered=self.budget_covered,
                     trace_summary=self.trace_summary)
-        np.savez_compressed(
+        return atomic_savez(
             path, __meta=np.frombuffer(
                 json.dumps(meta).encode(), dtype=np.uint8),
             objs=self.objs, valid=self.valid,
             **{f"d_{k}": v for k, v in self.designs.items()})
-        return path
 
     @classmethod
     def load(cls, path) -> "ParetoArchive":
@@ -431,3 +450,114 @@ def spec_space_key(spec, space, extra=None) -> str:
                    int(space.fixed_family),
                    bool(space.allow_pipeline))).encode())
     return h.hexdigest()[:20]
+
+
+# ---------------------------------------------------------------------------
+# cross-spec archive manifest: the nearest-neighbor index over every cached
+# exploration problem, keyed by workload-feature embedding
+# ---------------------------------------------------------------------------
+MANIFEST_NAME = "manifest.npz"
+
+
+class ArchiveManifest:
+    """Index of an explore cache directory: one entry per archived problem
+    key, carrying the problem's workload-feature embedding (fixed-dim; see
+    ``repro.core.workload.workload_features``), its padded dims, freshness
+    counters, and an opaque JSON-portable *space digest* (everything
+    ``repro.core.encoding.migrate`` needs to move designs OUT of that
+    archive without reconstructing the source graph).
+
+    ``nearest(embedding, k)`` ranks cached problems by Euclidean distance
+    in embedding space — the cross-workload transfer lookup.  Persistence
+    is a single atomically-written npz; a damaged or truncated manifest is
+    discarded with a warning, never fatal (a cache index is disposable).
+    This module stays free of ``repro.core`` imports: digests are stored
+    and returned as plain dicts."""
+
+    def __init__(self, path=None):
+        self.path = Path(path) if path is not None else None
+        self.entries: Dict[str, Dict] = {}
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def update(self, key: str, embedding, dims: Tuple[int, int, int],
+               n_evals: int, budget_covered: int,
+               searched: Sequence[str], digest: Optional[Dict] = None):
+        """Insert or refresh one problem's entry (digest kept from the
+        previous entry when not re-supplied)."""
+        prev = self.entries.get(key, {})
+        self.entries[key] = dict(
+            embedding=np.asarray(embedding, np.float64),
+            dims=tuple(int(v) for v in dims),
+            n_evals=int(n_evals), budget_covered=int(budget_covered),
+            searched=tuple(searched),
+            digest=digest if digest is not None else prev.get("digest"))
+        return self
+
+    def nearest(self, embedding, k: int = 3,
+                exclude: Sequence[str] = ()) -> List[Tuple[str, float]]:
+        """The ``k`` cached problems closest to ``embedding`` (Euclidean,
+        ascending), skipping excluded keys, empty archives and entries
+        whose embedding dimension does not match the query's."""
+        q = np.asarray(embedding, np.float64).ravel()
+        out = []
+        for key, e in self.entries.items():
+            if key in exclude or e["n_evals"] <= 0:
+                continue
+            emb = e["embedding"]
+            if emb.shape != q.shape:
+                continue
+            out.append((key, float(np.linalg.norm(emb - q))))
+        out.sort(key=lambda t: (t[1], t[0]))
+        return out[:max(int(k), 0)]
+
+    # ---- persistence -------------------------------------------------------
+    def save(self, path=None) -> Path:
+        path = Path(path) if path is not None else self.path
+        if path is None:
+            raise ValueError("manifest has no path")
+        keys = sorted(self.entries)
+        meta = dict(
+            version=1,
+            keys=keys,
+            entries={k: dict(
+                dims=list(self.entries[k]["dims"]),
+                n_evals=self.entries[k]["n_evals"],
+                budget_covered=self.entries[k]["budget_covered"],
+                searched=list(self.entries[k]["searched"]),
+                digest=self.entries[k]["digest"]) for k in keys})
+        emb = (np.stack([self.entries[k]["embedding"] for k in keys])
+               if keys else np.zeros((0, 0)))
+        return atomic_savez(
+            path, __meta=np.frombuffer(json.dumps(meta).encode(),
+                                       dtype=np.uint8),
+            embeddings=emb)
+
+    @classmethod
+    def load(cls, path) -> "ArchiveManifest":
+        """Load a manifest, tolerating absence and damage: anything
+        unreadable yields an EMPTY manifest (with a warning) so one bad
+        write can never take the exploration service down."""
+        path = Path(path)
+        m = cls(path)
+        if not path.exists():
+            return m
+        try:
+            with np.load(path) as z:
+                meta = json.loads(bytes(z["__meta"]).decode())
+                emb = np.asarray(z["embeddings"], np.float64)
+            for i, k in enumerate(meta["keys"]):
+                e = meta["entries"][k]
+                m.entries[k] = dict(
+                    embedding=emb[i],
+                    dims=tuple(e["dims"]),
+                    n_evals=int(e["n_evals"]),
+                    budget_covered=int(e["budget_covered"]),
+                    searched=tuple(e["searched"]),
+                    digest=e.get("digest"))
+        except Exception as exc:        # disposable index: never fatal
+            warnings.warn(f"discarding unreadable explore manifest "
+                          f"{path}: {exc}")
+            m.entries = {}
+        return m

@@ -48,6 +48,33 @@ class NSGAConfig:
     mutations: int = 2            # chained encoding.mutate moves per child
     immigrants: float = 0.125     # fraction of children replaced by fresh
     #                               random designs (keeps the front spread)
+    pmx_placement: bool = False   # placement crossover MIXES both parents'
+    #                               permutations (PMX) instead of taking one
+    #                               wholesale — permutation validity kept
+
+
+def pmx(key, a, b):
+    """Partially-mapped crossover of two permutations (jit/vmap-safe).
+
+    A random segment ``[lo, hi)`` of ``b`` is worked into a child that
+    otherwise inherits ``a``: walking the segment, ``b[k]`` is swapped into
+    position ``k`` (the classic in-place PMX formulation), so the result
+    is always a valid permutation carrying ``b``'s segment and ``a``'s
+    relative order elsewhere."""
+    n = a.shape[0]
+    k1, k2 = jax.random.split(jnp.asarray(key))
+    i = jax.random.randint(k1, (), 0, n)
+    j = jax.random.randint(k2, (), 0, n + 1)
+    lo, hi = jnp.minimum(i, j), jnp.maximum(i, j)
+
+    def body(k, child):
+        def swap(c):
+            v = b[k]
+            pos = jnp.argmax(c == v)
+            return c.at[pos].set(c[k]).at[k].set(v)
+        return jax.lax.cond((k >= lo) & (k < hi), swap, lambda c: c, child)
+
+    return jax.lax.fori_loop(0, n, body, a)
 
 
 # compiled runners keyed like the SA cache: padded dims + static config
@@ -135,11 +162,17 @@ def _build_run(space, dims, idx, cfg, tech):
         return jax.vmap(lambda d: eval_one(d, arr))(pop)
 
     def crossover(key, a, b):
-        ks = jax.random.split(key, len(_DESIGN_KEYS))
+        ks = jax.random.split(key, len(_DESIGN_KEYS) + 1)
         out = {}
         for i, f in enumerate(_DESIGN_KEYS):
             take = jax.random.uniform(ks[i]) < cfg.crossover_rate
-            out[f] = jnp.where(take, b[f], a[f])
+            if f == "placement" and cfg.pmx_placement:
+                # PMX keeps the child a valid permutation while actually
+                # mixing both parents' placements (whole-field take can
+                # only copy one of them)
+                out[f] = jnp.where(take, pmx(ks[-1], a[f], b[f]), a[f])
+            else:
+                out[f] = jnp.where(take, b[f], a[f])
         return out
 
     n_imm = int(round(N * cfg.immigrants))

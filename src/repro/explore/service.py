@@ -45,12 +45,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.constants import DEFAULT_TECH
-from ..core.encoding import DesignSpace, random_design
+from ..core.encoding import (DesignSpace, balanced_init, migrate,
+                             random_design, repair, space_digest)
 from ..core.evaluate import SystemSpec
 from ..core.optimizer import METRIC_KEYS
-from ..core.workload import WorkloadGraph
-from .archive import (ConvergenceTrace, ParetoArchive, objective_pairs,
-                      pareto_front, spec_space_key)
+from ..core.workload import WorkloadGraph, workload_features
+from .archive import (MANIFEST_NAME, ArchiveManifest, ConvergenceTrace,
+                      ParetoArchive, objective_pairs, pareto_front,
+                      spec_space_key)
 from .nsga import NSGAConfig, make_nsga
 
 # the default archive cache is anchored to the repo root (four levels above
@@ -100,6 +102,9 @@ class ExploreQuery:
     #                                 is willing to pay for (cold)
     ch_max: int = 4
     space_kwargs: Optional[Dict] = None
+    transfer: bool = False          # cold start from migrated fronts of the
+    #                                 nearest cached specs (balanced_init
+    #                                 fallback when no neighbor exists)
 
     def __post_init__(self):
         self.objectives = tuple(self.objectives)
@@ -134,6 +139,10 @@ class ExploreResult:
     #                                 into the budget ledger
     n_evals_realloc: int = 0        # extra evaluations this group received
     #                                 from the batch's banked credit
+    transferred_from: Tuple[str, ...] = ()      # neighbor archive keys whose
+    #                                 migrated fronts seeded this cold run
+    n_transfer_seeds: int = 0       # seed designs injected into the initial
+    #                                 population (migrated or balanced_init)
 
 
 class ExplorationService:
@@ -148,7 +157,8 @@ class ExplorationService:
 
     def __init__(self, cache_dir=None, capacity: int = 256,
                  nsga: NSGAConfig = NSGAConfig(), tech=None,
-                 policy: BudgetPolicy = BudgetPolicy()):
+                 policy: BudgetPolicy = BudgetPolicy(),
+                 transfer_k: int = 3):
         # nsga.generations is not used on the query path — each query's
         # budget sets the scan length (see _refine); the config's pop /
         # fields / crossover / mutation / immigrant knobs apply as given.
@@ -159,8 +169,19 @@ class ExplorationService:
         self.nsga = nsga
         self.tech = tech
         self.policy = policy
+        self.transfer_k = int(transfer_k)
         self.ledger: Dict[str, int] = {}
         self._archives: Dict[str, ParetoArchive] = {}
+        self._manifest: Optional[ArchiveManifest] = None
+
+    @property
+    def manifest(self) -> ArchiveManifest:
+        """The cross-spec index of this cache directory (lazy-loaded;
+        damaged or absent files yield an empty manifest)."""
+        if self._manifest is None:
+            self._manifest = ArchiveManifest.load(
+                self.cache_dir / MANIFEST_NAME)
+        return self._manifest
 
     # ---- cache plumbing ----------------------------------------------------
     def _path(self, key: str) -> Path:
@@ -206,9 +227,9 @@ class ExplorationService:
                 objectives: Sequence[str] = DEFAULT_OBJECTIVES,
                 budget: int = 2048, ch_max: int = 4,
                 space_kwargs: Optional[Dict] = None,
-                key=None) -> ExploreResult:
+                transfer: bool = False, key=None) -> ExploreResult:
         q = ExploreQuery(graph, tuple(objectives), budget, ch_max,
-                         space_kwargs)
+                         space_kwargs, transfer)
         return self.explore_batch([q], key=key)[0]
 
     def explore_batch(self, queries: Sequence[ExploreQuery],
@@ -250,6 +271,7 @@ class ExplorationService:
         cross-group budget reallocation topped the archive up."""
         t0 = time.perf_counter()
         arc = g["arc"] = self.archive_for(g["spec"], g["space"], key=ck)
+        g["embedding"] = workload_features(g["spec"].graph)
         budget = max(q.budget for q in g["queries"])
         union = g["union"] = tuple(
             k for k in METRIC_KEYS
@@ -262,12 +284,23 @@ class ExplorationService:
                 and max(arc.n_evals, arc.budget_covered) >= budget
                 and all(o in arc.searched for o in union))
         g.update(warm=warm, n_run=0, trace=None, plateaued=False,
-                 banked=0, realloc=0)
+                 banked=0, realloc=0, transferred_from=(), n_seeds=0)
         if warm:
+            if ck not in self.manifest.entries:
+                self._update_manifest(ck, g)     # backfill pre-manifest
+                #                                  caches into the index
             g["elapsed"] = time.perf_counter() - t0
             return
+        seeds = None
+        if any(q.transfer for q in g["queries"]) and len(arc) == 0:
+            seeds, srcs = self._transfer_seeds(
+                ck, g["space"], g["embedding"],
+                jax.random.fold_in(key, 0x7e5))
+            g["transferred_from"] = srcs
+            g["n_seeds"] = (int(next(iter(seeds.values())).shape[0])
+                            if seeds else 0)
         n_run, trace, plateaued, banked = self._refine(
-            arc, g["spec"], g["space"], union, budget, key)
+            arc, g["spec"], g["space"], union, budget, key, seeds=seeds)
         arc.searched = tuple(k for k in METRIC_KEYS
                              if k in arc.searched or k in union)
         arc.budget_covered = max(arc.budget_covered, budget)
@@ -277,7 +310,80 @@ class ExplorationService:
                  banked=banked)
         arc.trace_summary = trace.summary()
         self.save(ck)
+        self._update_manifest(ck, g)
         g["elapsed"] = time.perf_counter() - t0
+
+    def _update_manifest(self, ck: str, g: Dict) -> None:
+        """Refresh the cross-spec index entry for one problem (embedding,
+        freshness counters, migration digest) and persist it atomically.
+        Index maintenance must never fail a query."""
+        arc, spec = g["arc"], g["spec"]
+        try:
+            self.manifest.update(
+                ck, embedding=g["embedding"],
+                dims=(spec.W, spec.CH, spec.E),
+                n_evals=arc.n_evals, budget_covered=arc.budget_covered,
+                searched=arc.searched,
+                digest=space_digest(g["space"]).to_json_dict())
+            self.manifest.save()
+        except Exception as e:
+            warnings.warn(f"explore manifest update failed for {ck}: {e}")
+
+    def _transfer_seeds(self, ck: str, space: DesignSpace, embedding,
+                        key) -> Tuple[Optional[Dict], Tuple[str, ...]]:
+        """Seed designs for a cold query: the migrated (and repaired)
+        fronts of the ``transfer_k`` nearest cached problems, best
+        neighbors first, capped at one population.  With no usable
+        neighbor, one repaired ``balanced_init`` design — a cold start is
+        never WORSE off for having asked to transfer."""
+        dst = space_digest(space)
+        cap = max(self.nsga.pop, 1)
+        quota = max(1, cap // max(self.transfer_k, 1))
+        seeds: List[Dict] = []
+        srcs: List[str] = []
+        for nk, _dist in self.manifest.nearest(
+                embedding, k=self.transfer_k, exclude=(ck,)):
+            ent = self.manifest.entries[nk]
+            if ent.get("digest") is None:
+                continue
+            arc = self._archives.get(nk)
+            if arc is None:
+                p = self._path(nk)
+                if not p.exists():
+                    continue
+                try:
+                    arc = ParetoArchive.load(p)
+                except Exception as e:
+                    warnings.warn(
+                        f"skipping unreadable neighbor archive {p}: {e}")
+                    continue
+                self._archives[nk] = arc     # a long-lived service must
+                #                              not re-read the same
+                #                              neighbor npz every query
+            migrated: List[Dict] = []
+            try:
+                designs, objs = arc.front()
+                for i in range(min(len(objs), quota)):
+                    d = {k2: v[i] for k2, v in designs.items()}
+                    migrated.append(migrate(d, ent["digest"], dst))
+            except Exception as e:      # a broken neighbor must never
+                #                         fail the query it was helping;
+                #                         designs migrated before the
+                #                         failure are still good seeds
+                warnings.warn(f"transfer from {nk} failed: {e}")
+            if migrated:                # seeds and telemetry stay
+                #                         consistent: nk is credited iff
+                #                         its designs were injected
+                seeds.extend(migrated)
+                srcs.append(nk)
+            if len(seeds) >= cap:
+                break
+        if not seeds:
+            bi = jax.tree.map(np.asarray, balanced_init(key, space))
+            seeds = [repair(bi, dst)]
+        seeds = seeds[:cap]
+        return ({k2: np.stack([s[k2] for s in seeds])
+                 for k2 in seeds[0]}, tuple(srcs))
 
     def _reallocate(self, groups: Dict[str, Dict], key) -> None:
         """Phase 2: spend the ledger on this batch's under-explored
@@ -310,6 +416,7 @@ class ExplorationService:
                           if g["trace"] is not None else trace)
             arc.trace_summary = g["trace"].summary()
             self.save(ck)
+            self._update_manifest(ck, g)
 
     def _drain_ledger(self, spent: int) -> None:
         for ck in list(self.ledger):
@@ -341,12 +448,15 @@ class ExplorationService:
                 from_cache=g["warm"], n_evals_run=g["n_run"],
                 elapsed_s=elapsed, cache_key=ck,
                 trace=g["trace"], plateaued=g["plateaued"],
-                n_evals_banked=g["banked"], n_evals_realloc=g["realloc"]))
+                n_evals_banked=g["banked"], n_evals_realloc=g["realloc"],
+                transferred_from=g["transferred_from"],
+                n_transfer_seeds=g["n_seeds"]))
         return results
 
     def _refine(self, arc: ParetoArchive, spec: SystemSpec,
                 space: DesignSpace, objectives: Tuple[str, ...],
-                budget: int, key, quantize_down: bool = False
+                budget: int, key, quantize_down: bool = False,
+                seeds: Optional[Dict] = None
                 ) -> Tuple[int, ConvergenceTrace, bool, int]:
         """Spend up to ~``budget`` evaluations improving the archive:
         warm-start the population from the cached front, evolve in scan
@@ -371,6 +481,11 @@ class ExplorationService:
         quantization, guaranteeing the run never spends more than
         ``budget`` — used when spending ledger credit, which must not be
         exceeded.
+
+        ``seeds`` (a stacked numpy design pytree) is injected into segment
+        0's population right behind the archive-front head — the transfer
+        warm-start path.  Later segments carry the evolving population, so
+        a bad seed is selected out after one generation.
         """
         policy = self.policy
         pop = self.nsga.pop
@@ -395,18 +510,30 @@ class ExplorationService:
                     for i, j in objective_pairs(len(objectives))]
         k_init, k_run = jax.random.split(key)
 
-        def seed(filler):
+        def seed(filler, extra=None):
             """Population for the next segment: archive front head (the
-            all-time best designs), ``filler`` tail (fresh random samples
-            for segment 0, then the carried evolving population)."""
+            all-time best designs), then any transfer ``extra`` seeds,
+            ``filler`` tail (fresh random samples for segment 0, then the
+            carried evolving population)."""
             fr_designs, _ = arc.front()
             n_warm = min(len(arc), pop)
-            if not n_warm:
+            n_ext = 0
+            if extra is not None:
+                n_ext = min(int(next(iter(extra.values())).shape[0]),
+                            pop - n_warm)
+            if n_warm + n_ext == 0:
                 return filler
-            return {k: jnp.concatenate(
-                [jnp.asarray(fr_designs[k][:n_warm]),
-                 jnp.asarray(v)[n_warm:]])
-                for k, v in filler.items()}
+
+            def leaf(k, v):
+                parts = []
+                if n_warm:
+                    parts.append(jnp.asarray(fr_designs[k][:n_warm]))
+                if n_ext:
+                    parts.append(jnp.asarray(extra[k][:n_ext]))
+                parts.append(jnp.asarray(v)[n_warm + n_ext:])
+                return jnp.concatenate(parts)
+
+            return {k: leaf(k, v) for k, v in filler.items()}
 
         filler = jax.vmap(lambda k: random_design(k, space))(
             jax.random.split(k_init, pop))
@@ -415,7 +542,8 @@ class ExplorationService:
         streak, plateaued, spent_g = 0, False, 0
         for s in range(n_seg):
             pop_s, _raw, _sel, ev_designs, ev_raw, ev_feas, tr = run(
-                jax.random.fold_in(k_run, s), seed(filler))
+                jax.random.fold_in(k_run, s),
+                seed(filler, seeds if s == 0 else None))
             # archive EVERY evaluation of the segment, not just the
             # survivors — masked to feasible designs so the archive (and
             # every front served from it) never carries a
@@ -476,9 +604,10 @@ def explore(graph: WorkloadGraph,
             objectives: Sequence[str] = DEFAULT_OBJECTIVES,
             budget: int = 2048, ch_max: int = 4,
             space_kwargs: Optional[Dict] = None,
+            transfer: bool = False,
             service: Optional[ExplorationService] = None,
             key=None) -> ExploreResult:
     """One-call front query against the process-wide default service."""
     svc = service or default_service()
     return svc.explore(graph, objectives, budget, ch_max, space_kwargs,
-                       key=key)
+                       transfer=transfer, key=key)

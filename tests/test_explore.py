@@ -17,7 +17,7 @@ from repro.explore.archive import (HV_LOG_REF, ConvergenceTrace,
                                    ParetoArchive, hypervolume_2d,
                                    hypervolume_2d_jit, objective_pairs,
                                    pareto_front, spec_space_key)
-from repro.explore.nsga import NSGAConfig, make_nsga
+from repro.explore.nsga import NSGAConfig, make_nsga, pmx
 from repro.explore.service import (BudgetPolicy, ExplorationService,
                                    ExploreQuery)
 
@@ -281,6 +281,50 @@ def test_nsga_scans_out_convergence_trace():
     logs = np.log(np.maximum(np.asarray(raw, np.float64)[:, [0, 2]], 1e-3))
     hv_host = hypervolume_2d(logs, (HV_LOG_REF, HV_LOG_REF))
     assert t.hypervolume[-1, 0] >= hv_host * (1 - 1e-4)
+
+
+def test_pmx_always_yields_valid_permutations():
+    """The placement crossover must keep children valid permutations for
+    every cut-point draw and any parent pair."""
+    rng = np.random.default_rng(0)
+    for t in range(32):
+        n = int(rng.integers(2, 24))
+        a = jnp.asarray(rng.permutation(n).astype(np.int32))
+        b = jnp.asarray(rng.permutation(n).astype(np.int32))
+        c = np.asarray(pmx(jax.random.PRNGKey(t), a, b))
+        assert sorted(c.tolist()) == list(range(n))
+
+
+def test_pmx_mixes_both_parents():
+    """Unlike whole-field take (child == one parent), PMX produces children
+    carrying genes of BOTH parents for some cut points."""
+    a = jnp.arange(10, dtype=jnp.int32)
+    b = jnp.asarray(np.arange(10)[::-1].copy().astype(np.int32))
+    mixed = 0
+    for t in range(40):
+        c = np.asarray(pmx(jax.random.PRNGKey(t), a, b))
+        if not (np.array_equal(c, np.asarray(a))
+                or np.array_equal(c, np.asarray(b))):
+            mixed += 1
+    assert mixed > 0
+
+
+def test_nsga_pmx_placement_flag():
+    """With ``pmx_placement`` on, the run completes and every evaluated
+    design's placement is still a valid permutation."""
+    _, spec, space = _tiny_problem()
+    cfg = NSGAConfig(pop=8, generations=2, pmx_placement=True,
+                     crossover_rate=1.0)     # force crossover every field
+    run = make_nsga(spec, space, ("latency_ns", "cost_usd"), cfg)
+    pop0 = jax.vmap(lambda k: C.random_design(k, space))(
+        jax.random.split(jax.random.PRNGKey(0), cfg.pop))
+    pop, raw, sel, ev_designs, ev_raw, ev_feas, trace = run(
+        jax.random.PRNGKey(1), pop0)
+    n = space.W * space.CH
+    places = np.asarray(ev_designs["placement"]).reshape(-1, n)
+    for row in places:
+        assert sorted(row.tolist()) == list(range(n))
+    assert np.all(np.isfinite(np.asarray(raw)))
 
 
 # ---------------------------------------------------------------------------

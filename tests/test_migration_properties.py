@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis) for the portable design IR: migration
+round-trips exactly through superset spec spaces, and migrated + repaired
+designs are always feasible under the destination ``DesignSpace`` bounds —
+for arbitrary source designs and arbitrary (source, destination) pairs
+drawn from the model-derived workload library."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+
+import repro.core as C  # noqa: E402
+from repro.core.encoding import migrate, repair, space_digest  # noqa: E402
+
+from test_transfer import assert_design_feasible  # noqa: E402
+
+seeds = st.integers(0, 2**31 - 1)
+dims = st.integers(8, 512)
+
+# a small, structurally diverse graph pool (library families + a multi-head
+# block with duplicate workloads) built once — graph construction is cheap
+# but hypothesis draws hundreds of examples
+_LIB = C.presets.workload_library()
+_POOL = [
+    _LIB["attn_qwen2_72b"], _LIB["attn_qwen2_5_32b"], _LIB["mlp_qwen2_72b"],
+    _LIB["conv_whisper"], _LIB["scan_falcon_mamba"], _LIB["hybrid_hymba"],
+    C.presets.transformer_block(),
+    C.WorkloadGraph([C.matmul("mm", 256, 256, 64)], []),
+]
+_SPACES = {}
+
+
+def _space(gi, ch_max):
+    if (gi, ch_max) not in _SPACES:
+        spec = C.SystemSpec.build(_POOL[gi], ch_max=ch_max)
+        _SPACES[gi, ch_max] = C.DesignSpace(spec)
+    return _SPACES[gi, ch_max]
+
+
+def _repaired(space, seed):
+    return repair(jax.tree.map(
+        np.asarray, C.random_design(jax.random.PRNGKey(seed), space)), space)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=dims, n=dims, k=dims, extra=st.integers(0, 2),
+       ch_add=st.integers(0, 2))
+def test_migrate_roundtrips_through_larger_space(seed, m, n, k, extra,
+                                                 ch_add):
+    """src -> superset (more workloads, more chiplet slots) -> src is the
+    identity on repaired designs."""
+    gA = C.WorkloadGraph([C.matmul("mm", m, n, k)], [])
+    wls = list(gA.workloads) + [
+        C.matmul(f"x{i}", 64 + 32 * i, 64, 64) for i in range(extra)]
+    gB = C.WorkloadGraph(wls, [])
+    specA = C.SystemSpec.build(gA, ch_max=2)
+    specB = C.SystemSpec.build(gB, ch_max=2 + ch_add)
+    spA, spB = C.DesignSpace(specA), C.DesignSpace(specB)
+    dA = _repaired(spA, seed)
+    dB = migrate(dA, spA, spB)
+    assert_design_feasible(dB, spB)
+    back = migrate(dB, spB, spA)
+    for key in dA:
+        np.testing.assert_array_equal(back[key], dA[key])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, src=st.integers(0, len(_POOL) - 1),
+       dst=st.integers(0, len(_POOL) - 1),
+       ch_src=st.integers(1, 3), ch_dst=st.integers(1, 3))
+def test_migrated_designs_always_feasible(seed, src, dst, ch_src, ch_dst):
+    """ANY source design migrated into ANY destination space from the
+    library lands inside the destination bounds with zero feasibility
+    penalty — signature matches or not."""
+    src_space = _space(src, ch_src)
+    dst_space = _space(dst, ch_dst)
+    d = _repaired(src_space, seed)
+    out = migrate(d, src_space, dst_space)
+    assert_design_feasible(out, dst_space)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, gi=st.integers(0, len(_POOL) - 1))
+def test_repair_is_idempotent_and_digest_equivalent(seed, gi):
+    """repair(repair(d)) == repair(d), and repairing through the
+    JSON-portable digest equals repairing through the DesignSpace."""
+    space = _space(gi, 2)
+    raw = jax.tree.map(
+        np.asarray, C.random_design(jax.random.PRNGKey(seed), space))
+    d1 = repair(raw, space)
+    d2 = repair(d1, space)
+    d3 = repair(raw, space_digest(space).to_json_dict())
+    for key in d1:
+        np.testing.assert_array_equal(d1[key], d2[key])
+        np.testing.assert_array_equal(d1[key], d3[key])

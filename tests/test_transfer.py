@@ -1,0 +1,373 @@
+"""Cross-workload transfer: workload identity + feature embeddings, the
+portable design IR (``to_portable``/``migrate``/``repair``), the cross-spec
+archive manifest (nearest-neighbor index, crash-safe persistence), the
+service's ``transfer=True`` warm-start path, and transferred seed
+populations in the scalarized optimizer.  Hypothesis-driven migration
+properties live in ``test_migration_properties.py``."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as C
+from repro.core.encoding import (PortableDesign, SpaceDigest, from_portable,
+                                 migrate, repair, space_digest, to_portable,
+                                 feasibility_penalty)
+from repro.core.network import N_FAMILIES
+from repro.core.workload import (MAX_LOOPS, WL_EMBED_DIM, WL_FEATURE_DIM,
+                                 graph_feature_rows, workload_features,
+                                 workload_signature)
+from repro.explore.archive import (MANIFEST_NAME, ArchiveManifest,
+                                   ParetoArchive, atomic_savez)
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import ExplorationService
+
+TINY_SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
+
+
+def _tiny_graph(k=64):
+    return C.WorkloadGraph([C.matmul("mm", 512, 512, k)], [])
+
+
+def _space(graph, ch_max=2, **kw):
+    spec = C.SystemSpec.build(graph, ch_max=ch_max)
+    return spec, C.DesignSpace(spec, **(kw or TINY_SPACE_KW))
+
+
+def _repaired_design(space, seed=0):
+    return repair(jax.tree.map(
+        np.asarray, C.random_design(jax.random.PRNGKey(seed), space)), space)
+
+
+def assert_design_valid(d, space):
+    """Every field inside its legal range for ``space`` AND zero
+    feasibility penalty (chiplet-count / PE-budget constraints met)."""
+    dg = space_digest(space) if not isinstance(space, SpaceDigest) else space
+    W, CH, L = dg.W, dg.CH, MAX_LOOPS
+    mx = np.asarray(dg.max_shape)
+    nl = np.maximum(np.asarray(dg.n_loops), 1)
+    sh = np.asarray(d["shape"])
+    assert sh.shape == (W, 6) and sh.min() >= 1 and np.all(sh <= mx[None, :])
+    sp = np.asarray(d["spatial"])
+    assert np.all(sp >= 0) and np.all(sp < nl[:, None])
+    for row in np.asarray(d["order"]).reshape(W * 3, L):
+        assert sorted(row.tolist()) == list(range(L))
+    tl = np.asarray(d["tiling"])
+    assert tl.min() >= 1 and np.all(tl <= np.asarray(dg.bounds)[:, None, :])
+    pipe = np.asarray(d["pipe"])
+    assert np.all((pipe == L) | ((pipe >= 0) & (pipe < nl)))
+    assert 0 <= int(np.asarray(d["logB"])) <= dg.max_logB
+    assert 0 <= int(np.asarray(d["packaging"])) <= 2
+    assert 0 <= int(np.asarray(d["family"])) < N_FAMILIES
+    assert sorted(np.asarray(d["placement"]).tolist()) == list(range(W * CH))
+
+
+def assert_design_feasible(d, space):
+    assert_design_valid(d, space)
+    pen = float(feasibility_penalty(
+        space, {k: jnp.asarray(v) for k, v in d.items()}, {}))
+    assert pen == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# workload identity + feature embeddings
+# ---------------------------------------------------------------------------
+def test_workload_signature_is_structural():
+    a = C.matmul("first", 64, 64, 64)
+    b = C.matmul("second", 64, 64, 64)       # same structure, other name
+    c = C.matmul("first", 64, 64, 128)       # other bounds
+    assert workload_signature(a) == workload_signature(b)
+    assert workload_signature(a) != workload_signature(c)
+    assert workload_signature(a) != workload_signature(
+        C.conv2d("x", 1, 64, 64, 8, 8, 3, 3))
+
+
+def test_feature_rows_and_embedding_dims():
+    g = C.presets.transformer_block()
+    rows = graph_feature_rows(g)
+    assert rows.shape == (g.n, WL_FEATURE_DIM)
+    emb = workload_features(g)
+    assert emb.shape == (WL_EMBED_DIM,)
+    assert np.all(np.isfinite(emb))
+    # a single-workload graph lands in the SAME vector space
+    assert workload_features(_tiny_graph()).shape == (WL_EMBED_DIM,)
+
+
+def test_embedding_similarity_ranks_library_families():
+    lib = C.presets.workload_library()
+    emb = {k: workload_features(g) for k, g in lib.items()}
+    d = lambda a, b: float(np.linalg.norm(emb[a] - emb[b]))
+    # same-family graphs are closer than structurally alien ones
+    assert d("attn_qwen2_72b", "attn_qwen2_5_32b") \
+        < d("attn_qwen2_72b", "conv_whisper")
+    assert d("mlp_qwen2_72b", "mlp_deepseek_v2") \
+        < d("mlp_qwen2_72b", "conv_whisper")
+
+
+def test_workload_library_is_diverse_and_buildable():
+    lib = C.presets.workload_library()
+    assert len(lib) >= 8
+    sigs = set()
+    for name, g in lib.items():
+        spec = C.SystemSpec.build(g, ch_max=2)   # validates padding limits
+        assert spec.W == g.n and g.depth() >= 2
+        g.topo_order()                           # acyclic
+        sigs.add(tuple(workload_signature(w) for w in g.workloads))
+    assert len(sigs) == len(lib)                 # no duplicate graphs
+
+
+# ---------------------------------------------------------------------------
+# portable design IR
+# ---------------------------------------------------------------------------
+def test_space_digest_json_roundtrip():
+    _, space = _space(C.presets.transformer_block())
+    dg = space_digest(space)
+    back = SpaceDigest.from_dict(dg.to_json_dict())
+    assert back.signatures == dg.signatures
+    assert back.W == dg.W and back.CH == dg.CH
+    np.testing.assert_allclose(back.features, dg.features)
+    np.testing.assert_array_equal(back.bounds, dg.bounds)
+    assert back.max_shape == dg.max_shape
+    # the dict form is accepted anywhere a space is (duck-typed digest)
+    d = _repaired_design(space, seed=1)
+    via_dict = migrate(d, dg.to_json_dict(), dg.to_json_dict())
+    for k in d:
+        np.testing.assert_array_equal(via_dict[k], d[k])
+
+
+def test_repair_fixes_arbitrary_garbage():
+    _, space = _space(_tiny_graph())
+    W, CH, L = space.W, space.CH, MAX_LOOPS
+    garbage = dict(
+        shape=np.full((W, 6), 99, np.int64),
+        spatial=np.full((W, 6), -3, np.int64),
+        order=np.zeros((W, 3, L), np.int64),          # not a permutation
+        tiling=np.full((W, 2, L), 10**9, np.int64),
+        pipe=np.full((W,), 5, np.int64),              # >= n_loops (3)
+        logB=np.asarray(99),
+        packaging=np.asarray(-7),
+        family=np.asarray(99),
+        placement=np.zeros((W * CH,), np.int64))      # duplicate entries
+    fixed = repair(garbage, space)
+    assert_design_feasible(fixed, space)
+    # idempotent
+    again = repair(fixed, space)
+    for k in fixed:
+        np.testing.assert_array_equal(fixed[k], again[k])
+
+
+def test_repair_respects_fixed_fields_and_pe_budget():
+    spec, _ = _space(_tiny_graph())
+    space = C.DesignSpace(spec, max_shape=(16, 16, 4, 4, 2, 2),
+                          fixed_packaging=2, fixed_family=1,
+                          max_total_pes=512, allow_pipeline=False)
+    d = repair(jax.tree.map(
+        np.asarray, C.random_design(jax.random.PRNGKey(9), space)), space)
+    assert int(d["packaging"]) == 2 and int(d["family"]) == 1
+    assert int(d["logB"]) == 0 and np.all(d["pipe"] == MAX_LOOPS)
+    assert int(np.prod(d["shape"], axis=1).sum()) <= 512
+    assert_design_feasible(d, space)
+
+
+def test_migrate_roundtrip_through_superset_space():
+    gA = C.presets.transformer_block()
+    wls = list(gA.workloads) + [C.matmul("extra", 128, 128, 128)]
+    gB = C.WorkloadGraph(wls, list(gA.edges))
+    _, spA = _space(gA, ch_max=2, max_shape=(16, 16, 4, 4, 6, 6))
+    _, spB = _space(gB, ch_max=4, max_shape=(16, 16, 4, 4, 6, 6))
+    dA = _repaired_design(spA, seed=3)
+    dB = migrate(dA, spA, spB)
+    assert_design_feasible(dB, spB)
+    back = migrate(dB, spB, spA)
+    for k in dA:
+        np.testing.assert_array_equal(back[k], dA[k])
+
+
+def test_migrate_across_structurally_different_graphs():
+    lib = C.presets.workload_library()
+    _, src_space = _space(lib["attn_qwen2_72b"], ch_max=2)
+    d = _repaired_design(src_space, seed=4)
+    for name in ("attn_qwen2_5_32b", "conv_whisper", "scan_falcon_mamba"):
+        _, dst_space = _space(lib[name], ch_max=3)
+        out = migrate(d, src_space, dst_space)
+        assert_design_feasible(out, dst_space)
+
+
+def test_portable_design_record_structure():
+    _, space = _space(C.presets.transformer_block())
+    d = _repaired_design(space, seed=5)
+    pd = to_portable(d, space)
+    assert isinstance(pd, PortableDesign) and len(pd.records) == space.W
+    sigs = [workload_signature(w) for w in space.spec.graph.workloads]
+    assert [r["signature"] for r in pd.records] == sigs
+    # duplicate workloads (the two identical heads) share a signature yet
+    # keep their own records — first-unused matching maps them back 1:1
+    assert sigs[0] == sigs[1]
+    back = from_portable(pd, space)
+    for k in d:
+        np.testing.assert_array_equal(back[k], d[k])
+    with pytest.raises(ValueError):
+        from_portable(PortableDesign([], 0, 0, 0), space)
+
+
+# ---------------------------------------------------------------------------
+# cross-spec manifest + crash-safe persistence
+# ---------------------------------------------------------------------------
+def _entry(dim=4, seed=0, n_evals=8):
+    rng = np.random.default_rng(seed)
+    return dict(embedding=rng.random(dim), dims=(1, 2, 1),
+                n_evals=n_evals, budget_covered=n_evals,
+                searched=("latency_ns",), digest={"W": 1})
+
+
+def test_manifest_roundtrip_and_nearest(tmp_path):
+    m = ArchiveManifest(tmp_path / MANIFEST_NAME)
+    for i in range(4):
+        e = _entry(seed=i)
+        m.update(f"k{i}", e["embedding"], e["dims"], e["n_evals"],
+                 e["budget_covered"], e["searched"], digest={"seed": i})
+    m.update("empty", np.zeros(4), (1, 1, 1), 0, 0, ())   # never searched
+    m.save()
+    back = ArchiveManifest.load(tmp_path / MANIFEST_NAME)
+    assert len(back) == 5
+    np.testing.assert_allclose(back.entries["k2"]["embedding"],
+                               m.entries["k2"]["embedding"])
+    assert back.entries["k3"]["digest"] == {"seed": 3}
+    assert back.entries["k1"]["searched"] == ("latency_ns",)
+
+    q = m.entries["k0"]["embedding"]
+    got = back.nearest(q, k=10)
+    # own entry first (distance 0), never the empty or excluded ones
+    assert got[0] == ("k0", 0.0)
+    assert [k for k, _ in got] == sorted(
+        (k for k in back.entries if k != "empty"),
+        key=lambda k: np.linalg.norm(back.entries[k]["embedding"] - q))
+    assert all(k != "empty" for k, _ in got)
+    got_ex = back.nearest(q, k=10, exclude=("k0",))
+    assert all(k != "k0" for k, _ in got_ex) and len(got_ex) == 3
+    # dimension-mismatched entries are skipped, not fatal
+    back.update("odd", np.zeros(7), (1, 1, 1), 5, 5, ())
+    assert all(k != "odd" for k, _ in back.nearest(q, k=10))
+
+
+def test_manifest_corrupt_or_truncated_file_is_ignored(tmp_path):
+    p = tmp_path / MANIFEST_NAME
+    m = ArchiveManifest(p)
+    m.update("k", np.ones(3), (1, 1, 1), 4, 4, ())
+    m.save()
+    # truncate: keep only the first few bytes of a valid npz
+    p.write_bytes(p.read_bytes()[:20])
+    with pytest.warns(UserWarning, match="unreadable explore manifest"):
+        back = ArchiveManifest.load(p)
+    assert len(back) == 0
+    p.write_bytes(b"this is not an npz at all")
+    with pytest.warns(UserWarning):
+        assert len(ArchiveManifest.load(p)) == 0
+    # absent file: silently empty
+    assert len(ArchiveManifest.load(tmp_path / "nope.npz")) == 0
+
+
+def test_atomic_savez_no_tmp_residue_and_archive_load(tmp_path):
+    p = atomic_savez(tmp_path / "a.npz", x=np.arange(4))
+    with np.load(p) as z:
+        np.testing.assert_array_equal(z["x"], np.arange(4))
+    assert [f.name for f in tmp_path.iterdir()] == ["a.npz"]
+    # ParetoArchive.save goes through the same path
+    arc = ParetoArchive(8, {"tag": np.zeros((), np.int32)}, n_obj=2)
+    arc.insert({"tag": np.zeros(1, np.int32)}, np.array([[1.0, 2.0]]))
+    arc.save(tmp_path / "arc.npz")
+    assert sorted(f.name for f in tmp_path.iterdir()) == ["a.npz", "arc.npz"]
+    assert len(ParetoArchive.load(tmp_path / "arc.npz")) == 1
+
+
+def test_truncated_archive_npz_is_not_fatal_to_the_service(tmp_path):
+    g = _tiny_graph()
+    svc = ExplorationService(cache_dir=tmp_path,
+                             nsga=NSGAConfig(pop=8, generations=2))
+    r = svc.explore(g, ("latency_ns", "cost_usd"), budget=16, ch_max=2,
+                    space_kwargs=TINY_SPACE_KW)
+    path = svc._path(r.cache_key)
+    path.write_bytes(path.read_bytes()[:30])      # simulated torn write
+    fresh = ExplorationService(cache_dir=tmp_path,
+                               nsga=NSGAConfig(pop=8, generations=2))
+    with pytest.warns(UserWarning, match="unreadable explore cache"):
+        r2 = fresh.explore(g, ("latency_ns", "cost_usd"), budget=16,
+                           ch_max=2, space_kwargs=TINY_SPACE_KW)
+    assert not r2.from_cache and len(r2.front_objs) >= 1
+
+
+# ---------------------------------------------------------------------------
+# the service's transfer warm-start path
+# ---------------------------------------------------------------------------
+def test_transfer_seeds_cold_query_from_neighbor_archive(tmp_path):
+    mk = lambda: ExplorationService(cache_dir=tmp_path,
+                                    nsga=NSGAConfig(pop=8, generations=2))
+    svc = mk()
+    r1 = svc.explore(_tiny_graph(64), ("latency_ns", "cost_usd"), budget=16,
+                     ch_max=2, space_kwargs=TINY_SPACE_KW)
+    assert not r1.from_cache
+    assert r1.cache_key in svc.manifest.entries          # indexed on save
+    ent = svc.manifest.entries[r1.cache_key]
+    assert ent["n_evals"] == r1.n_evals_run
+    assert ent["digest"] is not None
+
+    # never-seen graph, transfer on: seeded from the neighbor's front
+    r2 = svc.explore(_tiny_graph(96), ("latency_ns", "cost_usd"), budget=16,
+                     ch_max=2, space_kwargs=TINY_SPACE_KW, transfer=True)
+    assert not r2.from_cache
+    assert r2.transferred_from == (r1.cache_key,)
+    assert r2.n_transfer_seeds >= 1
+    assert len(r2.front_objs) >= 1
+
+    # the manifest survives the disk round-trip: a NEW service transfers too
+    r3 = mk().explore(_tiny_graph(128), ("latency_ns", "cost_usd"),
+                      budget=16, ch_max=2, space_kwargs=TINY_SPACE_KW,
+                      transfer=True)
+    assert len(r3.transferred_from) >= 1
+
+    # transfer=False never seeds
+    r4 = svc.explore(_tiny_graph(160), ("latency_ns", "cost_usd"),
+                     budget=16, ch_max=2, space_kwargs=TINY_SPACE_KW)
+    assert r4.transferred_from == () and r4.n_transfer_seeds == 0
+
+
+def test_transfer_falls_back_to_balanced_init(tmp_path):
+    svc = ExplorationService(cache_dir=tmp_path,
+                             nsga=NSGAConfig(pop=8, generations=2))
+    r = svc.explore(_tiny_graph(), ("latency_ns", "cost_usd"), budget=16,
+                    ch_max=2, space_kwargs=TINY_SPACE_KW, transfer=True)
+    assert not r.from_cache
+    assert r.transferred_from == ()
+    assert r.n_transfer_seeds == 1            # the balanced_init seed
+    assert len(r.front_objs) >= 1
+
+
+def test_transfer_warm_hit_short_circuits(tmp_path):
+    """A budget-covered archive is still served straight from cache —
+    transfer only changes COLD starts."""
+    svc = ExplorationService(cache_dir=tmp_path,
+                             nsga=NSGAConfig(pop=8, generations=2))
+    g = _tiny_graph()
+    svc.explore(g, ("latency_ns", "cost_usd"), budget=16, ch_max=2,
+                space_kwargs=TINY_SPACE_KW)
+    r = svc.explore(g, ("latency_ns", "cost_usd"), budget=16, ch_max=2,
+                    space_kwargs=TINY_SPACE_KW, transfer=True)
+    assert r.from_cache and r.n_evals_run == 0
+    assert r.transferred_from == () and r.n_transfer_seeds == 0
+
+
+# ---------------------------------------------------------------------------
+# transferred seed populations in the scalarized engines
+# ---------------------------------------------------------------------------
+def test_optimize_accepts_transferred_seed_population(tmp_path):
+    src_spec, src_space = _space(_tiny_graph(64))
+    dst_spec, dst_space = _space(_tiny_graph(96))
+    seeds = [migrate(_repaired_design(src_space, seed=s), src_space,
+                     dst_space) for s in range(2)]
+    r = C.optimize(dst_spec, dst_space, jax.random.PRNGKey(0), bo_fields=(),
+                   n_init=2, sa=C.SAConfig(steps=10, chains=2),
+                   seed_designs=seeds)
+    assert np.isfinite(r.objective)
+    assert len(r.history) == 2
