@@ -20,7 +20,17 @@ methodology):
 Gate: the transferred run's final archive-projected hypervolume must reach
 the cold run's, at half its evaluation spend, seeded from >= 1 neighbor.
 
-Timings are measured live; both cache directories are wiped up front so
+**Warm-refinement arms** (transfer v2): the held-out graph is first
+shallow-explored at ``B/8``, that archive state is cloned, and a
+budget-increase refinement resumes it twice at budget ``B`` — unseeded vs
+seeded (``transfer=True``, neighbors cached, ``ManifestPolicy`` bounded
+at 2 entries so LRU eviction runs live).  Gate: the seeded refinement's
+per-segment archive-hypervolume trace must CROSS the unseeded
+refinement's final hypervolume within 75% of the evaluations the
+unseeded run spent, seeded from >= 1 neighbor, with the manifest inside
+its bound and nearest-neighbor queries error-free.
+
+Timings are measured live; all cache directories are wiped up front so
 every arm is genuinely cold on disk.
 """
 
@@ -32,6 +42,7 @@ import time
 import jax
 
 import repro.core as C
+from repro.explore.archive import ManifestPolicy
 from repro.explore.nsga import NSGAConfig
 from repro.explore.service import BudgetPolicy, ExplorationService
 
@@ -50,17 +61,26 @@ NEIGHBORS = ("attn_qwen2_72b", "attn_internlm2")
 HELD_OUT = "attn_qwen2_5_32b"
 
 
-def _service(tag: str) -> ExplorationService:
+def _service(tag: str, wipe: bool = True, **kw) -> ExplorationService:
     d = ARTIFACTS / f"transfer_cache_{tag}"
-    if d.exists():
+    if wipe and d.exists():
         shutil.rmtree(d)                     # every arm starts cold on disk
-    return ExplorationService(cache_dir=d, nsga=NSGA, policy=POLICY)
+    kw.setdefault("policy", POLICY)
+    return ExplorationService(cache_dir=d, nsga=NSGA, **kw)
 
 
-def _explore(svc, graph, budget):
+def _clone(src_tag: str, dst_tag: str):
+    src = ARTIFACTS / f"transfer_cache_{src_tag}"
+    dst = ARTIFACTS / f"transfer_cache_{dst_tag}"
+    if dst.exists():
+        shutil.rmtree(dst)
+    shutil.copytree(src, dst)
+
+
+def _explore(svc, graph, budget, transfer=True):
     t0 = time.perf_counter()
     res = svc.explore(graph, OBJECTIVES, budget=budget, ch_max=CH_MAX,
-                      space_kwargs=SPACE_KW, transfer=True,
+                      space_kwargs=SPACE_KW, transfer=transfer,
                       key=jax.random.PRNGKey(KEY))
     return res, time.perf_counter() - t0
 
@@ -94,6 +114,56 @@ def run(quick: bool = True):
     assert ok, (f"transfer gate failed: hv_warm={hv_warm:.6g} vs "
                 f"hv_cold={hv_cold:.6g}, evals_frac={ev_frac:.2f}, "
                 f"neighbors={len(warm.transferred_from)}")
+
+    # --- warm-refinement arms (transfer v2) -------------------------------
+    # shallow-explore the held-out graph once, clone the archive state,
+    # then resume it twice with the SAME budget: unseeded vs
+    # transfer-seeded (neighbors cached, ``ManifestPolicy`` bounded BELOW
+    # the number of cached problems so LRU eviction runs live inside the
+    # measured path).  The gate reads the seeded run's per-segment
+    # archive-hypervolume trace: it must CROSS the unseeded run's final
+    # hypervolume within 75% of the evaluations the unseeded run spent.
+    rpolicy = BudgetPolicy(adaptive=False, reallocate=False,
+                           chunk_generations=4)     # finer crossing trace
+    svc_base = _service("refine_base", policy=rpolicy)
+    _, t_pre = _explore(svc_base, lib[HELD_OUT], budget // 8,
+                        transfer=False)
+    _clone("refine_base", "refine_cold")
+    _clone("refine_base", "refine_warm")
+
+    svc_rc = _service("refine_cold", wipe=False, policy=rpolicy)
+    ref_cold, t_rc = _explore(svc_rc, lib[HELD_OUT], budget,
+                              transfer=False)
+    assert not ref_cold.from_cache
+    hv_rc = float(ref_cold.trace.archive_hv[-1, 0])
+
+    svc_rw = _service("refine_warm", wipe=False, policy=rpolicy,
+                      manifest_policy=ManifestPolicy(max_entries=2))
+    t_rpop = 0.0
+    for name in NEIGHBORS:
+        _, dt = _explore(svc_rw, lib[name], budget, transfer=False)
+        t_rpop += dt
+    ref_warm, t_rw = _explore(svc_rw, lib[HELD_OUT], budget)
+    assert not ref_warm.from_cache
+    hv_rw = float(ref_warm.trace.archive_hv[-1, 0])
+
+    # the bounded manifest held, and nearest-neighbor queries stay clean
+    assert len(svc_rw.manifest) <= 2
+    probe = next(iter(svc_rw.manifest.entries.values()))["embedding"]
+    assert len(svc_rw.manifest.nearest(probe, k=8)) >= 1
+
+    rows = ref_warm.trace.archive_hv[:, 0]
+    seg = ref_warm.n_evals_run // max(len(rows), 1)
+    cross = next((int((i + 1) * seg) for i, v in enumerate(rows)
+                  if v >= hv_rc), None)
+    ev_frac_ref = (cross / max(ref_cold.n_evals_run, 1)
+                   if cross is not None else float("inf"))
+    ok_ref = (hv_rw >= hv_rc and ev_frac_ref <= 0.75
+              and len(ref_warm.transferred_from) >= 1)
+    assert ok_ref, (
+        f"warm-refinement gate failed: hv_seeded={hv_rw:.6g} vs "
+        f"hv_unseeded={hv_rc:.6g}, evals_to_reach_frac={ev_frac_ref:.2f}, "
+        f"neighbors={len(ref_warm.transferred_from)}")
     return [
         {"name": "transfer/neighbor_populate", "us_per_call": t_pop * 1e6,
          "derived": f"graphs={len(NEIGHBORS)} budget={budget}"},
@@ -109,4 +179,19 @@ def run(quick: bool = True):
                      f"evals_frac={ev_frac:.2f} "
                      f"({'PASS' if ok else 'FAIL'} hv>=cold & <=0.60 "
                      f"& >=1 neighbor)")},
+        {"name": "transfer/refine_pre", "us_per_call": t_pre * 1e6,
+         "derived": f"shallow-explore budget={budget // 8}"},
+        {"name": "transfer/refine_unseeded", "us_per_call": t_rc * 1e6,
+         "derived": f"evals={ref_cold.n_evals_run} hv={hv_rc:.6g}"},
+        {"name": "transfer/refine_seeded", "us_per_call": t_rw * 1e6,
+         "derived": (f"evals={ref_warm.n_evals_run} hv={hv_rw:.6g} "
+                     f"seeds={ref_warm.n_transfer_seeds} "
+                     f"neighbors={len(ref_warm.transferred_from)} "
+                     f"manifest={len(svc_rw.manifest)}<=2")},
+        {"name": "transfer/refine_gate", "us_per_call": 0,
+         "derived": (f"hv_ratio={hv_rw / max(hv_rc, 1e-12):.4f} "
+                     f"evals_to_reach_frac={ev_frac_ref:.2f} "
+                     f"({'PASS' if ok_ref else 'FAIL'} hv>=unseeded "
+                     f"& crosses <=0.75 & >=1 neighbor "
+                     f"& bounded manifest)")},
     ]

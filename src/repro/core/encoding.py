@@ -23,6 +23,7 @@ placement, pipe} (paper Sec. IV-C).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Sequence, Tuple, Union
 
 import jax
@@ -445,6 +446,27 @@ def migrate(design: Dict, src: SpaceLike, dst: SpaceLike) -> Dict:
     Migrating a repaired design through a superset space (same workloads,
     >= CH, >= bounds) and back is the identity."""
     return from_portable(to_portable(design, src), dst)
+
+
+def portable_signature(design: Dict, space: SpaceLike) -> str:
+    """Content hash of one design in its portable form: the per-workload
+    records (each keyed by the workload's structural signature) plus the
+    global integration fields.  Two repaired designs in the same space
+    hash equal iff their portable forms are identical, so the transfer
+    seeding path uses this to drop migrated seeds that duplicate points
+    the destination archive already holds (migration is the identity on
+    same-space repaired designs, so an archive's own front re-offered as
+    seeds dedups to nothing)."""
+    pd = to_portable(design, space)
+    h = hashlib.sha256()
+    h.update(repr((int(pd.logB), int(pd.packaging),
+                   int(pd.family))).encode())
+    for r in pd.records:
+        h.update(r["signature"].encode())
+        for k in ("shape", "spatial", "order", "tiling", "pipe"):
+            h.update(np.asarray(r[k], np.int64).tobytes())
+        h.update(np.asarray(r["place_key"], np.float64).tobytes())
+    return h.hexdigest()[:16]
 
 
 def _rank(values: np.ndarray) -> np.ndarray:

@@ -365,3 +365,13 @@ def workload_features(graph: WorkloadGraph) -> np.ndarray:
         float(_log2(transfer)),
     ])
     return np.concatenate([rows.mean(axis=0), rows.max(axis=0), summary])
+
+
+def embedding_delta(a, b) -> np.ndarray:
+    """Per-dimension absolute difference of two ``workload_features``
+    embeddings — the feature vector the transfer trust calibration
+    (``repro.explore.archive.fit_trust_model``) regresses observed
+    hypervolume lift on.  Symmetric in (a, b) and all-zero iff the
+    embeddings coincide."""
+    return np.abs(np.asarray(a, np.float64).ravel()
+                  - np.asarray(b, np.float64).ravel())

@@ -20,9 +20,10 @@ back through ``repro.explore``.
 import importlib
 
 from .archive import (BIG, HV_LOG_REF, MANIFEST_NAME,  # noqa: F401
-                      ArchiveManifest, ConvergenceTrace, ParetoArchive,
-                      atomic_savez, crowding_distance, dominance_counts,
-                      dominates, hypervolume_2d, hypervolume_2d_jit,
+                      ArchiveManifest, ConvergenceTrace, ManifestPolicy,
+                      ParetoArchive, TrustModel, atomic_savez,
+                      crowding_distance, dominance_counts, dominates,
+                      fit_trust_model, hypervolume_2d, hypervolume_2d_jit,
                       objective_pairs, pareto_front, spec_space_key)
 
 _LAZY = {
@@ -37,7 +38,8 @@ _LAZY = {
 __all__ = ["ParetoArchive", "pareto_front", "dominates", "dominance_counts",
            "crowding_distance", "hypervolume_2d", "hypervolume_2d_jit",
            "objective_pairs", "spec_space_key", "ConvergenceTrace",
-           "HV_LOG_REF", "ArchiveManifest", "MANIFEST_NAME", "atomic_savez",
+           "HV_LOG_REF", "ArchiveManifest", "ManifestPolicy", "TrustModel",
+           "fit_trust_model", "MANIFEST_NAME", "atomic_savez",
            *sorted(k for k in _LAZY if k not in ("nsga", "service"))]
 
 

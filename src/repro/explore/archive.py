@@ -174,6 +174,11 @@ class ConvergenceTrace:
     best penalized scalarized objective (monotone non-increasing).
     ``archive_hv`` (optional, one row per scan *segment*) is the
     archive-projected hypervolume the service's plateau detector ranks on.
+    ``hv_gen`` (optional) is the *instantaneous* (non-cumulative) front
+    hypervolume of each generation's population — unlike the running
+    ``hypervolume`` it resolves WHEN quality arrived, which is what the
+    transfer trust calibration measures (a seeded run front-loads its
+    gains into the earliest generations).
     """
     objectives: Tuple[str, ...]
     pairs: Tuple[Tuple[str, str], ...]
@@ -183,6 +188,8 @@ class ConvergenceTrace:
     feasible_frac: np.ndarray       # (G,) feasible fraction of the children
     n_evals: np.ndarray             # (G,) cumulative evaluations
     archive_hv: Optional[np.ndarray] = None     # (S, P) per scan segment
+    hv_gen: Optional[np.ndarray] = None         # (G, P) instantaneous per
+    #                                 generation (not running max)
 
     def __post_init__(self):
         self.objectives = tuple(self.objectives)
@@ -209,7 +216,9 @@ class ConvergenceTrace:
             feasible_frac=np.asarray(scan_trace["feasible_frac"],
                                      np.float64),
             n_evals=(np.arange(g, dtype=np.int64) + 1)
-            * int(evals_per_generation))
+            * int(evals_per_generation),
+            hv_gen=(np.asarray(scan_trace["hv_now"], np.float64)
+                    if "hv_now" in scan_trace else None))
 
     @classmethod
     def from_history(cls, history: Sequence, evals_per_step: int = 1,
@@ -241,6 +250,7 @@ class ConvergenceTrace:
             cat(self.hypervolume, other.hypervolume), axis=0)
         ahv = [a for a in (self.archive_hv, other.archive_hv)
                if a is not None]
+        hvg = [a for a in (self.hv_gen, other.hv_gen) if a is not None]
         return ConvergenceTrace(
             objectives=self.objectives, pairs=self.pairs,
             front_size=cat(self.front_size, other.front_size),
@@ -248,7 +258,8 @@ class ConvergenceTrace:
             best=np.minimum.accumulate(cat(self.best, other.best)),
             feasible_frac=cat(self.feasible_frac, other.feasible_frac),
             n_evals=cat(self.n_evals, np.asarray(other.n_evals) + off),
-            archive_hv=np.concatenate(ahv, axis=0) if ahv else None)
+            archive_hv=np.concatenate(ahv, axis=0) if ahv else None,
+            hv_gen=np.concatenate(hvg, axis=0) if hvg else None)
 
     def summary(self) -> Dict:
         """JSON-serializable digest persisted alongside the archive npz."""
@@ -459,47 +470,239 @@ def spec_space_key(spec, space, extra=None) -> str:
 MANIFEST_NAME = "manifest.npz"
 
 
+@dataclasses.dataclass(frozen=True)
+class ManifestPolicy:
+    """Growth policy of the cross-spec manifest index.
+
+    ``max_entries`` bounds the index: past it, the least-recently-*used*
+    entry (lowest ``last_used`` tick; transfer lookups and refreshes both
+    count as use) is evicted — index entries only, the archive npz files
+    they pointed at stay on disk and are re-indexed on their next use.
+    ``dedup_radius`` > 0 merges entries whose embeddings are within that
+    Euclidean distance (the better-explored twin survives, counters are
+    merged), so a fleet cache full of near-identical problems does not
+    crowd genuinely different neighbors out of ``nearest``.
+    ``max_trust_records`` bounds the per-(src, dst) transfer-outcome table
+    (oldest records dropped first)."""
+    max_entries: int = 64
+    dedup_radius: float = 0.0
+    max_trust_records: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class TrustModel:
+    """Ridge regression ``lift ~ w0 + w . |embedding delta|`` fitted over
+    recorded transfer outcomes: how much of a seeded run's hypervolume
+    gain arrived in its earliest generations, as a function of how far the
+    seed's source workload sat from the destination in embedding space.
+    ``predict`` returns the expected lift for a candidate (src, dst) pair;
+    callers treat larger as more trustworthy (clamping at 0)."""
+    weights: np.ndarray                # (D + 1,) intercept first
+
+    def predict(self, delta) -> float:
+        d = np.abs(np.asarray(delta, np.float64).ravel())
+        if d.shape[0] + 1 != self.weights.shape[0]:
+            return 0.0                 # embedding layout drifted: neutral
+        return float(self.weights[0] + self.weights[1:] @ d)
+
+
+def fit_trust_model(records: Sequence[Dict], dim: Optional[int] = None,
+                    ridge: float = 1.0,
+                    min_records: int = 3) -> Optional[TrustModel]:
+    """Fit a ``TrustModel`` over transfer-outcome records (dicts with
+    ``delta`` (D,) and ``lift`` float).  Records whose delta dimension
+    disagrees with ``dim`` (default: the most recent record's) are
+    skipped; fewer than ``min_records`` usable records yields ``None`` —
+    callers fall back to unweighted Euclidean ranking."""
+    usable = [r for r in records
+              if np.all(np.isfinite(np.asarray(r["delta"], np.float64)))
+              and np.isfinite(r["lift"])]
+    if not usable:
+        return None
+    if dim is None:
+        dim = np.asarray(usable[-1]["delta"]).size
+    usable = [r for r in usable
+              if np.asarray(r["delta"]).size == dim]
+    if len(usable) < max(int(min_records), 1):
+        return None
+    X = np.stack([np.concatenate(
+        [[1.0], np.abs(np.asarray(r["delta"], np.float64).ravel())])
+        for r in usable])
+    y = np.asarray([float(r["lift"]) for r in usable])
+    A = X.T @ X + ridge * np.eye(X.shape[1])
+    A[0, 0] -= ridge                   # don't shrink the intercept
+    try:
+        w = np.linalg.solve(A, X.T @ y)
+    except np.linalg.LinAlgError:
+        return None
+    return TrustModel(weights=w)
+
+
 class ArchiveManifest:
     """Index of an explore cache directory: one entry per archived problem
     key, carrying the problem's workload-feature embedding (fixed-dim; see
     ``repro.core.workload.workload_features``), its padded dims, freshness
-    counters, and an opaque JSON-portable *space digest* (everything
-    ``repro.core.encoding.migrate`` needs to move designs OUT of that
-    archive without reconstructing the source graph).
+    counters, an LRU ``last_used`` tick, and an opaque JSON-portable
+    *space digest* (everything ``repro.core.encoding.migrate`` needs to
+    move designs OUT of that archive without reconstructing the source
+    graph).  A ``ManifestPolicy`` bounds growth (LRU eviction +
+    embedding-space dedup, see there), and a *trust table* of per-(src,
+    dst) transfer outcomes rides along for ``fit_trust_model``.
 
     ``nearest(embedding, k)`` ranks cached problems by Euclidean distance
-    in embedding space — the cross-workload transfer lookup.  Persistence
-    is a single atomically-written npz; a damaged or truncated manifest is
-    discarded with a warning, never fatal (a cache index is disposable).
-    This module stays free of ``repro.core`` imports: digests are stored
-    and returned as plain dicts."""
+    in embedding space — the cross-workload transfer lookup; with
+    ``trust=`` a fitted ``TrustModel``, distances are reweighted by
+    predicted lift so calibrated-useful neighbors rank ahead of merely
+    geometrically-close ones.  Persistence is a single atomically-written
+    npz; a damaged or truncated manifest is discarded with a warning,
+    never fatal (a cache index is disposable).  This module stays free of
+    ``repro.core`` imports: digests are stored and returned as plain
+    dicts."""
 
-    def __init__(self, path=None):
+    def __init__(self, path=None, policy: ManifestPolicy = ManifestPolicy()):
         self.path = Path(path) if path is not None else None
+        self.policy = policy
         self.entries: Dict[str, Dict] = {}
+        self.trust: List[Dict] = []    # per-(src, dst) transfer outcomes
+        self.clock = 0                 # monotone LRU tick
 
     def __len__(self) -> int:
         return len(self.entries)
+
+    def _tick(self) -> int:
+        self.clock += 1
+        return self.clock
+
+    def touch(self, key: str):
+        """Mark one entry as just-used (transfer lookups call this for the
+        neighbors they actually seeded from, so useful sources stay
+        resident under LRU pressure)."""
+        if key in self.entries:
+            self.entries[key]["last_used"] = self._tick()
+        return self
 
     def update(self, key: str, embedding, dims: Tuple[int, int, int],
                n_evals: int, budget_covered: int,
                searched: Sequence[str], digest: Optional[Dict] = None):
         """Insert or refresh one problem's entry (digest kept from the
-        previous entry when not re-supplied)."""
+        previous entry when not re-supplied), then enforce the growth
+        policy — the entry being written is never the one evicted or
+        merged away."""
         prev = self.entries.get(key, {})
         self.entries[key] = dict(
             embedding=np.asarray(embedding, np.float64),
             dims=tuple(int(v) for v in dims),
             n_evals=int(n_evals), budget_covered=int(budget_covered),
             searched=tuple(searched),
-            digest=digest if digest is not None else prev.get("digest"))
+            digest=digest if digest is not None else prev.get("digest"),
+            last_used=self._tick())
+        self.enforce(protect=(key,))
         return self
 
+    # ---- growth policy -----------------------------------------------------
+    def enforce(self, protect: Sequence[str] = ()):
+        """Apply the growth policy: embedding-space dedup first (merging
+        frees room without losing coverage), then LRU eviction down to
+        ``max_entries``.  ``protect`` keys are never removed."""
+        self.dedup(protect=protect)
+        prot = set(protect)
+        while len(self.entries) > max(int(self.policy.max_entries), 1):
+            victims = [k for k in self.entries if k not in prot]
+            if not victims:
+                break
+            victim = min(victims, key=lambda k: (
+                self.entries[k].get("last_used", 0), k))
+            del self.entries[victim]
+        return self
+
+    def _survivor(self, a: str, b: str, protect: Sequence[str]) -> str:
+        """Which of two near-identical entries survives a merge: protected
+        keys always win, then the better-explored one, ties broken on the
+        key alone — never on insertion order or LRU ticks, so merging is
+        commutative (the same survivor whichever order the entries
+        arrived in)."""
+        if (a in protect) != (b in protect):
+            return a if a in protect else b
+        score = lambda k: (self.entries[k]["n_evals"],
+                           self.entries[k]["budget_covered"],
+                           k)
+        return max((a, b), key=score)
+
+    def dedup(self, protect: Sequence[str] = ()):
+        """Merge entries whose embeddings are within ``dedup_radius`` of
+        each other.  The survivor keeps its own key/embedding/digest and
+        absorbs the max of both freshness counters and the union of their
+        searched objectives.  Scanning key-sorted pairs with a symmetric
+        survivor rule makes the merge idempotent, commutative, and
+        invariant under entry-insertion order."""
+        radius = float(self.policy.dedup_radius)
+        if radius <= 0 or len(self.entries) < 2:
+            return self
+        keys = sorted(self.entries)
+        gone: set = set()
+        for i, a in enumerate(keys):
+            if a in gone:
+                continue
+            for b in keys[i + 1:]:
+                if a in gone:
+                    break
+                if b in gone:
+                    continue
+                ea, eb = self.entries[a], self.entries[b]
+                if ea["embedding"].shape != eb["embedding"].shape:
+                    continue
+                if np.linalg.norm(ea["embedding"]
+                                  - eb["embedding"]) > radius:
+                    continue
+                keep = self._survivor(a, b, protect)
+                drop = b if keep == a else a
+                ek, ed = self.entries[keep], self.entries[drop]
+                ek["n_evals"] = max(ek["n_evals"], ed["n_evals"])
+                ek["budget_covered"] = max(ek["budget_covered"],
+                                           ed["budget_covered"])
+                ek["searched"] = tuple(sorted(
+                    set(ek["searched"]) | set(ed["searched"])))
+                ek["last_used"] = max(ek.get("last_used", 0),
+                                      ed.get("last_used", 0))
+                gone.add(drop)
+        for k in gone:
+            del self.entries[k]
+        return self
+
+    # ---- trust table -------------------------------------------------------
+    def record_transfer(self, src: str, dst: str, delta, lift: float):
+        """Append one observed transfer outcome: seeds migrated from
+        ``src`` into ``dst``'s run, whose workload embeddings differ by
+        ``delta`` (per-dimension absolute difference), produced ``lift``
+        (fraction of the run's hypervolume gain landed in its earliest
+        generations — measured from the run's own ``ConvergenceTrace``,
+        zero extra evaluations).  Oldest records roll off past
+        ``max_trust_records``."""
+        self.trust.append(dict(
+            src=str(src), dst=str(dst),
+            delta=np.asarray(delta, np.float64).ravel(),
+            lift=float(lift)))
+        keep = max(int(self.policy.max_trust_records), 1)
+        if len(self.trust) > keep:
+            self.trust = self.trust[-keep:]
+        return self
+
+    def trust_model(self, dim: Optional[int] = None) -> Optional[TrustModel]:
+        """The fitted trust model over this manifest's recorded outcomes
+        (``None`` until enough records accumulate)."""
+        return fit_trust_model(self.trust, dim=dim)
+
     def nearest(self, embedding, k: int = 3,
-                exclude: Sequence[str] = ()) -> List[Tuple[str, float]]:
-        """The ``k`` cached problems closest to ``embedding`` (Euclidean,
-        ascending), skipping excluded keys, empty archives and entries
-        whose embedding dimension does not match the query's."""
+                exclude: Sequence[str] = (),
+                trust: Optional[TrustModel] = None
+                ) -> List[Tuple[str, float]]:
+        """The ``k`` cached problems closest to ``embedding`` (ascending
+        effective distance), skipping excluded keys, empty archives and
+        entries whose embedding dimension does not match the query's.
+        Plain Euclidean by default; with ``trust``, each distance is
+        divided by ``1 + max(predicted lift, 0)`` so neighbors the model
+        learned to trust rank closer.  Ties break on key, so the result
+        is invariant under entry-insertion order."""
         q = np.asarray(embedding, np.float64).ravel()
         out = []
         for key, e in self.entries.items():
@@ -508,7 +711,10 @@ class ArchiveManifest:
             emb = e["embedding"]
             if emb.shape != q.shape:
                 continue
-            out.append((key, float(np.linalg.norm(emb - q))))
+            dist = float(np.linalg.norm(emb - q))
+            if trust is not None:
+                dist = dist / (1.0 + max(trust.predict(q - emb), 0.0))
+            out.append((key, dist))
         out.sort(key=lambda t: (t[1], t[0]))
         return out[:max(int(k), 0)]
 
@@ -519,34 +725,51 @@ class ArchiveManifest:
             raise ValueError("manifest has no path")
         keys = sorted(self.entries)
         meta = dict(
-            version=1,
+            version=2,
             keys=keys,
+            clock=int(self.clock),
             entries={k: dict(
                 dims=list(self.entries[k]["dims"]),
                 n_evals=self.entries[k]["n_evals"],
                 budget_covered=self.entries[k]["budget_covered"],
                 searched=list(self.entries[k]["searched"]),
-                digest=self.entries[k]["digest"]) for k in keys})
-        emb = (np.stack([self.entries[k]["embedding"] for k in keys])
-               if keys else np.zeros((0, 0)))
+                last_used=int(self.entries[k].get("last_used", 0)),
+                digest=self.entries[k]["digest"]) for k in keys},
+            trust=[dict(src=r["src"], dst=r["dst"], lift=r["lift"],
+                        delta=[float(v) for v in r["delta"]])
+                   for r in self.trust])
+        # one array per entry, NOT one stacked matrix: entries written
+        # under different embedding layouts (a WL_EMBED_DIM upgrade) must
+        # not wedge persistence with a ragged np.stack
+        emb = {f"emb_{i}": np.asarray(self.entries[k]["embedding"],
+                                      np.float64)
+               for i, k in enumerate(keys)}
         return atomic_savez(
             path, __meta=np.frombuffer(json.dumps(meta).encode(),
                                        dtype=np.uint8),
-            embeddings=emb)
+            **emb)
 
     @classmethod
-    def load(cls, path) -> "ArchiveManifest":
+    def load(cls, path,
+             policy: ManifestPolicy = ManifestPolicy()) -> "ArchiveManifest":
         """Load a manifest, tolerating absence and damage: anything
         unreadable yields an EMPTY manifest (with a warning) so one bad
-        write can never take the exploration service down."""
+        write can never take the exploration service down.  Version-1
+        manifests (no LRU ticks, no trust table) load with zeroed
+        ``last_used`` and an empty trust table."""
         path = Path(path)
-        m = cls(path)
+        m = cls(path, policy=policy)
         if not path.exists():
             return m
         try:
             with np.load(path) as z:
                 meta = json.loads(bytes(z["__meta"]).decode())
-                emb = np.asarray(z["embeddings"], np.float64)
+                if "embeddings" in z.files:     # stacked pre-v2 layout
+                    stacked = np.asarray(z["embeddings"], np.float64)
+                    emb = [stacked[i] for i in range(len(meta["keys"]))]
+                else:
+                    emb = [np.asarray(z[f"emb_{i}"], np.float64)
+                           for i in range(len(meta["keys"]))]
             for i, k in enumerate(meta["keys"]):
                 e = meta["entries"][k]
                 m.entries[k] = dict(
@@ -555,9 +778,21 @@ class ArchiveManifest:
                     n_evals=int(e["n_evals"]),
                     budget_covered=int(e["budget_covered"]),
                     searched=tuple(e["searched"]),
-                    digest=e.get("digest"))
+                    digest=e.get("digest"),
+                    last_used=int(e.get("last_used", 0)))
+            m.clock = int(meta.get("clock", 0))
+            m.trust = [dict(src=r["src"], dst=r["dst"],
+                            delta=np.asarray(r["delta"], np.float64),
+                            lift=float(r["lift"]))
+                       for r in meta.get("trust", [])]
         except Exception as exc:        # disposable index: never fatal
             warnings.warn(f"discarding unreadable explore manifest "
                           f"{path}: {exc}")
             m.entries = {}
+            m.trust = []
+            m.clock = 0
+        # honor THIS reader's policy immediately: a file written under a
+        # laxer bound (or unbounded v1) must not keep a read-mostly
+        # service over budget until its first write
+        m.enforce()
         return m

@@ -179,12 +179,16 @@ def _build_run(space, dims, idx, cfg, tech):
 
     def telemetry(sel_n, feas_n, cfeas, hv_run, best_run):
         """Per-generation convergence stats over the selected population —
-        dominance/staircase math only, no design evaluations."""
+        dominance/staircase math only, no design evaluations.  ``hv_now``
+        (the instantaneous, non-running front hypervolume) is traced
+        alongside the running max: it resolves WHEN quality arrived, the
+        signal the transfer trust calibration regresses on."""
         finite = jnp.all(jnp.isfinite(sel_n), axis=-1)
         ok = finite & feas_n
         sane = jnp.where(jnp.isfinite(sel_n), sel_n, F(BIG))
         nd = dominance_counts(sane, ok)
         front_size = jnp.sum((nd == 0) & ok).astype(jnp.int32)
+        hv_now = hv_run
         if pairs:
             hv_now = jnp.stack([
                 hypervolume_2d_jit(sel_n[:, [i, j]], hv_ref, valid=ok)
@@ -192,7 +196,7 @@ def _build_run(space, dims, idx, cfg, tech):
             hv_run = jnp.maximum(hv_run, hv_now)
         scal = jnp.where(finite, jnp.sum(sane, axis=-1), F(BIG))
         best_run = jnp.minimum(best_run, jnp.min(scal))
-        tr = dict(front_size=front_size, hypervolume=hv_run,
+        tr = dict(front_size=front_size, hypervolume=hv_run, hv_now=hv_now,
                   best=best_run, feasible_frac=jnp.mean(cfeas.astype(F)))
         return hv_run, best_run, tr
 

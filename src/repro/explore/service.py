@@ -29,6 +29,17 @@ one cache serves latency-energy, latency-cost, ... projections alike.
 Every cold answer carries a ``ConvergenceTrace`` — the per-generation
 telemetry the NSGA scan emits for free — and a summary is persisted with
 the archive npz.
+
+* **Cross-workload transfer v2** — ``transfer=True`` seeds cold starts
+  AND budget-increase refinements from the migrated fronts of the best
+  cached neighbors (``ArchiveManifest.nearest``, reweighted by the
+  manifest's fitted ``TrustModel`` once enough per-(src, dst) outcomes
+  accumulate); seeds dedup against the destination archive's own front
+  (``portable_signature``) and every seeded run books its observed
+  hypervolume lift back into the trust table at zero extra evaluations.
+  The manifest itself is growth-bounded (``ManifestPolicy``: LRU
+  eviction + embedding-space dedup) and mtime-reloaded, so fleet-shared
+  cache directories stay consistent.
 """
 
 from __future__ import annotations
@@ -37,6 +48,7 @@ import dataclasses
 import os
 import time
 import warnings
+from collections import OrderedDict
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -46,13 +58,15 @@ import numpy as np
 
 from ..core.constants import DEFAULT_TECH
 from ..core.encoding import (DesignSpace, balanced_init, migrate,
-                             random_design, repair, space_digest)
+                             portable_signature, random_design, repair,
+                             space_digest)
 from ..core.evaluate import SystemSpec
 from ..core.optimizer import METRIC_KEYS
-from ..core.workload import WorkloadGraph, workload_features
+from ..core.workload import (WorkloadGraph, embedding_delta,
+                             workload_features)
 from .archive import (MANIFEST_NAME, ArchiveManifest, ConvergenceTrace,
-                      ParetoArchive, objective_pairs, pareto_front,
-                      spec_space_key)
+                      ManifestPolicy, ParetoArchive, objective_pairs,
+                      pareto_front, spec_space_key)
 from .nsga import NSGAConfig, make_nsga
 
 # the default archive cache is anchored to the repo root (four levels above
@@ -67,6 +81,30 @@ DEFAULT_OBJECTIVES = ("latency_ns", "cost_usd")
 def _pow2(n: int) -> int:
     """Smallest power of two >= n (n >= 1)."""
     return 1 << max(0, int(n) - 1).bit_length() if n > 1 else 1
+
+
+def _transfer_lift(trace: ConvergenceTrace) -> float:
+    """Front-loadedness of one seeded run, in [0, 1]: the mean of the
+    per-generation population-front hypervolume (``hv_gen``) normalized
+    into the run's own [min, max] range — the area under the normalized
+    trajectory.  A run whose seeded start already carried the quality
+    spends every generation near its own maximum (→ 1); a run that had
+    to search for everything climbs slowly (≈ 0.5 for a linear climb,
+    lower for a late jump).  Self-normalized per run, so values compare
+    across problems and archive maturities, at zero extra evaluations;
+    a flat trajectory carries no temporal signal either way and records
+    a neutral 0.5.  (Under elitist selection the trajectory is
+    near-monotone, so any single-generation statistic — e.g. generation
+    0's own position — degenerates to ~0 for every run; the area does
+    not.)"""
+    hv = trace.hv_gen if trace.hv_gen is not None else trace.hypervolume
+    if hv is None or hv.size == 0:
+        return 0.0
+    col = np.asarray(hv[:, 0], np.float64)
+    lo, hi = float(col.min()), float(col.max())
+    if hi - lo <= 1e-9 * max(abs(hi), 1.0):
+        return 0.5                  # flat run: no temporal signal at all
+    return float(np.clip(np.mean((col - lo) / (hi - lo)), 0.0, 1.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,9 +140,13 @@ class ExploreQuery:
     #                                 is willing to pay for (cold)
     ch_max: int = 4
     space_kwargs: Optional[Dict] = None
-    transfer: bool = False          # cold start from migrated fronts of the
-    #                                 nearest cached specs (balanced_init
-    #                                 fallback when no neighbor exists)
+    transfer: bool = False          # seed cold starts AND budget-increase
+    #                                 refinements from migrated fronts of
+    #                                 the trust-ranked nearest cached specs
+    #                                 (balanced_init fallback on a cold
+    #                                 start with no neighbor; resumed
+    #                                 archives dedup seeds against their
+    #                                 own front and take no fallback)
 
     def __post_init__(self):
         self.objectives = tuple(self.objectives)
@@ -158,7 +200,8 @@ class ExplorationService:
     def __init__(self, cache_dir=None, capacity: int = 256,
                  nsga: NSGAConfig = NSGAConfig(), tech=None,
                  policy: BudgetPolicy = BudgetPolicy(),
-                 transfer_k: int = 3):
+                 transfer_k: int = 3,
+                 manifest_policy: ManifestPolicy = ManifestPolicy()):
         # nsga.generations is not used on the query path — each query's
         # budget sets the scan length (see _refine); the config's pop /
         # fields / crossover / mutation / immigrant knobs apply as given.
@@ -170,17 +213,42 @@ class ExplorationService:
         self.tech = tech
         self.policy = policy
         self.transfer_k = int(transfer_k)
+        self.manifest_policy = manifest_policy
         self.ledger: Dict[str, int] = {}
         self._archives: Dict[str, ParetoArchive] = {}
+        # neighbor archives loaded ONLY to migrate seeds out of live in a
+        # small LRU side-cache keyed on the npz mtime (stale fronts are
+        # re-read): repeated transfer queries don't re-read the npz, yet
+        # a churning fleet can't grow memory without bound
+        self._neighbor_cache: \
+            "OrderedDict[str, Tuple[int, ParetoArchive]]" = OrderedDict()
+        self._neighbor_cache_cap = max(8, 2 * self.transfer_k)
         self._manifest: Optional[ArchiveManifest] = None
+        self._manifest_mtime: Optional[int] = None
+
+    def _manifest_stat(self) -> Optional[int]:
+        try:
+            return (self.cache_dir / MANIFEST_NAME).stat().st_mtime_ns
+        except OSError:
+            return None
 
     @property
     def manifest(self) -> ArchiveManifest:
         """The cross-spec index of this cache directory (lazy-loaded;
-        damaged or absent files yield an empty manifest)."""
-        if self._manifest is None:
+        damaged or absent files yield an empty manifest).  The file's
+        mtime is checked on EVERY access: a second service writing the
+        same cache directory invalidates this one's in-memory copy, so
+        eviction/dedup/transfer decisions never act on a stale index.
+        Multi-step operations (seeding, trust recording) snapshot the
+        property ONCE and work on that object — a mid-operation reload
+        must never yank entries out from under an iteration; the
+        snapshot's mutations are saved at the end (last writer wins)."""
+        mtime = self._manifest_stat()
+        if self._manifest is None or mtime != self._manifest_mtime:
             self._manifest = ArchiveManifest.load(
-                self.cache_dir / MANIFEST_NAME)
+                self.cache_dir / MANIFEST_NAME,
+                policy=self.manifest_policy)
+            self._manifest_mtime = mtime
         return self._manifest
 
     # ---- cache plumbing ----------------------------------------------------
@@ -292,10 +360,15 @@ class ExplorationService:
             g["elapsed"] = time.perf_counter() - t0
             return
         seeds = None
-        if any(q.transfer for q in g["queries"]) and len(arc) == 0:
+        if any(q.transfer for q in g["queries"]):
+            # cold starts AND warm refinements take seeds: a half-explored
+            # archive profits from neighbor fronts it has never seen, but
+            # its own front head keeps at least half the population
+            pop_eff = self._effective_pop(budget)
+            cap = pop_eff if len(arc) == 0 else max(pop_eff // 2, 1)
             seeds, srcs = self._transfer_seeds(
                 ck, g["space"], g["embedding"],
-                jax.random.fold_in(key, 0x7e5))
+                jax.random.fold_in(key, 0x7e5), arc=arc, cap=cap)
             g["transferred_from"] = srcs
             g["n_seeds"] = (int(next(iter(seeds.values())).shape[0])
                             if seeds else 0)
@@ -310,62 +383,158 @@ class ExplorationService:
                  banked=banked)
         arc.trace_summary = trace.summary()
         self.save(ck)
-        self._update_manifest(ck, g)
+        m = self.manifest               # ONE snapshot: the trust records
+        #                                 land in the same object the
+        #                                 index update saves below
+        self._record_trust(ck, g, trace, m)
+        self._update_manifest(ck, g, m)
         g["elapsed"] = time.perf_counter() - t0
 
-    def _update_manifest(self, ck: str, g: Dict) -> None:
+    def _record_trust(self, ck: str, g: Dict, trace: ConvergenceTrace,
+                      m: Optional[ArchiveManifest] = None) -> None:
+        """Book one calibration outcome per seeding neighbor: the run's
+        observed hypervolume lift (see ``_transfer_lift``), keyed by the
+        (src, dst) embedding delta.  Also LRU-touches the neighbors that
+        actually seeded — useful sources stay resident.  Single-objective
+        runs have no hypervolume pairs, hence no lift signal: nothing is
+        recorded (a meaningless 0 would poison the regression).
+        Telemetry bookkeeping must never fail a query."""
+        if not g["transferred_from"] or trace is None or not trace.pairs:
+            return
+        try:
+            m = m if m is not None else self.manifest
+            lift = _transfer_lift(trace)
+            for nk in g["transferred_from"]:
+                ent = m.entries.get(nk)
+                if ent is None:
+                    continue
+                m.record_transfer(
+                    nk, ck, embedding_delta(g["embedding"],
+                                            ent["embedding"]), lift)
+                m.touch(nk)
+        except Exception as e:
+            warnings.warn(f"transfer trust recording failed for {ck}: {e}")
+
+    def _update_manifest(self, ck: str, g: Dict,
+                         m: Optional[ArchiveManifest] = None) -> None:
         """Refresh the cross-spec index entry for one problem (embedding,
         freshness counters, migration digest) and persist it atomically.
-        Index maintenance must never fail a query."""
+        Works on the caller's manifest snapshot when given, so a
+        mid-operation mtime reload can't drop sibling mutations (trust
+        records) before the save.  Index maintenance must never fail a
+        query."""
         arc, spec = g["arc"], g["spec"]
         try:
-            self.manifest.update(
+            m = m if m is not None else self.manifest
+            m.update(
                 ck, embedding=g["embedding"],
                 dims=(spec.W, spec.CH, spec.E),
                 n_evals=arc.n_evals, budget_covered=arc.budget_covered,
                 searched=arc.searched,
                 digest=space_digest(g["space"]).to_json_dict())
-            self.manifest.save()
+            m.save()
+            self._manifest = m          # what was just saved IS current
+            self._manifest_mtime = self._manifest_stat()
         except Exception as e:
             warnings.warn(f"explore manifest update failed for {ck}: {e}")
 
+    def _load_neighbor(self, nk: str) -> Optional[ParetoArchive]:
+        """A neighbor archive for seed migration, through the bounded LRU
+        side-cache.  Entries are keyed on the npz's mtime: when another
+        service of a shared cache directory improves a neighbor's
+        archive, the next transfer query re-reads the better front
+        instead of serving the stale one (mirroring the manifest's
+        staleness rule).  ``None`` for absent/unreadable files — a broken
+        neighbor must never fail the query it was helping."""
+        p = self._path(nk)
+        try:
+            mt = p.stat().st_mtime_ns
+        except OSError:
+            return None
+        hit = self._neighbor_cache.get(nk)
+        if hit is not None and hit[0] == mt:
+            self._neighbor_cache.move_to_end(nk)
+            return hit[1]
+        try:
+            arc = ParetoArchive.load(p)
+        except Exception as e:
+            warnings.warn(f"skipping unreadable neighbor archive {p}: {e}")
+            return None
+        # LRU side-cache, NOT self._archives: repeat queries skip the npz
+        # re-read, but seed-only neighbors can't grow memory without bound
+        self._neighbor_cache[nk] = (mt, arc)
+        self._neighbor_cache.move_to_end(nk)
+        while len(self._neighbor_cache) > self._neighbor_cache_cap:
+            self._neighbor_cache.popitem(last=False)
+        return arc
+
     def _transfer_seeds(self, ck: str, space: DesignSpace, embedding,
-                        key) -> Tuple[Optional[Dict], Tuple[str, ...]]:
-        """Seed designs for a cold query: the migrated (and repaired)
-        fronts of the ``transfer_k`` nearest cached problems, best
-        neighbors first, capped at one population.  With no usable
-        neighbor, one repaired ``balanced_init`` design — a cold start is
-        never WORSE off for having asked to transfer."""
+                        key, arc: Optional[ParetoArchive] = None,
+                        cap: Optional[int] = None
+                        ) -> Tuple[Optional[Dict], Tuple[str, ...]]:
+        """Seed designs for a cold or resumed query: the migrated (and
+        repaired) fronts of the ``transfer_k`` best cached neighbors,
+        capped at ``cap`` designs.  Neighbor ranking and per-neighbor seed
+        quotas are *trust-calibrated* once the manifest's outcome table
+        supports a model: distances are reweighted by predicted lift and
+        higher-trust neighbors earn proportionally more of the cap.
+        Migrated seeds that duplicate the destination archive's own front
+        (``portable_signature`` match) are dropped — resuming a problem
+        with its own designs injects nothing.  With no usable neighbor, a
+        COLD start gets one repaired ``balanced_init`` design (never worse
+        off for having asked to transfer); a resumed archive already has
+        its front head and gets no filler seed."""
         dst = space_digest(space)
-        cap = max(self.nsga.pop, 1)
-        quota = max(1, cap // max(self.transfer_k, 1))
+        cap = max(self.nsga.pop, 1) if cap is None else max(int(cap), 1)
+        n_front = len(arc) if arc is not None else 0
+        m = self.manifest               # ONE snapshot for the whole
+        #                                 lookup: a concurrent service's
+        #                                 eviction must not yank entries
+        #                                 between nearest() and indexing
+        trust = m.trust_model(dim=int(np.asarray(embedding).size))
+        neigh = m.nearest(embedding, k=self.transfer_k,
+                          exclude=(ck,), trust=trust)
+        if trust is not None and neigh:
+            w = [1.0 + max(trust.predict(embedding_delta(
+                embedding, m.entries[nk]["embedding"])), 0.0)
+                for nk, _ in neigh]
+            quotas = {nk: max(1, int(round(cap * wi / sum(w))))
+                      for (nk, _), wi in zip(neigh, w)}
+        else:
+            quota = max(1, cap // max(self.transfer_k, 1))
+            quotas = {nk: quota for nk, _ in neigh}
+        taken: set = set()
+        if n_front and neigh:           # hashing the whole front is only
+            #                             worth it when there IS a
+            #                             neighbor to dedup against
+            fr_designs, _ = arc.front()
+            for i in range(n_front):
+                d = {k2: v[i] for k2, v in fr_designs.items()}
+                taken.add(portable_signature(d, dst))
         seeds: List[Dict] = []
         srcs: List[str] = []
-        for nk, _dist in self.manifest.nearest(
-                embedding, k=self.transfer_k, exclude=(ck,)):
-            ent = self.manifest.entries[nk]
+        for nk, _dist in neigh:
+            ent = m.entries[nk]
             if ent.get("digest") is None:
                 continue
-            arc = self._archives.get(nk)
-            if arc is None:
-                p = self._path(nk)
-                if not p.exists():
-                    continue
-                try:
-                    arc = ParetoArchive.load(p)
-                except Exception as e:
-                    warnings.warn(
-                        f"skipping unreadable neighbor archive {p}: {e}")
-                    continue
-                self._archives[nk] = arc     # a long-lived service must
-                #                              not re-read the same
-                #                              neighbor npz every query
+            n_arc = self._archives.get(nk)
+            if n_arc is None:
+                n_arc = self._load_neighbor(nk)
+            if n_arc is None:
+                continue
             migrated: List[Dict] = []
             try:
-                designs, objs = arc.front()
-                for i in range(min(len(objs), quota)):
+                designs, objs = n_arc.front()
+                for i in range(len(objs)):
+                    if len(migrated) >= quotas.get(nk, 1):
+                        break
                     d = {k2: v[i] for k2, v in designs.items()}
-                    migrated.append(migrate(d, ent["digest"], dst))
+                    md = migrate(d, ent["digest"], dst)
+                    sig = portable_signature(md, dst)
+                    if sig in taken:    # already on the destination front
+                        continue        # (or offered by a closer neighbor)
+                    taken.add(sig)
+                    migrated.append(md)
             except Exception as e:      # a broken neighbor must never
                 #                         fail the query it was helping;
                 #                         designs migrated before the
@@ -379,6 +548,8 @@ class ExplorationService:
             if len(seeds) >= cap:
                 break
         if not seeds:
+            if n_front:
+                return None, ()
             bi = jax.tree.map(np.asarray, balanced_init(key, space))
             seeds = [repair(bi, dst)]
         seeds = seeds[:cap]
@@ -453,6 +624,21 @@ class ExplorationService:
                 n_transfer_seeds=g["n_seeds"]))
         return results
 
+    def _effective_pop(self, budget: int, quantize_down: bool = False
+                       ) -> int:
+        """The population width ``_refine`` will actually run for one
+        budget: sub-``nsga.pop`` budgets shrink the population (pow2 ceil
+        normally, pow2 floor when the budget is a hard cap; floored at
+        8).  Factored out so the seeding path caps transfer seeds at what
+        the run can really inject."""
+        pop = self.nsga.pop
+        if budget < pop:
+            p = _pow2(budget)
+            if quantize_down and p > budget:
+                p >>= 1
+            pop = min(pop, max(8, p))
+        return pop
+
     def _refine(self, arc: ParetoArchive, spec: SystemSpec,
                 space: DesignSpace, objectives: Tuple[str, ...],
                 budget: int, key, quantize_down: bool = False,
@@ -488,14 +674,7 @@ class ExplorationService:
         a bad seed is selected out after one generation.
         """
         policy = self.policy
-        pop = self.nsga.pop
-        if budget < pop:        # sub-pop budgets shrink the population:
-            #                     pow2 ceil normally, pow2 floor when the
-            #                     budget is a hard cap; floored at 8
-            p = _pow2(budget)
-            if quantize_down and p > budget:
-                p >>= 1
-            pop = min(pop, max(8, p))
+        pop = self._effective_pop(budget, quantize_down)
         if quantize_down:       # largest pow2 <= budget/pop, floored at 1
             generations = 1 << max(0, (budget // pop).bit_length() - 1)
         else:
@@ -514,13 +693,19 @@ class ExplorationService:
             """Population for the next segment: archive front head (the
             all-time best designs), then any transfer ``extra`` seeds,
             ``filler`` tail (fresh random samples for segment 0, then the
-            carried evolving population)."""
+            carried evolving population).  Transfer seeds reserve their
+            slots FIRST (the caller caps them at half the population when
+            the archive is non-empty), so a warm refinement's large front
+            head cannot crowd out the migrated neighbors it asked for."""
             fr_designs, _ = arc.front()
-            n_warm = min(len(arc), pop)
             n_ext = 0
             if extra is not None:
-                n_ext = min(int(next(iter(extra.values())).shape[0]),
-                            pop - n_warm)
+                # the CALLER caps the seed count (at most half the
+                # effective population when the archive is non-empty, see
+                # _refine_group) — re-deriving the cap here would just be
+                # a second copy of that logic waiting to drift
+                n_ext = min(int(next(iter(extra.values())).shape[0]), pop)
+            n_warm = min(len(arc), pop - n_ext)
             if n_warm + n_ext == 0:
                 return filler
 

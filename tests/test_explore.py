@@ -271,6 +271,11 @@ def test_nsga_scans_out_convergence_trace():
     assert t.pairs == (("latency_ns", "cost_usd"),)
     assert t.hypervolume.shape == (cfg.generations, 1)
     assert np.all(np.diff(t.hypervolume, axis=0) >= 0)       # monotone
+    # the instantaneous per-generation hv is traced alongside: its running
+    # max IS the monotone hypervolume column
+    assert t.hv_gen is not None and t.hv_gen.shape == t.hypervolume.shape
+    np.testing.assert_allclose(np.maximum.accumulate(t.hv_gen, axis=0),
+                               t.hypervolume, rtol=1e-6)
     assert np.all(np.diff(t.best) <= 1e-6)
     assert np.all((0 <= t.feasible_frac) & (t.feasible_frac <= 1))
     assert np.all(t.front_size >= 0) and np.all(t.front_size <= cfg.pop)

@@ -1,0 +1,128 @@
+"""End-to-end fleet-cache integration: one service cold-explores several
+``workload_library`` graphs, then refines some of them *warm* with
+transfer — exercising the manifest growth policy (size bound, LRU
+eviction order), the trust table's save/load round-trip, and the
+transfer/ledger accounting, all against a real on-disk cache directory.
+
+Budgets are tiny (pop 8, two generations per exploration) and the graphs
+are picked so the vmapped evaluator compiles only twice (the three
+attention blocks share padded dims, the MLP stack is the second group).
+"""
+
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.explore.archive import MANIFEST_NAME, ArchiveManifest, ManifestPolicy
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import BudgetPolicy, ExplorationService
+
+SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
+OBJ = ("latency_ns", "cost_usd")
+COLD = ("attn_qwen2_72b", "attn_qwen2_5_32b", "attn_internlm2",
+        "mlp_qwen2_72b")
+WARM = ("attn_qwen2_72b", "attn_internlm2")
+MAX_ENTRIES = 3
+
+
+@pytest.fixture(scope="module")
+def fleet(tmp_path_factory):
+    """One shared fleet run: 4 cold explorations, then 2 warm transfer
+    refinements, against a bounded manifest."""
+    cache = tmp_path_factory.mktemp("fleet_cache")
+    lib = C.presets.workload_library()
+    svc = ExplorationService(
+        cache_dir=cache, nsga=NSGAConfig(pop=8, generations=2),
+        policy=BudgetPolicy(adaptive=False, reallocate=False),
+        manifest_policy=ManifestPolicy(max_entries=MAX_ENTRIES))
+    cold = {}
+    for name in COLD:
+        cold[name] = svc.explore(lib[name], OBJ, budget=16, ch_max=2,
+                                 space_kwargs=SPACE_KW)
+    warm = {}
+    for name in WARM:
+        warm[name] = svc.explore(lib[name], OBJ, budget=48, ch_max=2,
+                                 space_kwargs=SPACE_KW, transfer=True)
+    return dict(cache=cache, svc=svc, cold=cold, warm=warm)
+
+
+def test_every_query_ran_and_archives_persisted(fleet):
+    svc = fleet["svc"]
+    for name, r in fleet["cold"].items():
+        assert not r.from_cache and r.n_evals_run >= 16
+        assert len(r.front_objs) >= 1
+        assert svc._path(r.cache_key).exists()
+    for name, r in fleet["warm"].items():
+        # a bigger budget on a half-explored problem resumes, never
+        # re-serves the stale front
+        assert not r.from_cache and r.n_evals_run >= 32
+        assert r.cache_key == fleet["cold"][name].cache_key
+
+
+def test_manifest_stays_within_bound_with_no_query_errors(fleet):
+    svc = fleet["svc"]
+    assert len(svc.manifest) <= MAX_ENTRIES
+    # every surviving entry still answers nearest() queries (no dangling
+    # embeddings / digests after evictions)
+    any_key = next(iter(svc.manifest.entries))
+    emb = svc.manifest.entries[any_key]["embedding"]
+    got = svc.manifest.nearest(emb, k=10)
+    assert 1 <= len(got) <= MAX_ENTRIES
+    for nk, _ in got:
+        assert svc.manifest.entries[nk]["digest"] is not None
+
+
+def test_eviction_order_is_lru(fleet):
+    """The manifest holds the MOST recently used problems: the warm
+    refinements (and the neighbors they seeded from) outrank the colder
+    entries, and whatever was evicted has strictly older ticks."""
+    svc = fleet["svc"]
+    live = {k: e.get("last_used", 0)
+            for k, e in svc.manifest.entries.items()}
+    # the final warm refinement is the freshest write — it must survive
+    last_warm = fleet["warm"][WARM[-1]].cache_key
+    assert last_warm in live
+    # evicted keys (cold-explored but gone from the index) all have their
+    # archive npz intact — eviction bounds the INDEX, not the cache
+    evicted = [r.cache_key for r in fleet["cold"].values()
+               if r.cache_key not in live]
+    assert len(evicted) >= 1
+    for ck in evicted:
+        assert svc._path(ck).exists()
+
+
+def test_trust_table_roundtrips_through_save_load(fleet):
+    svc = fleet["svc"]
+    trust = svc.manifest.trust
+    assert len(trust) >= 1                 # the warm refinements recorded
+    for r in trust:
+        assert 0.0 <= r["lift"] <= 1.0
+        assert np.all(np.isfinite(r["delta"]))
+    back = ArchiveManifest.load(fleet["cache"] / MANIFEST_NAME)
+    assert len(back.trust) == len(trust)
+    for a, b in zip(trust, back.trust):
+        assert (a["src"], a["dst"]) == (b["src"], b["dst"])
+        assert a["lift"] == pytest.approx(b["lift"])
+        np.testing.assert_allclose(a["delta"], b["delta"])
+    # LRU ticks survive too (a fresh service must not reset the clock)
+    assert back.clock == svc.manifest.clock >= len(COLD)
+
+
+def test_transfer_accounting_consistent_with_ledger(fleet):
+    svc = fleet["svc"]
+    for r in fleet["cold"].values():       # transfer=False: no seeding
+        assert r.transferred_from == () and r.n_transfer_seeds == 0
+    for name, r in fleet["warm"].items():
+        # a credited neighbor implies injected seeds and vice versa (the
+        # balanced_init fallback never fires on a resumed archive)
+        assert (len(r.transferred_from) >= 1) == (r.n_transfer_seeds >= 1)
+        assert r.cache_key not in r.transferred_from
+        # every credited neighbor has a trust record for this refinement
+        for nk in r.transferred_from:
+            assert any(t["src"] == nk and t["dst"] == r.cache_key
+                       for t in svc.manifest.trust)
+    # adaptive off: nothing plateaued, nothing banked, ledger empty
+    for r in list(fleet["cold"].values()) + list(fleet["warm"].values()):
+        assert not r.plateaued and r.n_evals_banked == 0
+        assert r.n_evals_realloc == 0
+    assert svc.ledger == {}

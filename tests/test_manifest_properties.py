@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) for the manifest growth policy:
+LRU eviction never removes the entry being written (or the neighbors
+just queried into existence), dedup merging is idempotent and
+commutative, and ``nearest()`` is invariant under entry-insertion order.
+Like the other property suites, the whole module self-skips when
+hypothesis is absent."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.explore.archive import (ArchiveManifest,  # noqa: E402
+                                   ManifestPolicy)
+
+DIM = 4
+
+# embeddings on a small integer grid: controllable distances, and grid
+# points at L2 distance >= 1 from each other never alias under a dedup
+# radius < 1
+coords = st.lists(st.integers(0, 6), min_size=DIM, max_size=DIM)
+entry_lists = st.lists(
+    st.tuples(coords, st.integers(0, 64)),     # (embedding, n_evals)
+    min_size=1, max_size=12)
+
+
+def _manifest(policy, items, key=lambda i: f"k{i}"):
+    m = ArchiveManifest(policy=policy)
+    for i, (emb, n_evals) in enumerate(items):
+        m.update(key(i), np.asarray(emb, np.float64), (1, 2, 1),
+                 n_evals, n_evals, ("latency_ns",), digest={"i": i})
+    return m
+
+
+@settings(max_examples=50, deadline=None)
+@given(items=entry_lists, max_entries=st.integers(1, 6))
+def test_eviction_never_removes_the_entry_being_written(items, max_entries):
+    """After EVERY update the just-written key is present and the bound
+    holds — however small the bound and however many writes preceded."""
+    m = ArchiveManifest(policy=ManifestPolicy(max_entries=max_entries))
+    for i, (emb, n_evals) in enumerate(items):
+        k = f"k{i}"
+        m.update(k, np.asarray(emb, np.float64), (1, 2, 1),
+                 n_evals, n_evals, (), digest={})
+        assert k in m.entries
+        assert len(m.entries) <= max_entries
+
+
+@settings(max_examples=50, deadline=None)
+@given(items=entry_lists, max_entries=st.integers(1, 6),
+       qi=st.integers(0, 11))
+def test_eviction_never_removes_the_entry_being_queried(items, max_entries,
+                                                        qi):
+    """``nearest`` is read-only (no entry disappears because of a query),
+    and an explicit ``enforce(protect=...)`` spares the queried key."""
+    m = _manifest(ManifestPolicy(max_entries=len(items) + 1), items)
+    qk = f"k{qi % len(items)}"
+    before = set(m.entries)
+    m.nearest(m.entries[qk]["embedding"], k=3)
+    assert set(m.entries) == before            # queries evict nothing
+    m.policy = ManifestPolicy(max_entries=max_entries)
+    m.enforce(protect=(qk,))
+    assert qk in m.entries
+    assert len(m.entries) <= max(max_entries, 1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(items=entry_lists, radius=st.floats(0.0, 2.0))
+def test_dedup_is_idempotent(items, radius):
+    m = _manifest(ManifestPolicy(max_entries=64, dedup_radius=radius),
+                  items)
+    once = {k: dict(e, embedding=e["embedding"].copy())
+            for k, e in m.entries.items()}
+    m.dedup()
+    for k in m.entries:
+        assert k in once
+        for f in ("n_evals", "budget_covered", "searched", "last_used"):
+            assert m.entries[k][f] == once[k][f]
+        np.testing.assert_array_equal(m.entries[k]["embedding"],
+                                      once[k]["embedding"])
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=coords, b=coords, na=st.integers(0, 64), nb=st.integers(0, 64),
+       radius=st.floats(0.1, 3.0))
+def test_dedup_merge_is_commutative(a, b, na, nb, radius):
+    """Merging {A, B} gives the same surviving key and counters whichever
+    insertion order built the manifest.  (Constructed with dedup off so
+    the write-protection of ``update`` doesn't pre-merge asymmetrically;
+    the merge under test is the explicit ``dedup()``.)"""
+    pol0 = ManifestPolicy(max_entries=64, dedup_radius=0.0)
+    pol = ManifestPolicy(max_entries=64, dedup_radius=radius)
+    m1 = _manifest(pol0, [(a, na), (b, nb)])                 # kA=k0, kB=k1
+    m2 = _manifest(pol0, [(b, nb), (a, na)], key=lambda i: f"k{1 - i}")
+    for m in (m1, m2):
+        m.policy = pol
+        m.dedup()
+    assert set(m1.entries) == set(m2.entries)
+    for k in m1.entries:
+        assert m1.entries[k]["n_evals"] == m2.entries[k]["n_evals"]
+        assert m1.entries[k]["budget_covered"] \
+            == m2.entries[k]["budget_covered"]
+        np.testing.assert_array_equal(m1.entries[k]["embedding"],
+                                      m2.entries[k]["embedding"])
+
+
+@settings(max_examples=50, deadline=None)
+@given(items=entry_lists, q=coords, k=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_nearest_is_invariant_under_entry_reordering(items, q, k, seed):
+    pol = ManifestPolicy(max_entries=64)
+    m1 = _manifest(pol, items)
+    order = np.random.default_rng(seed).permutation(len(items))
+    m2 = ArchiveManifest(policy=pol)
+    for i in order:
+        emb, n_evals = items[i]
+        m2.update(f"k{i}", np.asarray(emb, np.float64), (1, 2, 1),
+                  n_evals, n_evals, ("latency_ns",), digest={"i": int(i)})
+    got1 = m1.nearest(np.asarray(q, np.float64), k=k)
+    got2 = m2.nearest(np.asarray(q, np.float64), k=k)
+    assert [kk for kk, _ in got1] == [kk for kk, _ in got2]
+    np.testing.assert_allclose([d for _, d in got1], [d for _, d in got2])

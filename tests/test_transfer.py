@@ -13,16 +13,18 @@ import jax.numpy as jnp
 
 import repro.core as C
 from repro.core.encoding import (PortableDesign, SpaceDigest, from_portable,
-                                 migrate, repair, space_digest, to_portable,
+                                 migrate, portable_signature, repair,
+                                 space_digest, to_portable,
                                  feasibility_penalty)
 from repro.core.network import N_FAMILIES
 from repro.core.workload import (MAX_LOOPS, WL_EMBED_DIM, WL_FEATURE_DIM,
-                                 graph_feature_rows, workload_features,
-                                 workload_signature)
+                                 embedding_delta, graph_feature_rows,
+                                 workload_features, workload_signature)
 from repro.explore.archive import (MANIFEST_NAME, ArchiveManifest,
-                                   ParetoArchive, atomic_savez)
+                                   ManifestPolicy, ParetoArchive, TrustModel,
+                                   atomic_savez, fit_trust_model)
 from repro.explore.nsga import NSGAConfig
-from repro.explore.service import ExplorationService
+from repro.explore.service import BudgetPolicy, ExplorationService
 
 TINY_SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
 
@@ -299,6 +301,153 @@ def test_truncated_archive_npz_is_not_fatal_to_the_service(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# manifest growth policy: LRU eviction, dedup, trust table
+# ---------------------------------------------------------------------------
+def test_manifest_lru_eviction_order(tmp_path):
+    m = ArchiveManifest(tmp_path / MANIFEST_NAME,
+                        policy=ManifestPolicy(max_entries=3))
+    for i in range(3):
+        e = _entry(seed=i)
+        m.update(f"k{i}", e["embedding"], e["dims"], e["n_evals"],
+                 e["budget_covered"], e["searched"], digest={})
+    m.touch("k0")                          # k0 becomes most recently used
+    e = _entry(seed=9)
+    m.update("k3", e["embedding"], e["dims"], e["n_evals"],
+             e["budget_covered"], e["searched"], digest={})
+    # k1 was the least recently used — k0 was touched, k3 just written
+    assert set(m.entries) == {"k0", "k2", "k3"}
+    # the bound holds through further writes, oldest-first
+    e = _entry(seed=10)
+    m.update("k4", e["embedding"], e["dims"], e["n_evals"],
+             e["budget_covered"], e["searched"], digest={})
+    assert set(m.entries) == {"k0", "k3", "k4"}
+
+
+def test_manifest_dedup_merges_near_identical_entries():
+    m = ArchiveManifest(policy=ManifestPolicy(max_entries=8,
+                                              dedup_radius=0.5))
+    base = np.ones(4)
+    m.update("a", base, (1, 2, 1), 32, 32, ("latency_ns",), digest={})
+    # within the radius: merged.  The entry being WRITTEN survives (it is
+    # protected), absorbing the max of the counters and the searched union
+    m.update("b", base + 0.1, (1, 2, 1), 8, 8, ("cost_usd",), digest={})
+    assert set(m.entries) == {"b"}
+    ent = m.entries["b"]
+    assert ent["n_evals"] == 32 and ent["budget_covered"] == 32
+    assert set(ent["searched"]) == {"cost_usd", "latency_ns"}
+    np.testing.assert_array_equal(ent["embedding"], base + 0.1)
+    # outside the radius: both live
+    m.update("c", base + 10.0, (1, 2, 1), 4, 4, (), digest={})
+    assert set(m.entries) == {"b", "c"}
+    # an UNPROTECTED merge (explicit dedup) keeps the better-explored twin
+    m.entries["e"] = dict(embedding=base.copy(), dims=(1, 2, 1),
+                          n_evals=4, budget_covered=4, searched=(),
+                          digest={}, last_used=99)
+    m.dedup()
+    assert "e" not in m.entries and "b" in m.entries
+    assert m.entries["b"]["last_used"] == 99  # freshness absorbed too
+
+
+def test_manifest_v2_roundtrip_preserves_lru_and_trust(tmp_path):
+    p = tmp_path / MANIFEST_NAME
+    m = ArchiveManifest(p, policy=ManifestPolicy(max_entries=8))
+    for i in range(3):
+        e = _entry(seed=i)
+        m.update(f"k{i}", e["embedding"], e["dims"], e["n_evals"],
+                 e["budget_covered"], e["searched"], digest={"i": i})
+    m.touch("k0")
+    m.record_transfer("k1", "k0", np.arange(4, dtype=float), 0.75)
+    m.save()
+    back = ArchiveManifest.load(p)
+    assert back.clock == m.clock
+    for k in m.entries:
+        assert back.entries[k]["last_used"] == m.entries[k]["last_used"]
+    assert len(back.trust) == 1
+    r = back.trust[0]
+    assert (r["src"], r["dst"], r["lift"]) == ("k1", "k0", 0.75)
+    np.testing.assert_allclose(r["delta"], np.arange(4, dtype=float))
+    # LRU state survives: the next eviction decision matches in-memory
+    back.policy = ManifestPolicy(max_entries=2)
+    back.enforce()
+    assert "k0" in back.entries              # touched last => survives
+
+
+def test_manifest_save_tolerates_mixed_embedding_dims(tmp_path):
+    """An embedding-layout upgrade must not wedge persistence: entries
+    written under different feature dimensions save and load side by
+    side (nearest() already skips the mismatched ones per query)."""
+    p = tmp_path / MANIFEST_NAME
+    m = ArchiveManifest(p)
+    m.update("old", np.ones(4), (1, 2, 1), 8, 8, (), digest={})
+    m.update("new", np.ones(9), (1, 2, 1), 8, 8, (), digest={})
+    m.save()
+    back = ArchiveManifest.load(p)
+    assert back.entries["old"]["embedding"].shape == (4,)
+    assert back.entries["new"]["embedding"].shape == (9,)
+    assert [k for k, _ in back.nearest(np.ones(9), k=5)] == ["new"]
+
+
+def test_manifest_trust_records_are_bounded():
+    m = ArchiveManifest(policy=ManifestPolicy(max_trust_records=5))
+    for i in range(12):
+        m.record_transfer(f"s{i}", "d", np.zeros(3), 0.5)
+    assert len(m.trust) == 5
+    assert m.trust[0]["src"] == "s7"         # oldest rolled off
+
+
+def test_trust_model_fit_predict_and_reweighting():
+    rng = np.random.default_rng(0)
+    m = ArchiveManifest(policy=ManifestPolicy())
+    # near sources helped (lift ~1), far sources didn't (lift ~0)
+    for i in range(8):
+        m.record_transfer(f"near{i}", "d", rng.random(4) * 0.1, 0.9)
+        m.record_transfer(f"far{i}", "d", 2.0 + rng.random(4), 0.1)
+    tm = m.trust_model(dim=4)
+    assert isinstance(tm, TrustModel)
+    assert tm.predict(np.zeros(4)) > tm.predict(np.full(4, 2.5))
+    # dimension-mismatched deltas predict neutral, never raise
+    assert tm.predict(np.zeros(7)) == 0.0
+    # too few records => no model
+    assert fit_trust_model(m.trust[:2]) is None
+    # trust-weighted nearest can ONLY pull trusted entries closer: the
+    # reweighted distance is <= the raw distance
+    m.update("e1", np.zeros(4), (1, 2, 1), 8, 8, (), digest={})
+    m.update("e2", np.full(4, 3.0), (1, 2, 1), 8, 8, (), digest={})
+    q = np.full(4, 0.05)
+    raw = dict(m.nearest(q, k=2))
+    wtd = dict(m.nearest(q, k=2, trust=tm))
+    assert set(raw) == set(wtd) == {"e1", "e2"}
+    for k in raw:
+        assert wtd[k] <= raw[k] + 1e-12
+
+
+def test_embedding_delta_symmetric_and_zero_on_match():
+    lib = C.presets.workload_library()
+    a = workload_features(lib["attn_qwen2_72b"])
+    b = workload_features(lib["conv_whisper"])
+    np.testing.assert_allclose(embedding_delta(a, b), embedding_delta(b, a))
+    assert np.all(embedding_delta(a, a) == 0.0)
+    assert np.all(embedding_delta(a, b) >= 0.0)
+    assert embedding_delta(a, b).shape == (WL_EMBED_DIM,)
+
+
+def test_portable_signature_identity_and_sensitivity():
+    _, space = _space(C.presets.transformer_block())
+    d = _repaired_design(space, seed=7)
+    sig = portable_signature(d, space)
+    # migration through the same space is the identity => same signature
+    assert portable_signature(migrate(d, space, space), space) == sig
+    # any field change changes the signature
+    d2 = {k: np.array(v) for k, v in d.items()}
+    d2["shape"][0, 0] = 2 if int(d2["shape"][0, 0]) == 1 \
+        else int(d2["shape"][0, 0]) - 1
+    assert portable_signature(d2, space) != sig
+    d3 = {k: np.array(v) for k, v in d.items()}
+    d3["packaging"] = np.asarray((int(d3["packaging"]) + 1) % 3)
+    assert portable_signature(d3, space) != sig
+
+
+# ---------------------------------------------------------------------------
 # the service's transfer warm-start path
 # ---------------------------------------------------------------------------
 def test_transfer_seeds_cold_query_from_neighbor_archive(tmp_path):
@@ -356,6 +505,100 @@ def test_transfer_warm_hit_short_circuits(tmp_path):
                     space_kwargs=TINY_SPACE_KW, transfer=True)
     assert r.from_cache and r.n_evals_run == 0
     assert r.transferred_from == () and r.n_transfer_seeds == 0
+
+
+# ---------------------------------------------------------------------------
+# transfer v2: warm-archive seeding, seed dedup, stale-manifest reload
+# ---------------------------------------------------------------------------
+def test_warm_archive_refinement_takes_transfer_seeds(tmp_path):
+    """A budget-increase refinement of a half-explored problem is seeded
+    from neighbors its archive has never seen — not just cold starts —
+    and the outcome lands in the trust table."""
+    svc = ExplorationService(cache_dir=tmp_path,
+                             nsga=NSGAConfig(pop=8, generations=2))
+    neighbor = svc.explore(_tiny_graph(64), ("latency_ns", "cost_usd"),
+                           budget=32, ch_max=2, space_kwargs=TINY_SPACE_KW)
+    half = svc.explore(_tiny_graph(96), ("latency_ns", "cost_usd"),
+                       budget=16, ch_max=2, space_kwargs=TINY_SPACE_KW)
+    assert not half.from_cache
+    r = svc.explore(_tiny_graph(96), ("latency_ns", "cost_usd"), budget=48,
+                    ch_max=2, space_kwargs=TINY_SPACE_KW, transfer=True)
+    assert not r.from_cache                  # resumed, not served stale
+    assert r.transferred_from == (neighbor.cache_key,)
+    assert 1 <= r.n_transfer_seeds <= svc.nsga.pop // 2
+    assert any(t["src"] == neighbor.cache_key
+               and t["dst"] == r.cache_key
+               and 0.0 <= t["lift"] <= 1.0 for t in svc.manifest.trust)
+    assert half.cache_key == r.cache_key
+
+
+def test_warm_refinement_with_own_front_injects_nothing(tmp_path):
+    """Regression: offered its OWN archive front as neighbor seeds, a
+    resumed problem must inject zero duplicates — and the refinement must
+    behave exactly as if transfer was never requested (same PRNG path,
+    identical resumed front)."""
+    import shutil
+    g = _tiny_graph(64)
+    dirs = {}
+    for tag in ("twin", "plain"):
+        dirs[tag] = tmp_path / tag
+    svc0 = ExplorationService(cache_dir=dirs["twin"],
+                              nsga=NSGAConfig(pop=8, generations=2))
+    r0 = svc0.explore(g, ("latency_ns", "cost_usd"), budget=16, ch_max=2,
+                      space_kwargs=TINY_SPACE_KW,
+                      key=jax.random.PRNGKey(3))
+    # forge a same-content twin entry: the problem's own archive under a
+    # different key, same digest, same embedding => every migrated seed
+    # is a duplicate of the resumed front
+    ck = r0.cache_key
+    ent = svc0.manifest.entries[ck]
+    shutil.copy(svc0._path(ck), dirs["twin"] / "feedbeefdeadbeef0000.npz")
+    svc0.manifest.update("feedbeefdeadbeef0000", ent["embedding"],
+                         (2, 2, 1), ent["n_evals"], ent["budget_covered"],
+                         ent["searched"], digest=ent["digest"])
+    svc0.manifest.save()
+    shutil.copytree(dirs["twin"], dirs["plain"])
+
+    mk = lambda d: ExplorationService(cache_dir=d,
+                                      nsga=NSGAConfig(pop=8, generations=2))
+    rt = mk(dirs["twin"]).explore(
+        g, ("latency_ns", "cost_usd"), budget=48, ch_max=2,
+        space_kwargs=TINY_SPACE_KW, transfer=True,
+        key=jax.random.PRNGKey(5))
+    rp = mk(dirs["plain"]).explore(
+        g, ("latency_ns", "cost_usd"), budget=48, ch_max=2,
+        space_kwargs=TINY_SPACE_KW, transfer=False,
+        key=jax.random.PRNGKey(5))
+    # zero duplicate seeds injected, no neighbor credited, no balanced
+    # fallback on a resumed archive ...
+    assert rt.n_transfer_seeds == 0 and rt.transferred_from == ()
+    # ... and the resumed front (hence its hypervolume) is bit-identical
+    # to the transfer-free refinement
+    np.testing.assert_array_equal(rt.front_objs, rp.front_objs)
+    np.testing.assert_array_equal(rt.trace.archive_hv, rp.trace.archive_hv)
+
+
+def test_second_service_sees_fresh_manifest_before_acting(tmp_path):
+    """Regression (stale manifest): service B loads the manifest, then
+    service A indexes new problems; B's next manifest access must see
+    A's writes (mtime-checked reload), so B's eviction decisions and
+    transfer lookups never act on a stale index."""
+    pol = ManifestPolicy(max_entries=8)
+    a = ExplorationService(cache_dir=tmp_path, manifest_policy=pol,
+                           nsga=NSGAConfig(pop=8, generations=2))
+    b = ExplorationService(cache_dir=tmp_path, manifest_policy=pol,
+                           nsga=NSGAConfig(pop=8, generations=2))
+    assert len(b.manifest) == 0              # B loaded the (empty) index
+    ra = a.explore(_tiny_graph(64), ("latency_ns", "cost_usd"), budget=16,
+                   ch_max=2, space_kwargs=TINY_SPACE_KW)
+    # B sees A's write without any B-side query in between
+    assert ra.cache_key in b.manifest.entries
+    # ... and B's transfer query finds A's archive as a neighbor
+    rb = b.explore(_tiny_graph(96), ("latency_ns", "cost_usd"), budget=16,
+                   ch_max=2, space_kwargs=TINY_SPACE_KW, transfer=True)
+    assert rb.transferred_from == (ra.cache_key,)
+    # the same-object fast path still holds while nothing changed on disk
+    assert b.manifest is b.manifest
 
 
 # ---------------------------------------------------------------------------
