@@ -1,11 +1,16 @@
 """Explore the latency-cost tradeoff front of the paper's Transformer
-block (Fig. 9) through the `repro.explore` service, then print the front
-classified by packaging technology.
+block (Fig. 9) through the declarative ``repro.api`` front door, then
+print the front classified by packaging technology.
 
-The first run is cold: an NSGA-II population evolves under the shared
-evaluation model and every evaluated design lands in the on-disk Pareto
-archive (artifacts/explore_cache/<hash>.npz).  Run the script again and
-the identical query is answered from the archive in milliseconds.
+``Session.plan(query)`` shows what WILL happen before any evaluation is
+spent: the engine chosen, the quantized scan-segment schedule, the
+cache-hit verdict (and, for ``transfer=True`` queries against a warm
+cache directory, the predicted neighbor seeds with their trust-weighted
+quotas).  ``Session.submit`` then executes the plan, streaming one
+``SegmentEvent`` per scan segment — the dashboard hook — and returns a
+unified ``Result`` whose ``provenance`` records the cache / transfer /
+reallocation accounting.  Run the script twice: the second run's plan
+says ``cache_hit=True`` and the query is answered in milliseconds.
 
     PYTHONPATH=src python examples/explore_front.py
 """
@@ -13,27 +18,40 @@ the identical query is answered from the archive in milliseconds.
 import numpy as np
 
 import repro.core as C
+from repro.api import Problem, Query, Session
 from repro.core.constants import PACKAGING_NAMES
 from repro.explore import hypervolume_2d
-from repro.explore.service import ExplorationService
 
 
 def main():
     graph = C.presets.transformer_block()
-    svc = ExplorationService()
-    res = svc.explore(graph, objectives=("latency_ns", "cost_usd"),
-                      budget=1024, ch_max=4,
-                      space_kwargs=dict(max_shape=(32, 32, 4, 4, 2, 2)))
+    session = Session()
+    query = Query(
+        Problem(graph, objectives=("latency_ns", "cost_usd"), ch_max=4,
+                space_kwargs=dict(max_shape=(32, 32, 4, 4, 2, 2))),
+        budget=1024)
 
-    src = "archive cache (warm)" if res.from_cache else \
-        f"cold search ({res.n_evals_run} evaluations)"
-    print(f"query answered from {src} in {res.elapsed_s:.2f}s "
-          f"[archive {res.cache_key}]")
+    plan = session.plan(query)
+    print(f"plan: engine={plan.engine} cache_hit={plan.cache_hit} "
+          f"segments={len(plan.segments)} "
+          f"[archive {plan.cache_key}]")
+
+    res = session.submit(
+        query,
+        on_segment=lambda e: print(
+            f"  segment {e.segment}: {e.trace.generations} generations, "
+            f"front {int(e.trace.front_size[-1])}, "
+            f"log-hv {e.trace.hypervolume[-1, 0]:.2f}"))
+
+    pv = res.provenance
+    src = "archive cache (warm)" if pv.from_cache else \
+        f"cold search ({pv.n_evals_run} evaluations)"
+    print(f"query answered from {src} in {pv.elapsed_s:.2f}s")
 
     if res.trace is not None:       # cold runs carry per-generation telemetry
         t = res.trace
         print(f"\nconvergence ({t.generations} generations, "
-              f"plateaued={res.plateaued}, banked={res.n_evals_banked} "
+              f"plateaued={pv.plateaued}, banked={pv.n_evals_banked} "
               f"of the budget):")
         print(f"  {'gen':>5s} {'evals':>7s} {'front':>6s} "
               f"{'log-hv':>10s} {'best':>9s} {'feas':>5s}")
@@ -55,7 +73,7 @@ def main():
     ref = res.front_objs.max(axis=0) * 1.1
     print(f"\nfront hypervolume (ref={ref.round(1)}): "
           f"{hypervolume_2d(res.front_objs, ref):.4g}")
-    print("re-run this script: the same query now hits the archive.")
+    print("re-run this script: the same query now plans as a cache hit.")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,17 @@
-"""Quickstart: explore a chiplet-based accelerator for a Transformer block
-with Monad (paper Fig. 4 workload, EDP objective), then print the chosen
-design and its PPA + cost breakdown.
+"""Quickstart: co-design a chiplet-based accelerator for a Transformer
+block with Monad (paper Fig. 4 workload, EDP objective) through the
+declarative ``repro.api`` front door, then print the chosen design and
+its PPA + cost breakdown.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import numpy as np
 
 import repro.core as C
+from repro.api import Problem, Query, Session
 from repro.core.constants import PACKAGING_NAMES
-from repro.core.optimizer import SAConfig, optimize
+from repro.core.optimizer import SAConfig
 
 
 def main():
@@ -23,14 +24,19 @@ def main():
         print(f"  edge {e.src} -> {e.dst} ({e.tensor_src}->{e.tensor_dst}, "
               f"{graph.transfer_elems(e)} elems)")
 
-    # 2. co-optimize architecture + integration (nested BO x SA engine)
-    spec = C.SystemSpec.build(graph, ch_max=6)
-    space = C.DesignSpace(spec, max_total_pes=4096)
-    res = optimize(spec, space, jax.random.PRNGKey(0), weights=C.OBJ_EDP,
-                   n_init=4, n_iter=8, sa=SAConfig(steps=250, chains=4))
+    # 2. one declarative query: the scalarized BO x SA engine under the
+    # EDP weighting (the nested engine of paper Fig. 6b)
+    problem = Problem(graph, objectives=("latency_ns", "energy_pj"),
+                      ch_max=6, space_kwargs=dict(max_total_pes=4096))
+    query = Query(problem, engine="bo_sa", weights=C.OBJ_EDP,
+                  engine_opts=dict(n_init=4, n_iter=8,
+                                   sa=SAConfig(steps=250, chains=4)))
+    session = Session()
+    print(f"\nplan: {session.plan(query)}")
+    res = session.submit(query)
 
-    # 3. inspect the winner
-    d, m = res.design, res.metrics
+    # 3. inspect the winner (one unified Result whatever engine ran)
+    d, m = res.best_design, res.best_metrics
     print("\nchosen design:")
     shape = np.asarray(d["shape"])
     for i, w in enumerate(graph.workloads):
@@ -43,9 +49,10 @@ def main():
     for k in ("latency_ns", "energy_pj", "edp", "cost_usd", "area_mm2",
               "utilization"):
         print(f"  {k:14s} {float(m[k]):.4g}")
-    print(f"  search objective improved "
-          f"{res.history[0][1] - res.history[-1][1]:.2f} nats over "
-          f"{len(res.history)} rounds")
+    t = res.trace
+    print(f"  search objective improved {t.best[0] - t.best[-1]:.2f} nats "
+          f"over {t.generations} rounds "
+          f"({res.provenance.n_evals_run} evaluations)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""``repro.api`` — the one front door to Monad's search engines.
+
+Re-exports the declarative Problem / Query / Plan / Session surface from
+``repro.explore.api``: build a hashable ``Problem``, describe a ``Query``
+(budget, engine, transfer/seed/policy options), inspect the ``Plan``
+before spending anything, and ``submit`` for a unified ``Result`` with
+full provenance — whichever engine (NSGA front explorer, nested BO x SA,
+or the paper's two-stage flow) answers it.
+
+    from repro.api import Problem, Query, Session
+
+    s = Session()
+    q = Query(Problem(graph, objectives=("latency_ns", "cost_usd")),
+              budget=2048, transfer=True)
+    print(s.plan(q))            # engine, segments, predicted neighbors
+    r = s.submit(q)             # unified Result + Provenance
+"""
+
+from .explore.api import (ENGINES, NeighborPlan, Plan,  # noqa: F401
+                          Problem, Provenance, Query, Result, SegmentEvent,
+                          SegmentPlan, Session, plan, session, submit)
+
+__all__ = [
+    "ENGINES", "NeighborPlan", "Plan", "Problem", "Provenance", "Query",
+    "Result", "SegmentEvent", "SegmentPlan", "Session", "plan", "session",
+    "submit",
+]

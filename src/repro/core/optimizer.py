@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -301,6 +302,35 @@ def optimize(spec: SystemSpec, space: DesignSpace, key,
              init_design: Optional[Dict] = None,
              seed_designs: Optional[Sequence[Dict]] = None,
              archive=None) -> SearchResult:
+    """DEPRECATED shim over the ``bo_sa`` engine backend — routes through
+    ``repro.api.Session.submit`` (``Query(Problem.from_spec(spec, space),
+    engine="bo_sa", ...)``) and returns the backend's ``SearchResult``
+    unchanged.  See ``_optimize_impl`` for the engine itself."""
+    warnings.warn(
+        "legacy entry point repro.core.optimizer.optimize() is "
+        "deprecated; use repro.api: Session(tech=...).submit(Query("
+        "Problem.from_spec(spec, space), engine=\"bo_sa\", weights=..., "
+        "engine_opts=dict(n_init=..., n_iter=..., sa=...)))",
+        DeprecationWarning, stacklevel=2)
+    from ..explore.api import Problem, Query, Session
+    q = Query(Problem.from_spec(spec, space), engine="bo_sa",
+              weights=tuple(float(w) for w in weights),
+              seed_designs=seed_designs, archive=archive,
+              engine_opts=dict(bo_fields=bo_fields, sa_fields=sa_fields,
+                               n_init=n_init, n_iter=n_iter, sa=sa,
+                               init_design=init_design))
+    return Session(tech=tech).submit(q, key=key).raw
+
+
+def _optimize_impl(spec: SystemSpec, space: DesignSpace, key,
+                   weights=OBJ_EDP,
+                   bo_fields: Tuple[str, ...] = BO_FIELDS,
+                   sa_fields: Tuple[str, ...] = SA_FIELDS,
+                   n_init: int = 8, n_iter: int = 24,
+                   sa: SAConfig = SAConfig(), tech=None,
+                   init_design: Optional[Dict] = None,
+                   seed_designs: Optional[Sequence[Dict]] = None,
+                   archive=None) -> SearchResult:
     """Nested BO(low-dim) x SA(high-dim) search (paper Fig. 6b).
 
     Setting ``bo_fields=()`` degenerates to pure SA over ``sa_fields`` —
@@ -411,6 +441,29 @@ def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
                        tech=None, archive=None,
                        seed_designs: Optional[Sequence[Dict]] = None
                        ) -> SearchResult:
+    """DEPRECATED shim over the ``two_stage`` engine backend — routes
+    through ``repro.api.Session.submit`` (``Query(..., engine=
+    "two_stage")``) and returns the backend's ``SearchResult`` unchanged.
+    See ``_two_stage_impl`` for the engine itself."""
+    warnings.warn(
+        "legacy entry point repro.core.optimizer.two_stage_optimize() is "
+        "deprecated; use repro.api: Session(tech=...).submit(Query("
+        "Problem.from_spec(spec, space), engine=\"two_stage\", "
+        "engine_opts=dict(n_candidates=..., sa=...)))",
+        DeprecationWarning, stacklevel=2)
+    from ..explore.api import Problem, Query, Session
+    q = Query(Problem.from_spec(spec, space), engine="two_stage",
+              seed_designs=seed_designs, archive=archive,
+              engine_opts=dict(n_candidates=n_candidates, sa=sa))
+    return Session(tech=tech).submit(q, key=key).raw
+
+
+def _two_stage_impl(spec: SystemSpec, space: DesignSpace, key,
+                    n_candidates: int = 3,
+                    sa: SAConfig = SAConfig(steps=250, chains=4),
+                    tech=None, archive=None,
+                    seed_designs: Optional[Sequence[Dict]] = None
+                    ) -> SearchResult:
     """Stage 1 (architecture): search arch fields under several objective
     scalarizations, keep the Pareto-optimal candidates over
     (latency, energy, area).  Stage 2 (integration): for each kept
@@ -430,11 +483,11 @@ def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
     weights_list = [OBJ_LATENCY, OBJ_ENERGY, OBJ_EDP,
                     (1.0, 1.0, 0.0, 1.0)][:max(n_candidates, 2)]
     for i, w in enumerate(weights_list):
-        r = optimize(spec, space, keys[i], weights=w,
-                     bo_fields=("shape", "spatial"),
-                     sa_fields=("order", "tiling", "pipe"),
-                     n_init=4, n_iter=6, sa=sa, tech=tech, archive=archive,
-                     seed_designs=seed_designs)
+        r = _optimize_impl(spec, space, keys[i], weights=w,
+                           bo_fields=("shape", "spatial"),
+                           sa_fields=("order", "tiling", "pipe"),
+                           n_init=4, n_iter=6, sa=sa, tech=tech,
+                           archive=archive, seed_designs=seed_designs)
         cands.append(r.design)
         m = r.metrics
         objs.append([float(m["latency_ns"]), float(m["energy_pj"]),
@@ -443,11 +496,11 @@ def two_stage_optimize(spec: SystemSpec, space: DesignSpace, key,
 
     best = None
     for ki, ci in enumerate(keep):
-        r = optimize(spec, space, keys[4 + (ki % 4)], weights=OBJ_EDP,
-                     bo_fields=("packaging", "family"),
-                     sa_fields=("placement",),
-                     n_init=2, n_iter=4, sa=sa, tech=tech,
-                     init_design=cands[ci], archive=archive)
+        r = _optimize_impl(spec, space, keys[4 + (ki % 4)], weights=OBJ_EDP,
+                           bo_fields=("packaging", "family"),
+                           sa_fields=("placement",),
+                           n_init=2, n_iter=4, sa=sa, tech=tech,
+                           init_design=cands[ci], archive=archive)
         if best is None or r.objective < best.objective:
             best = r
     best.history.append(("pareto_kept", len(keep)))

@@ -7,9 +7,14 @@ Three layers (see README "Exploration service"):
 * ``nsga``     — NSGA-II-style evolutionary front explorer: one
   ``lax.scan`` over vmapped populations, reusing the core encoding's
   ``mutate``/``random_design`` moves and the shared evaluation path.
-* ``service``  — the query API: ``explore(graph, objectives, budget)``,
-  batching concurrent same-spec queries into one vmapped run and serving
-  warm queries straight from the archive cache.
+* ``service``  — the NSGA engine backend (``run_queries``): batching
+  concurrent same-spec queries into one vmapped run and serving warm
+  queries straight from the archive cache.  The historic ``explore`` /
+  ``explore_batch`` entry points live here as deprecation shims.
+* ``api``      — the declarative front door (re-exported at
+  ``repro.api``): hashable ``Problem``, declarative ``Query``,
+  pre-evaluation ``Plan``, and ``Session.submit`` returning one unified
+  ``Result`` whichever engine ran.
 
 ``archive`` is imported eagerly (it is dependency-free and is the canonical
 home of ``pareto_front``, which ``repro.core.optimizer`` re-exports);
@@ -30,9 +35,13 @@ _LAZY = {
     "NSGAConfig": ".nsga", "make_nsga": ".nsga",
     "BudgetPolicy": ".service",
     "ExplorationService": ".service", "ExploreQuery": ".service",
-    "ExploreResult": ".service", "default_service": ".service",
+    "ExploreResult": ".service", "SegmentEvent": ".service",
+    "default_service": ".service",
     "explore": ".service",
-    "nsga": ".nsga", "service": ".service",
+    "Problem": ".api", "Query": ".api", "Plan": ".api", "Result": ".api",
+    "Session": ".api", "Provenance": ".api", "SegmentPlan": ".api",
+    "NeighborPlan": ".api",
+    "api": ".api", "nsga": ".nsga", "service": ".service",
 }
 
 __all__ = ["ParetoArchive", "pareto_front", "dominates", "dominance_counts",
@@ -40,13 +49,13 @@ __all__ = ["ParetoArchive", "pareto_front", "dominates", "dominance_counts",
            "objective_pairs", "spec_space_key", "ConvergenceTrace",
            "HV_LOG_REF", "ArchiveManifest", "ManifestPolicy", "TrustModel",
            "fit_trust_model", "MANIFEST_NAME", "atomic_savez",
-           *sorted(k for k in _LAZY if k not in ("nsga", "service"))]
+           *sorted(k for k in _LAZY if k not in ("api", "nsga", "service"))]
 
 
 def __getattr__(name):
     if name in _LAZY:
         mod = importlib.import_module(_LAZY[name], __name__)
-        if name in ("nsga", "service"):
+        if name in ("api", "nsga", "service"):
             return mod
         return getattr(mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,542 @@
+"""One front door: the declarative Problem / Query / Plan / Session API.
+
+Monad's claim is one *uniform encoding* across the architecture and
+integration spaces — this module gives the user-facing surface the same
+property.  The four entry points that accreted across the early PRs
+(``ExplorationService.explore`` / ``explore_batch``,
+``core.optimizer.optimize`` / ``two_stage_optimize``) are now thin
+deprecation shims over ONE declarative request path:
+
+* ``Problem``  — a canonical, hashable statement of *what* to search:
+  workload graph + objectives + constraints (the ``DesignSpace`` bounds)
+  + padded spec space.  Content-addressed (``Problem.key()``), so equal
+  problems built from different Python objects compare and hash equal.
+* ``Query``    — a declarative request against a problem: evaluation
+  ``budget``, ``engine`` selector (``nsga | bo_sa | two_stage | auto``),
+  transfer/seed/policy options, per-engine knobs in ``engine_opts``.
+* ``Plan``     — what ``Session.plan(query)`` returns *before* any
+  evaluation is spent: the engine chosen, the cache-hit verdict, the
+  quantized scan-segment schedule, and the predicted transfer neighbors
+  with their trust-weighted seed quotas.
+* ``Session``  — owns the cache directory / engines / budget policy
+  (wrapping an ``ExplorationService``); ``submit(query | [queries])``
+  executes plans and returns one unified ``Result`` per query whatever
+  engine ran — front, designs, trace, and a ``Provenance`` record of
+  the cache/transfer/reallocation accounting.
+
+Streaming is part of the contract: ``submit(..., on_segment=cb)`` fires
+``cb(SegmentEvent)`` at every scan-segment boundary with the incremental
+``ConvergenceTrace`` slice (scalarized engines fire once, on completion),
+so dashboards and async serving observe a run without waiting for it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from ..core.constants import DEFAULT_TECH
+from ..core.encoding import DesignSpace
+from ..core.evaluate import SystemSpec
+from ..core.optimizer import METRIC_KEYS, OBJ_EDP
+from ..core.workload import WorkloadGraph, workload_features
+from .archive import ConvergenceTrace, pareto_front, spec_space_key
+from .service import (DEFAULT_OBJECTIVES, BudgetPolicy, ExplorationService,
+                      ExploreQuery, ExploreResult, SegmentEvent, _pow2)
+
+ENGINES = ("nsga", "bo_sa", "two_stage", "auto")
+
+
+class Problem:
+    """A canonical, hashable exploration problem: *what* to search.
+
+    ``graph`` + ``objectives`` + the ``DesignSpace`` constraint kwargs
+    (``space_kwargs``: ``max_shape``, ``max_total_pes``, ...) + the padded
+    spec space (``ch_max``).  Identity is content-addressed: two Problems
+    built from equal workloads under equal bounds are ``==`` and hash
+    equal whatever Python objects they came from (``spec_space_key`` over
+    the padded arrays and static bounds, plus the objective tuple) — the
+    derivation ``ExplorationService`` used to re-do inline per query.
+
+    ``Problem.from_spec(spec, space)`` adopts a prebuilt pair instead
+    (the scalarized engines' historic calling convention)."""
+
+    __slots__ = ("graph", "objectives", "ch_max", "space_kwargs",
+                 "spec", "space", "_key")
+
+    def __init__(self, graph: WorkloadGraph,
+                 objectives: Sequence[str] = DEFAULT_OBJECTIVES,
+                 ch_max: int = 4,
+                 space_kwargs: Optional[Dict] = None, *,
+                 spec: Optional[SystemSpec] = None,
+                 space: Optional[DesignSpace] = None):
+        self.objectives = tuple(objectives)
+        if not self.objectives:
+            raise ValueError("at least one objective required")
+        bad = [o for o in self.objectives if o not in METRIC_KEYS]
+        if bad:
+            raise ValueError(f"unknown objectives {bad}; pick from "
+                             f"{METRIC_KEYS}")
+        self.spec = spec if spec is not None \
+            else SystemSpec.build(graph, ch_max=ch_max)
+        self.graph = self.spec.graph
+        self.ch_max = int(self.spec.CH)
+        self.space = space if space is not None \
+            else DesignSpace(self.spec, **(space_kwargs or {}))
+        # the full constraint set, reconstructable whichever constructor
+        # ran — the NSGA backend rebuilds the space from these
+        self.space_kwargs = dict(
+            max_shape=tuple(self.space.max_shape),
+            max_logB=int(self.space.max_logB),
+            max_total_pes=int(self.space.max_total_pes),
+            fixed_packaging=int(self.space.fixed_packaging),
+            fixed_family=int(self.space.fixed_family),
+            allow_pipeline=bool(self.space.allow_pipeline))
+        h = hashlib.sha256()
+        h.update(spec_space_key(self.spec, self.space).encode())
+        h.update(repr(self.objectives).encode())
+        self._key = h.hexdigest()[:20]
+
+    @classmethod
+    def from_spec(cls, spec: SystemSpec, space: DesignSpace,
+                  objectives: Sequence[str] = DEFAULT_OBJECTIVES
+                  ) -> "Problem":
+        """Adopt a prebuilt (SystemSpec, DesignSpace) pair."""
+        return cls(spec.graph, objectives=objectives, spec=spec,
+                   space=space)
+
+    def key(self) -> str:
+        """Content hash of this problem (tech-independent; the archive
+        cache key additionally folds the session's ``TechConstants`` in —
+        see ``Session.plan``)."""
+        return self._key
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, Problem) and self._key == other._key
+
+    def __repr__(self):
+        return (f"Problem({self._key}, W={self.spec.W}, "
+                f"objectives={self.objectives})")
+
+
+@dataclasses.dataclass
+class Query:
+    """One declarative search request against a ``Problem``.
+
+    ``engine`` selects the backend: ``"nsga"`` (multi-objective front
+    explorer, cache/batch/transfer-aware), ``"bo_sa"`` (the paper's nested
+    BO x SA scalarized engine), ``"two_stage"`` (the paper's Sec. IV-A
+    architecture-then-integration flow), or ``"auto"`` — ``bo_sa`` when
+    ``weights`` are given, else ``nsga``.
+
+    ``budget`` is the evaluation budget for the NSGA engine (scalarized
+    engines derive their spend from ``engine_opts``: ``n_init``/``n_iter``
+    /``sa`` for ``bo_sa``; ``n_candidates``/``sa`` for ``two_stage``).
+    ``transfer`` opts the NSGA engine into cross-workload seed migration;
+    ``seed_designs`` warm-starts the scalarized engines; ``policy``
+    overrides the session's ``BudgetPolicy`` for this submission;
+    ``archive`` lets a scalarized run record into a ``ParetoArchive``."""
+    problem: Problem
+    budget: int = 2048
+    engine: str = "auto"
+    transfer: bool = False
+    weights: Optional[Tuple[float, ...]] = None
+    seed_designs: Optional[Sequence[Dict]] = None
+    policy: Optional[BudgetPolicy] = None
+    archive: Optional[object] = None            # ParetoArchive passthrough
+    engine_opts: Optional[Dict] = None
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; pick from "
+                             f"{ENGINES}")
+        if self.weights is not None:
+            self.weights = tuple(float(w) for w in self.weights)
+
+    def resolved_engine(self) -> str:
+        if self.engine != "auto":
+            return self.engine
+        return "bo_sa" if self.weights is not None else "nsga"
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """One planned scan segment: ``pop`` designs evaluated per generation
+    for ``generations`` generations (``n_evals`` total)."""
+    index: int
+    pop: int
+    generations: int
+    n_evals: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NeighborPlan:
+    """One predicted transfer source: the neighbor's archive ``key``, its
+    trust-reweighted embedding ``distance``, and the seed ``quota`` it
+    earned out of the injection cap."""
+    key: str
+    distance: float
+    quota: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """What a query WILL do, before any evaluation is spent.
+
+    ``cache_hit`` is the warm-serve verdict (the archive already covers
+    the budget and objectives — ``segments`` is empty and submitting
+    costs nothing).  ``segments`` is the quantized scan schedule the NSGA
+    engine will run (or the scalarized engine's estimated spend, one
+    segment per planned engine invocation).  ``neighbors`` are the
+    predicted transfer sources with their trust-weighted seed quotas
+    (``seed_cap`` bounds the total injection).  A plan is advisory on a
+    shared cache — a concurrent service may warm the archive between
+    ``plan`` and ``submit`` — and per-query: batched same-problem queries
+    share one run sized by their union/max."""
+    engine: str
+    cache_key: str
+    cache_hit: bool
+    budget: int
+    objectives: Tuple[str, ...]
+    segments: Tuple[SegmentPlan, ...]
+    neighbors: Tuple[NeighborPlan, ...] = ()
+    seed_cap: int = 0
+
+    @property
+    def n_evals_planned(self) -> int:
+        return sum(s.n_evals for s in self.segments)
+
+
+@dataclasses.dataclass(frozen=True)
+class Provenance:
+    """Where a ``Result`` came from: the engine that ran, the archive it
+    was served from, and the full cache / transfer / reallocation
+    accounting — uniform across engines."""
+    cache_key: str
+    engine: str
+    from_cache: bool
+    n_evals_run: int
+    n_evals_banked: int
+    n_evals_realloc: int
+    transferred_from: Tuple[str, ...]
+    n_transfer_seeds: int
+    plateaued: bool
+    elapsed_s: float
+
+
+@dataclasses.dataclass
+class Result:
+    """The unified answer to one ``Query``, whatever engine ran.
+
+    ``front_*`` is the (possibly single-point) Pareto front over the
+    query's objectives; ``best_*`` is the scalarized incumbent (``None``
+    for pure front queries); ``trace`` the run's ``ConvergenceTrace``
+    (``None`` on pure cache hits); ``provenance`` the accounting; ``raw``
+    the engine-native result (``ExploreResult`` / ``SearchResult``) the
+    legacy shims return."""
+    objectives: Tuple[str, ...]
+    front_objs: np.ndarray
+    front_metrics: np.ndarray
+    front_designs: List[Dict[str, np.ndarray]]
+    trace: Optional[ConvergenceTrace]
+    provenance: Provenance
+    best_design: Optional[Dict] = None
+    best_objective: Optional[float] = None
+    best_metrics: Optional[Dict] = None
+    raw: object = None
+
+
+class Session:
+    """The front door: plan and submit declarative queries.
+
+    Wraps an ``ExplorationService`` (constructed from the given kwargs
+    when not supplied), which owns the archive cache directory, the NSGA
+    engine configuration, the budget policy, and the transfer manifest;
+    the scalarized engines share the session's ``TechConstants``.
+    """
+
+    def __init__(self, service: Optional[ExplorationService] = None,
+                 **service_kwargs):
+        # the service is built LAZILY, on the first query that needs the
+        # archive cache: purely scalarized sessions (the optimize /
+        # two_stage shims) never validate-and-create a cache directory
+        # they will not touch
+        self._service = service
+        self._service_kwargs = dict(service_kwargs)
+
+    @property
+    def service(self) -> ExplorationService:
+        if self._service is None:
+            self._service = ExplorationService(**self._service_kwargs)
+        return self._service
+
+    @property
+    def tech(self):
+        if self._service is not None:
+            return self._service.tech
+        return self._service_kwargs.get("tech")
+
+    def _cache_key(self, p: Problem) -> str:
+        """The archive identity of ``p`` under this session's tech — the
+        same derivation as ``ExplorationService.problem_key``, computable
+        without constructing the service."""
+        return spec_space_key(p.spec, p.space, extra=self.tech
+                              or DEFAULT_TECH)
+
+    # ---- planning ----------------------------------------------------------
+    def plan(self, query: Query) -> Plan:
+        """Inspect what ``submit`` would do for one query, spending no
+        evaluations: resolved engine, archive cache key (and warm-serve
+        verdict), the quantized segment schedule, and — for transfer
+        queries — the predicted neighbors with their seed quotas."""
+        engine = query.resolved_engine()
+        p = query.problem
+        ck = self._cache_key(p)
+        if engine in ("bo_sa", "two_stage"):
+            self._validate_scalarized(query)
+            return Plan(engine=engine, cache_key=ck, cache_hit=False,
+                        budget=self._scalarized_evals(query),
+                        objectives=p.objectives,
+                        segments=(SegmentPlan(
+                            0, 1, 1, self._scalarized_evals(query)),))
+        svc = self.service
+        arc = svc.archive_for(p.spec, p.space, key=ck)
+        budget = int(query.budget)
+        if svc.warm_verdict(arc, p.objectives, budget):
+            return Plan(engine=engine, cache_key=ck, cache_hit=True,
+                        budget=budget, objectives=p.objectives,
+                        segments=())
+        policy = query.policy or svc.policy
+        pop = svc._effective_pop(budget)
+        generations = _pow2(-(-budget // pop))
+        chunk = min(_pow2(policy.chunk_generations), generations)
+        segments = tuple(
+            SegmentPlan(i, pop, chunk, pop * chunk)
+            for i in range(generations // chunk))
+        neighbors, cap = (), 0
+        if query.transfer:
+            cap = pop if len(arc) == 0 else max(pop // 2, 1)
+            m, neigh, quotas = svc._transfer_plan(
+                ck, workload_features(p.spec.graph), cap)
+            neighbors = tuple(
+                NeighborPlan(nk, float(dist), int(quotas.get(nk, 1)))
+                for nk, dist in neigh
+                if m.entries[nk].get("digest") is not None)
+        return Plan(engine=engine, cache_key=ck, cache_hit=False,
+                    budget=budget, objectives=p.objectives,
+                    segments=segments, neighbors=neighbors, seed_cap=cap)
+
+    def _scalarized_evals(self, query: Query) -> int:
+        """Planned evaluation spend of a scalarized query (estimate; the
+        two-stage selector's stage-2 count is data-dependent)."""
+        from ..core.optimizer import SAConfig
+        opts = dict(query.engine_opts or {})
+        if query.resolved_engine() == "two_stage":
+            sa = opts.get("sa", SAConfig(steps=250, chains=4))
+            n_scal = max(int(opts.get("n_candidates", 3)), 2)
+            per_opt = (4 + 6) * sa.steps * sa.chains   # n_init=4, n_iter=6
+            return n_scal * per_opt
+        sa = opts.get("sa", SAConfig())
+        n_init = int(opts.get("n_init", 8))
+        n_iter = int(opts.get("n_iter", 24))
+        bo = opts.get("bo_fields", None)
+        has_bo = True if bo is None else len(tuple(bo)) > 0
+        return (n_init + (n_iter if has_bo else 0)) * sa.steps * sa.chains
+
+    # ---- execution ---------------------------------------------------------
+    def submit(self, queries: Union[Query, Sequence[Query]], key=None,
+               on_segment=None) -> Union[Result, List[Result]]:
+        """Execute one query (returns its ``Result``) or a batch (returns
+        a ``Result`` per query, in order).  NSGA queries of one batch are
+        answered together — same-problem queries merge into one run and
+        banked budget reallocates across the batch, exactly the legacy
+        ``explore_batch`` semantics.  ``on_segment`` streams every scan
+        segment's ``SegmentEvent`` as it completes (scalarized engines
+        fire one event on completion)."""
+        single = isinstance(queries, Query)
+        qs: List[Query] = [queries] if single else list(queries)
+        if not qs:
+            return []
+        key = jax.random.PRNGKey(0) if key is None else key
+        override = {q.policy for q in qs if q.policy is not None}
+        if len(override) > 1:
+            raise ValueError("one submission takes at most one "
+                             "BudgetPolicy override")
+        results: Dict[int, Result] = {}
+        nsga_idx = [i for i, q in enumerate(qs)
+                    if q.resolved_engine() == "nsga"]
+        for i, q in enumerate(qs):          # validate the WHOLE batch
+            if i in nsga_idx:               # before any engine runs
+                self._to_explore_query(q)
+            else:
+                self._validate_scalarized(q)
+        if nsga_idx:
+            svc = self.service
+            saved_policy = svc.policy
+            if override:
+                svc.policy = next(iter(override))
+            try:
+                eqs = [self._to_explore_query(qs[i]) for i in nsga_idx]
+                for i, er in zip(nsga_idx, svc.run_queries(
+                        eqs, key=key, on_segment=on_segment)):
+                    results[i] = self._wrap_explore(qs[i], er)
+            finally:
+                svc.policy = saved_policy
+        for i, q in enumerate(qs):
+            eng = q.resolved_engine()
+            if eng == "nsga":
+                continue
+            # single queries take the caller's key verbatim (the legacy
+            # shims rely on it, bit for bit); batched scalarized queries
+            # draw from a domain-separated stream so they can never
+            # collide with run_queries' per-group / reallocation folds
+            k = key if single else jax.random.fold_in(
+                jax.random.fold_in(key, 0x5ca1a2), i)
+            results[i] = self._run_scalarized(q, eng, k, on_segment)
+        out = [results[i] for i in range(len(qs))]
+        return out[0] if single else out
+
+    @staticmethod
+    def _validate_scalarized(q: Query) -> None:
+        """Scalarized engines reject the nsga-only options as loudly as
+        ``_to_explore_query`` rejects the scalarized-only ones — a
+        transfer or policy request must never be silently dropped.
+        (``budget`` stays nsga-only by documented contract: scalarized
+        spend derives from ``engine_opts``.)"""
+        if q.transfer:
+            raise ValueError(
+                "transfer=True applies to the nsga engine only; seed "
+                "scalarized engines explicitly via seed_designs=")
+        if q.policy is not None:
+            raise ValueError(
+                "BudgetPolicy applies to the nsga engine only; size "
+                "scalarized engines via engine_opts (n_init/n_iter/sa)")
+
+    @staticmethod
+    def _to_explore_query(q: Query) -> ExploreQuery:
+        p = q.problem
+        if q.weights is not None or q.seed_designs or q.archive \
+                or q.engine_opts:
+            raise ValueError(
+                "weights / seed_designs / archive / engine_opts apply to "
+                "the scalarized engines; the nsga engine takes budget / "
+                "transfer / policy")
+        return ExploreQuery(p.graph, p.objectives, int(q.budget),
+                            p.ch_max, p.space_kwargs, q.transfer,
+                            spec=p.spec, space=p.space)
+
+    def _wrap_explore(self, q: Query, er: ExploreResult) -> Result:
+        return Result(
+            objectives=er.objectives,
+            front_objs=er.front_objs, front_metrics=er.front_metrics,
+            front_designs=er.front_designs, trace=er.trace,
+            provenance=Provenance(
+                cache_key=er.cache_key, engine="nsga",
+                from_cache=er.from_cache, n_evals_run=er.n_evals_run,
+                n_evals_banked=er.n_evals_banked,
+                n_evals_realloc=er.n_evals_realloc,
+                transferred_from=er.transferred_from,
+                n_transfer_seeds=er.n_transfer_seeds,
+                plateaued=er.plateaued, elapsed_s=er.elapsed_s),
+            raw=er)
+
+    def _run_scalarized(self, q: Query, engine: str, key,
+                        on_segment=None) -> Result:
+        from ..core.optimizer import _optimize_impl, _two_stage_impl
+        p = q.problem
+        ck = self._cache_key(p)     # no service: scalarized runs never
+        #                             touch the archive cache directory
+        opts = dict(q.engine_opts or {})
+        t0 = time.perf_counter()
+        if engine == "two_stage":
+            sr = _two_stage_impl(p.spec, p.space, key, tech=self.tech,
+                                 archive=q.archive,
+                                 seed_designs=q.seed_designs, **opts)
+        else:
+            sr = _optimize_impl(p.spec, p.space, key,
+                                weights=q.weights or OBJ_EDP,
+                                tech=self.tech, archive=q.archive,
+                                seed_designs=q.seed_designs, **opts)
+        elapsed = time.perf_counter() - t0
+        if on_segment is not None and sr.trace is not None:
+            try:                        # one completion event: scalarized
+                #                         engines have no scan segments
+                on_segment(SegmentEvent(ck, 0, sr.trace, engine))
+            except Exception as e:
+                warnings.warn(f"on_segment callback failed for {ck}: {e}")
+        n_evals = int(sr.trace.n_evals[-1]) if sr.trace is not None \
+            and len(sr.trace.n_evals) else 0
+        idx = [METRIC_KEYS.index(o) for o in p.objectives]
+        if q.archive is not None and len(q.archive) > 0:
+            designs, metrics = q.archive.front()
+            cols = metrics[:, idx]
+            keep = pareto_front(cols) if len(cols) else []
+            front_objs = cols[keep]
+            front_metrics = metrics[keep]
+            front_designs = [{k2: v[i] for k2, v in designs.items()}
+                             for i in keep]
+        else:                           # single-incumbent front
+            row = np.asarray([[float(sr.metrics[k2])
+                               for k2 in METRIC_KEYS]], np.float64)
+            front_objs = row[:, idx]
+            front_metrics = row
+            front_designs = [{k2: np.asarray(v)
+                              for k2, v in sr.design.items()}]
+        return Result(
+            objectives=p.objectives,
+            front_objs=front_objs, front_metrics=front_metrics,
+            front_designs=front_designs, trace=sr.trace,
+            provenance=Provenance(
+                cache_key=ck, engine=engine, from_cache=False,
+                n_evals_run=n_evals, n_evals_banked=0, n_evals_realloc=0,
+                transferred_from=(),
+                n_transfer_seeds=len(q.seed_designs or ()),
+                plateaued=False, elapsed_s=elapsed),
+            best_design=sr.design, best_objective=sr.objective,
+            best_metrics=sr.metrics, raw=sr)
+
+
+# ---------------------------------------------------------------------------
+# module-level conveniences over a process-wide default session
+# ---------------------------------------------------------------------------
+_DEFAULT_SESSION: Optional[Session] = None
+
+
+def session(**kwargs) -> Session:
+    """The process-wide default ``Session`` (mirrors
+    ``service.default_service``: kwargs only on first construction)."""
+    global _DEFAULT_SESSION
+    if _DEFAULT_SESSION is None:
+        _DEFAULT_SESSION = Session(**kwargs)
+    elif kwargs:
+        raise RuntimeError(
+            "the default session is already initialized; construct "
+            "Session(...) directly for a custom configuration")
+    return _DEFAULT_SESSION
+
+
+def plan(query: Query) -> Plan:
+    """``session().plan(query)``."""
+    return session().plan(query)
+
+
+def submit(queries: Union[Query, Sequence[Query]], key=None,
+           on_segment=None) -> Union[Result, List[Result]]:
+    """``session().submit(queries)``."""
+    return session().submit(queries, key=key, on_segment=on_segment)
+
+
+__all__ = [
+    "ENGINES", "NeighborPlan", "Plan", "Problem", "Provenance", "Query",
+    "Result", "SegmentEvent", "SegmentPlan", "Session", "plan", "session",
+    "submit",
+]

@@ -483,10 +483,16 @@ class ManifestPolicy:
     merged), so a fleet cache full of near-identical problems does not
     crowd genuinely different neighbors out of ``nearest``.
     ``max_trust_records`` bounds the per-(src, dst) transfer-outcome table
-    (oldest records dropped first)."""
+    (oldest records dropped first).
+    ``reap_evicted_after`` > 0 opts into archive-file GC: an archive npz
+    whose manifest entry stayed evicted (LRU-evicted or dedup-merged away,
+    and never re-indexed) for that many LRU ticks is deleted from disk at
+    the next ``reap_evicted`` sweep.  The default 0 keeps the historic
+    behavior — eviction bounds the index only, files stay."""
     max_entries: int = 64
     dedup_radius: float = 0.0
     max_trust_records: int = 256
+    reap_evicted_after: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -565,6 +571,10 @@ class ArchiveManifest:
         self.entries: Dict[str, Dict] = {}
         self.trust: List[Dict] = []    # per-(src, dst) transfer outcomes
         self.clock = 0                 # monotone LRU tick
+        self.evicted: Dict[str, int] = {}   # key -> tick it left the index
+        #                                     (LRU eviction or dedup merge);
+        #                                     cleared on re-index, consumed
+        #                                     by ``reap_evicted``
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -589,6 +599,7 @@ class ArchiveManifest:
         policy — the entry being written is never the one evicted or
         merged away."""
         prev = self.entries.get(key, {})
+        self.evicted.pop(key, None)    # re-indexed: no longer a GC victim
         self.entries[key] = dict(
             embedding=np.asarray(embedding, np.float64),
             dims=tuple(int(v) for v in dims),
@@ -613,7 +624,34 @@ class ArchiveManifest:
             victim = min(victims, key=lambda k: (
                 self.entries[k].get("last_used", 0), k))
             del self.entries[victim]
+            self.evicted[victim] = self.clock
         return self
+
+    def reap_evicted(self, cache_dir=None) -> Tuple[str, ...]:
+        """Opt-in archive-file GC (``policy.reap_evicted_after`` > 0):
+        delete the archive npz of every key that left the index at least
+        that many LRU ticks ago and was never re-indexed since.  Returns
+        the reaped keys; their eviction records are dropped (nothing left
+        to reap).  A no-op under the default policy, and never touches
+        keys currently in the index."""
+        after = int(self.policy.reap_evicted_after)
+        if after <= 0 or not self.evicted:
+            return ()
+        root = Path(cache_dir) if cache_dir is not None else (
+            self.path.parent if self.path is not None else None)
+        if root is None:
+            return ()
+        reaped = []
+        for key, tick in list(self.evicted.items()):
+            if key in self.entries:          # defensive: indexed keys are
+                self.evicted.pop(key)        # never GC victims
+                continue
+            if self.clock - int(tick) < after:
+                continue
+            (root / f"{key}.npz").unlink(missing_ok=True)
+            self.evicted.pop(key)
+            reaped.append(key)
+        return tuple(reaped)
 
     def _survivor(self, a: str, b: str, protect: Sequence[str]) -> str:
         """Which of two near-identical entries survives a merge: protected
@@ -667,6 +705,8 @@ class ArchiveManifest:
                 gone.add(drop)
         for k in gone:
             del self.entries[k]
+            self.evicted[k] = self.clock    # merged away counts as evicted
+            #                                 for the opt-in file GC too
         return self
 
     # ---- trust table -------------------------------------------------------
@@ -725,9 +765,10 @@ class ArchiveManifest:
             raise ValueError("manifest has no path")
         keys = sorted(self.entries)
         meta = dict(
-            version=2,
+            version=3,
             keys=keys,
             clock=int(self.clock),
+            evicted={k: int(t) for k, t in self.evicted.items()},
             entries={k: dict(
                 dims=list(self.entries[k]["dims"]),
                 n_evals=self.entries[k]["n_evals"],
@@ -781,6 +822,8 @@ class ArchiveManifest:
                     digest=e.get("digest"),
                     last_used=int(e.get("last_used", 0)))
             m.clock = int(meta.get("clock", 0))
+            m.evicted = {str(k): int(t)
+                         for k, t in meta.get("evicted", {}).items()}
             m.trust = [dict(src=r["src"], dst=r["dst"],
                             delta=np.asarray(r["delta"], np.float64),
                             lift=float(r["lift"]))
@@ -791,6 +834,7 @@ class ArchiveManifest:
             m.entries = {}
             m.trust = []
             m.clock = 0
+            m.evicted = {}
         # honor THIS reader's policy immediately: a file written under a
         # laxer bound (or unbounded v1) must not keep a read-mostly
         # service over budget until its first write

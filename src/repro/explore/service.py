@@ -1,7 +1,9 @@
-"""The exploration *service*: ``explore(graph, objectives, budget)``.
+"""The exploration *service*: the NSGA engine backend behind
+``repro.api.Session.submit`` (``run_queries``), plus the historic
+``explore`` / ``explore_batch`` entry points as deprecation shims.
 
 Turns the one-shot DSE scripts into a reusable, cache-accelerated query
-API.  Four tricks make repeated / concurrent exploration cheap:
+backend.  Four tricks make repeated / concurrent exploration cheap:
 
 * **Query batching** — ``explore_batch`` groups concurrent queries whose
   (SystemSpec, DesignSpace) hash matches into ONE NSGA-II run over the
@@ -72,10 +74,36 @@ from .nsga import NSGAConfig, make_nsga
 # the default archive cache is anchored to the repo root (four levels above
 # this file: src/repro/explore/service.py), NOT the process CWD — otherwise
 # every working directory silently grows its own fragmented cache.
-# $REPRO_EXPLORE_CACHE (or an explicit ``cache_dir``) overrides it.
+# $REPRO_EXPLORE_CACHE (the historic name), $REPRO_CACHE_DIR (the fleet-wide
+# name) or an explicit ``cache_dir`` override it, in that order.
 DEFAULT_CACHE_DIR = (Path(__file__).resolve().parents[3]
                      / "artifacts" / "explore_cache")
 DEFAULT_OBJECTIVES = ("latency_ns", "cost_usd")
+
+
+def resolve_cache_dir(cache_dir=None) -> Path:
+    """The cache directory a service will really use, validated: an
+    explicit ``cache_dir`` wins, then ``$REPRO_EXPLORE_CACHE``, then
+    ``$REPRO_CACHE_DIR``, then the repo-anchored default.  The directory
+    is created here (so a fleet-wide env var pointing somewhere unwritable
+    fails loudly at service CONSTRUCTION, not at the first archive save
+    deep inside a query)."""
+    p = Path(cache_dir
+             or os.environ.get("REPRO_EXPLORE_CACHE")
+             or os.environ.get("REPRO_CACHE_DIR")
+             or DEFAULT_CACHE_DIR).expanduser()
+    try:
+        p.mkdir(parents=True, exist_ok=True)
+    except OSError as e:
+        raise ValueError(f"explore cache directory {p} is unusable "
+                         f"(check REPRO_CACHE_DIR / REPRO_EXPLORE_CACHE / "
+                         f"cache_dir): {e}") from e
+    if not os.access(p, os.W_OK):      # mkdir(exist_ok) is a silent no-op
+        #                                on a pre-existing read-only dir
+        raise ValueError(f"explore cache directory {p} is not writable "
+                         f"(check REPRO_CACHE_DIR / REPRO_EXPLORE_CACHE / "
+                         f"cache_dir)")
+    return p
 
 
 def _pow2(n: int) -> int:
@@ -133,7 +161,11 @@ class BudgetPolicy:
 class ExploreQuery:
     """One front request.  ``space_kwargs`` are forwarded to ``DesignSpace``
     (e.g. ``max_shape``, ``max_total_pes``) and participate in the cache
-    key, so differently-bounded explorations never share an archive."""
+    key, so differently-bounded explorations never share an archive.
+
+    ``spec``/``space`` optionally carry a prebuilt problem (the
+    ``repro.api`` path builds them once on its ``Problem``); when absent
+    the service derives them from ``graph``/``ch_max``/``space_kwargs``."""
     graph: WorkloadGraph
     objectives: Tuple[str, ...] = DEFAULT_OBJECTIVES
     budget: int = 2048              # total design evaluations this query
@@ -147,6 +179,8 @@ class ExploreQuery:
     #                                 start with no neighbor; resumed
     #                                 archives dedup seeds against their
     #                                 own front and take no fallback)
+    spec: Optional[SystemSpec] = None
+    space: Optional[DesignSpace] = None
 
     def __post_init__(self):
         self.objectives = tuple(self.objectives)
@@ -156,6 +190,28 @@ class ExploreQuery:
         if bad:
             raise ValueError(f"unknown objectives {bad}; pick from "
                              f"{METRIC_KEYS}")
+
+    def build(self) -> Tuple[SystemSpec, DesignSpace]:
+        """This query's (spec, space), built on demand and memoized."""
+        if self.spec is None:
+            self.spec = SystemSpec.build(self.graph, ch_max=self.ch_max)
+        if self.space is None:
+            self.space = DesignSpace(self.spec, **(self.space_kwargs or {}))
+        return self.spec, self.space
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentEvent:
+    """One streamed scan-segment boundary (see ``run_queries``'s
+    ``on_segment``): the archive ``cache_key`` being refined, the segment
+    index within its phase, the segment's incremental ``ConvergenceTrace``
+    slice (extend the slices to recover the run's full trace), and the
+    phase — ``"refine"`` for a group's own budget, ``"realloc"`` for a
+    reallocation top-up spending banked ledger credit."""
+    cache_key: str
+    segment: int
+    trace: ConvergenceTrace
+    phase: str = "refine"
 
 
 @dataclasses.dataclass
@@ -205,9 +261,7 @@ class ExplorationService:
         # nsga.generations is not used on the query path — each query's
         # budget sets the scan length (see _refine); the config's pop /
         # fields / crossover / mutation / immigrant knobs apply as given.
-        self.cache_dir = Path(
-            cache_dir or os.environ.get("REPRO_EXPLORE_CACHE",
-                                        DEFAULT_CACHE_DIR))
+        self.cache_dir = resolve_cache_dir(cache_dir)
         self.capacity = int(capacity)
         self.nsga = nsga
         self.tech = tech
@@ -296,27 +350,61 @@ class ExplorationService:
                 budget: int = 2048, ch_max: int = 4,
                 space_kwargs: Optional[Dict] = None,
                 transfer: bool = False, key=None) -> ExploreResult:
-        q = ExploreQuery(graph, tuple(objectives), budget, ch_max,
-                         space_kwargs, transfer)
-        return self.explore_batch([q], key=key)[0]
+        """DEPRECATED shim — routes through ``repro.api.Session.submit``
+        (``Query(Problem(...), engine="nsga")``) and returns the same
+        ``ExploreResult`` the NSGA backend produced."""
+        warnings.warn(
+            "legacy entry point ExplorationService.explore() is "
+            "deprecated; use repro.api: Session(...).submit(Query("
+            "Problem(graph, objectives, ...), budget=..., transfer=...))",
+            DeprecationWarning, stacklevel=2)
+        from .api import Problem, Query, Session
+        q = Query(Problem(graph, objectives=tuple(objectives),
+                          ch_max=ch_max, space_kwargs=space_kwargs),
+                  budget=budget, engine="nsga", transfer=transfer)
+        return Session(service=self).submit(q, key=key).raw
 
     def explore_batch(self, queries: Sequence[ExploreQuery],
                       key=None) -> List[ExploreResult]:
-        """Answer a batch of queries, merging same-problem queries into one
-        vmapped NSGA run (union objectives, max budget).
+        """DEPRECATED shim — routes through ``repro.api.Session.submit``
+        with one ``Query`` per legacy ``ExploreQuery`` (same grouping,
+        batching and reallocation semantics; see ``run_queries``)."""
+        warnings.warn(
+            "legacy entry point ExplorationService.explore_batch() is "
+            "deprecated; use repro.api: Session(...).submit([Query(...), "
+            "...])",
+            DeprecationWarning, stacklevel=2)
+        from .api import Problem, Query, Session
+        qs = [Query(Problem(q.graph, objectives=q.objectives,
+                            ch_max=q.ch_max, space_kwargs=q.space_kwargs),
+                    budget=q.budget, engine="nsga", transfer=q.transfer)
+              for q in queries]
+        return [r.raw for r in Session(service=self).submit(qs, key=key)]
+
+    def run_queries(self, queries: Sequence[ExploreQuery], key=None,
+                    on_segment=None) -> List[ExploreResult]:
+        """The NSGA engine backend: answer a batch of queries, merging
+        same-problem queries into one vmapped NSGA run (union objectives,
+        max budget).  This is the execution path behind
+        ``repro.api.Session.submit``; the legacy ``explore`` /
+        ``explore_batch`` shims arrive here too.
 
         After every group has spent (or banked) its own budget, banked
         credit — this batch's plus any ledger balance carried over from
         earlier early stops — is reallocated to the batch's still-improving
         groups (the ones that exhausted their budget without plateauing),
-        lowest recorded eval-count first."""
+        lowest recorded eval-count first.
+
+        ``on_segment`` (callable taking one ``SegmentEvent``) streams each
+        scan segment's incremental ``ConvergenceTrace`` slice as soon as
+        the segment finishes — the dashboard/async-serving hook.  Callback
+        failures are warned about, never fatal to the query."""
         key = jax.random.PRNGKey(0) if key is None else key
         # group by canonical problem hash
         groups: Dict[str, Dict] = {}
         order: List[Tuple[str, int]] = []      # (cache_key, slot in group)
         for q in queries:
-            spec = SystemSpec.build(q.graph, ch_max=q.ch_max)
-            space = DesignSpace(spec, **(q.space_kwargs or {}))
+            spec, space = q.build()
             ck = self.problem_key(spec, space)
             g = groups.setdefault(ck, dict(spec=spec, space=space,
                                            queries=[]))
@@ -324,16 +412,33 @@ class ExplorationService:
             g["queries"].append(q)
 
         for i, (ck, g) in enumerate(groups.items()):
-            self._refine_group(ck, g, jax.random.fold_in(key, i))
+            self._refine_group(ck, g, jax.random.fold_in(key, i),
+                               on_segment=on_segment)
         if self.policy.reallocate:
-            self._reallocate(groups, jax.random.fold_in(key, len(groups)))
+            self._reallocate(groups, jax.random.fold_in(key, len(groups)),
+                             on_segment=on_segment)
 
         group_results = {ck: self._project_group(ck, g)
                          for ck, g in groups.items()}
         return [group_results[ck][slot] for ck, slot in order]
 
+    @staticmethod
+    def _segment_cb(on_segment, ck: str, phase: str):
+        """Wrap the user callback for one group's refinement: tag events
+        with the archive key and phase, and never let a callback failure
+        kill the query it was observing."""
+        if on_segment is None:
+            return None
+
+        def cb(s: int, tr: ConvergenceTrace):
+            try:
+                on_segment(SegmentEvent(ck, s, tr, phase))
+            except Exception as e:
+                warnings.warn(f"on_segment callback failed for {ck}: {e}")
+        return cb
+
     # ---- one problem group -------------------------------------------------
-    def _refine_group(self, ck: str, g: Dict, key) -> None:
+    def _refine_group(self, ck: str, g: Dict, key, on_segment=None) -> None:
         """Phase 1: spend (or bank) the group's own budget.  Mutates ``g``
         with the run's accounting; fronts are projected later, after any
         cross-group budget reallocation topped the archive up."""
@@ -344,13 +449,7 @@ class ExplorationService:
         union = g["union"] = tuple(
             k for k in METRIC_KEYS
             if any(k in q.objectives for q in g["queries"]))
-        # warm only when the covered budget (evaluations recorded, or
-        # credited by a plateau early stop) and every queried objective are
-        # covered — points found while optimizing other axes are no
-        # substitute for search effort on these ones
-        warm = (len(arc) > 0
-                and max(arc.n_evals, arc.budget_covered) >= budget
-                and all(o in arc.searched for o in union))
+        warm = self.warm_verdict(arc, union, budget)
         g.update(warm=warm, n_run=0, trace=None, plateaued=False,
                  banked=0, realloc=0, transferred_from=(), n_seeds=0)
         if warm:
@@ -373,7 +472,8 @@ class ExplorationService:
             g["n_seeds"] = (int(next(iter(seeds.values())).shape[0])
                             if seeds else 0)
         n_run, trace, plateaued, banked = self._refine(
-            arc, g["spec"], g["space"], union, budget, key, seeds=seeds)
+            arc, g["spec"], g["space"], union, budget, key, seeds=seeds,
+            on_segment=self._segment_cb(on_segment, ck, "refine"))
         arc.searched = tuple(k for k in METRIC_KEYS
                              if k in arc.searched or k in union)
         arc.budget_covered = max(arc.budget_covered, budget)
@@ -389,6 +489,20 @@ class ExplorationService:
         self._record_trust(ck, g, trace, m)
         self._update_manifest(ck, g, m)
         g["elapsed"] = time.perf_counter() - t0
+
+    @staticmethod
+    def warm_verdict(arc: ParetoArchive, objectives: Sequence[str],
+                     budget: int) -> bool:
+        """True when ``arc`` can answer a query over ``objectives`` at
+        ``budget`` straight from cache: warm only when the covered budget
+        (evaluations recorded, or credited by a plateau early stop) and
+        every queried objective are covered — points found while
+        optimizing other axes are no substitute for search effort on
+        these ones.  The service's cache-hit rule and the one
+        ``repro.api.Session.plan`` predicts with."""
+        return (len(arc) > 0
+                and max(arc.n_evals, arc.budget_covered) >= budget
+                and all(o in arc.searched for o in objectives))
 
     def _record_trust(self, ck: str, g: Dict, trace: ConvergenceTrace,
                       m: Optional[ArchiveManifest] = None) -> None:
@@ -432,6 +546,7 @@ class ExplorationService:
                 n_evals=arc.n_evals, budget_covered=arc.budget_covered,
                 searched=arc.searched,
                 digest=space_digest(g["space"]).to_json_dict())
+            m.reap_evicted(self.cache_dir)   # opt-in archive-file GC
             m.save()
             self._manifest = m          # what was just saved IS current
             self._manifest_mtime = self._manifest_stat()
@@ -468,6 +583,34 @@ class ExplorationService:
             self._neighbor_cache.popitem(last=False)
         return arc
 
+    def _transfer_plan(self, ck: str, embedding, cap: int
+                       ) -> Tuple[ArchiveManifest,
+                                  List[Tuple[str, float]], Dict[str, int]]:
+        """The *prediction* half of transfer seeding, evaluation-free: one
+        manifest snapshot, the trust-reweighted ``transfer_k`` nearest
+        cached neighbors of ``embedding`` (excluding ``ck`` itself), and
+        each neighbor's seed quota out of ``cap``.  ``_transfer_seeds``
+        executes exactly this plan; ``repro.api.Session.plan`` reports it
+        to the caller before any compute is spent."""
+        m = self.manifest               # ONE snapshot for the whole
+        #                                 lookup: a concurrent service's
+        #                                 eviction must not yank entries
+        #                                 between nearest() and indexing
+        trust = m.trust_model(dim=int(np.asarray(embedding).size))
+        neigh = m.nearest(embedding, k=self.transfer_k,
+                          exclude=(ck,), trust=trust)
+        cap = max(int(cap), 1)
+        if trust is not None and neigh:
+            w = [1.0 + max(trust.predict(embedding_delta(
+                embedding, m.entries[nk]["embedding"])), 0.0)
+                for nk, _ in neigh]
+            quotas = {nk: max(1, int(round(cap * wi / sum(w))))
+                      for (nk, _), wi in zip(neigh, w)}
+        else:
+            quota = max(1, cap // max(self.transfer_k, 1))
+            quotas = {nk: quota for nk, _ in neigh}
+        return m, neigh, quotas
+
     def _transfer_seeds(self, ck: str, space: DesignSpace, embedding,
                         key, arc: Optional[ParetoArchive] = None,
                         cap: Optional[int] = None
@@ -487,22 +630,7 @@ class ExplorationService:
         dst = space_digest(space)
         cap = max(self.nsga.pop, 1) if cap is None else max(int(cap), 1)
         n_front = len(arc) if arc is not None else 0
-        m = self.manifest               # ONE snapshot for the whole
-        #                                 lookup: a concurrent service's
-        #                                 eviction must not yank entries
-        #                                 between nearest() and indexing
-        trust = m.trust_model(dim=int(np.asarray(embedding).size))
-        neigh = m.nearest(embedding, k=self.transfer_k,
-                          exclude=(ck,), trust=trust)
-        if trust is not None and neigh:
-            w = [1.0 + max(trust.predict(embedding_delta(
-                embedding, m.entries[nk]["embedding"])), 0.0)
-                for nk, _ in neigh]
-            quotas = {nk: max(1, int(round(cap * wi / sum(w))))
-                      for (nk, _), wi in zip(neigh, w)}
-        else:
-            quota = max(1, cap // max(self.transfer_k, 1))
-            quotas = {nk: quota for nk, _ in neigh}
+        m, neigh, quotas = self._transfer_plan(ck, embedding, cap)
         taken: set = set()
         if n_front and neigh:           # hashing the whole front is only
             #                             worth it when there IS a
@@ -556,7 +684,8 @@ class ExplorationService:
         return ({k2: np.stack([s[k2] for s in seeds])
                  for k2 in seeds[0]}, tuple(srcs))
 
-    def _reallocate(self, groups: Dict[str, Dict], key) -> None:
+    def _reallocate(self, groups: Dict[str, Dict], key,
+                    on_segment=None) -> None:
         """Phase 2: spend the ledger on this batch's under-explored
         archives — groups that ran to budget exhaustion WITHOUT plateauing
         (their front was still improving), lowest eval-count first.  Spent
@@ -576,7 +705,8 @@ class ExplorationService:
             # ledger must never be overdrawn by pow2 rounding
             n_run, trace, plateaued, _ = self._refine(
                 arc, g["spec"], g["space"], g["union"], pool,
-                jax.random.fold_in(key, i), quantize_down=True)
+                jax.random.fold_in(key, i), quantize_down=True,
+                on_segment=self._segment_cb(on_segment, ck, "realloc"))
             pool -= n_run                # only what was actually spent
             self._drain_ledger(n_run)
             g["elapsed"] += time.perf_counter() - t0
@@ -642,7 +772,7 @@ class ExplorationService:
     def _refine(self, arc: ParetoArchive, spec: SystemSpec,
                 space: DesignSpace, objectives: Tuple[str, ...],
                 budget: int, key, quantize_down: bool = False,
-                seeds: Optional[Dict] = None
+                seeds: Optional[Dict] = None, on_segment=None
                 ) -> Tuple[int, ConvergenceTrace, bool, int]:
         """Spend up to ~``budget`` evaluations improving the archive:
         warm-start the population from the cached front, evolve in scan
@@ -746,6 +876,8 @@ class ExplorationService:
                                  for p in hv_pairs])
             seg_trace.archive_hv = hv_now[None, :]
             trace = seg_trace if trace is None else trace.extend(seg_trace)
+            if on_segment is not None:     # stream the segment boundary:
+                on_segment(s, seg_trace)   # the incremental trace slice
             # ---- plateau check on the archive-projected hypervolume ----
             # an empty archive means NOTHING has been found yet — that is
             # stagnation, not convergence, and must never stop the search
@@ -792,7 +924,10 @@ def explore(graph: WorkloadGraph,
             transfer: bool = False,
             service: Optional[ExplorationService] = None,
             key=None) -> ExploreResult:
-    """One-call front query against the process-wide default service."""
+    """One-call front query against the process-wide default service.
+
+    DEPRECATED — delegates to the ``ExplorationService.explore`` shim
+    (one ``DeprecationWarning``); use ``repro.api.submit`` instead."""
     svc = service or default_service()
     return svc.explore(graph, objectives, budget, ch_max, space_kwargs,
                        transfer=transfer, key=key)

@@ -1,0 +1,378 @@
+"""The declarative front door (``repro.api``): Problem identity/hashing,
+Query validation and engine resolution, pre-evaluation Plans (segment
+schedule, cache verdict, predicted transfer neighbors), Session.submit's
+unified Result/Provenance across engines, scan-segment streaming, the
+``REPRO_CACHE_DIR`` override, and the opt-in archive-file GC."""
+
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro.api import (ENGINES, NeighborPlan, Plan, Problem, Provenance,
+                       Query, Result, SegmentEvent, SegmentPlan, Session)
+from repro.core.optimizer import SAConfig
+from repro.explore.archive import (MANIFEST_NAME, ArchiveManifest,
+                                   ManifestPolicy, ParetoArchive,
+                                   pareto_front)
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import (BudgetPolicy, ExplorationService,
+                                   resolve_cache_dir)
+
+TINY = dict(max_shape=(16, 16, 4, 4, 1, 2))
+OBJ = ("latency_ns", "cost_usd")
+
+
+def _graph(k=64):
+    return C.WorkloadGraph([C.matmul("mm", 512, 512, k)], [])
+
+
+def _session(tmp_path, **policy_kw):
+    policy = BudgetPolicy(**policy_kw) if policy_kw else BudgetPolicy()
+    return Session(cache_dir=tmp_path,
+                   nsga=NSGAConfig(pop=8, generations=2), policy=policy)
+
+
+def _problem(k=64):
+    return Problem(_graph(k), objectives=OBJ, ch_max=2, space_kwargs=TINY)
+
+
+# ---------------------------------------------------------------------------
+# Problem: canonical, hashable
+# ---------------------------------------------------------------------------
+def test_problem_is_canonical_and_hashable():
+    a, b = _problem(), _problem()          # equal content, new objects
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1                # usable as a dict/cache key
+    # any content change breaks identity: workload, bounds, objectives
+    assert _problem(96) != a
+    assert Problem(_graph(), OBJ, 2, dict(TINY, max_logB=2)) != a
+    assert Problem(_graph(), ("latency_ns",), 2, TINY) != a
+    assert a.key() == b.key() != _problem(96).key()
+
+
+def test_problem_from_spec_matches_graph_built():
+    spec = C.SystemSpec.build(_graph(), ch_max=2)
+    space = C.DesignSpace(spec, **TINY)
+    assert Problem.from_spec(spec, space, objectives=OBJ) == _problem()
+    # the reconstructed constraint set is complete
+    p = Problem.from_spec(spec, space, objectives=OBJ)
+    assert p.space_kwargs["max_shape"] == tuple(TINY["max_shape"])
+    assert p.space_kwargs["max_total_pes"] == 0
+
+
+def test_problem_rejects_bad_objectives():
+    with pytest.raises(ValueError):
+        Problem(_graph(), objectives=("latency_ns", "nope"))
+    with pytest.raises(ValueError):
+        Problem(_graph(), objectives=())
+
+
+# ---------------------------------------------------------------------------
+# Query: validation + engine resolution
+# ---------------------------------------------------------------------------
+def test_query_engine_validation_and_auto_resolution():
+    p = _problem()
+    with pytest.raises(ValueError):
+        Query(p, engine="genetic")
+    assert Query(p).resolved_engine() == "nsga"
+    assert Query(p, weights=(1, 1, 0, 0)).resolved_engine() == "bo_sa"
+    assert Query(p, engine="two_stage").resolved_engine() == "two_stage"
+    for e in ENGINES:
+        Query(p, engine=e)                 # every advertised engine is valid
+
+
+def test_nsga_query_rejects_scalarized_options(tmp_path):
+    s = _session(tmp_path)
+    with pytest.raises(ValueError):
+        s.submit(Query(_problem(), engine="nsga", weights=(1, 1, 0, 0)))
+    with pytest.raises(ValueError):
+        s.submit(Query(_problem(), engine="nsga",
+                       engine_opts=dict(n_init=2)))
+
+
+def test_scalarized_query_rejects_nsga_options(tmp_path):
+    """Validation is symmetric: a transfer or policy request on a
+    scalarized engine errors instead of being silently dropped."""
+    s = _session(tmp_path)
+    with pytest.raises(ValueError, match="transfer"):
+        s.submit(Query(_problem(), engine="bo_sa", transfer=True))
+    with pytest.raises(ValueError, match="BudgetPolicy"):
+        s.plan(Query(_problem(), engine="two_stage",
+                     policy=BudgetPolicy(patience=1)))
+    # ... and a bad query anywhere in a batch fails BEFORE any engine runs
+    with pytest.raises(ValueError):
+        s.submit([Query(_problem(), budget=16),
+                  Query(_problem(96), engine="bo_sa", transfer=True)])
+    assert not s.service._archives       # nothing ran
+
+
+def test_scalarized_session_never_touches_cache_dir(monkeypatch, tmp_path):
+    """The service (and its cache directory) is constructed lazily: a
+    purely scalarized session — the optimize/two_stage shim path — works
+    even where no cache directory could be created."""
+    clash = tmp_path / "occupied"
+    clash.write_text("not a dir")
+    monkeypatch.delenv("REPRO_EXPLORE_CACHE", raising=False)
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(clash))
+    s = Session()                        # no error: nothing touched yet
+    spec = C.SystemSpec.build(_graph(), ch_max=2)
+    space = C.DesignSpace(spec, **TINY)
+    r = s.submit(Query(Problem.from_spec(spec, space), engine="bo_sa",
+                       weights=(1.0, 0.0, 0.0, 0.0),
+                       engine_opts=dict(bo_fields=(), n_init=1,
+                                        sa=SAConfig(steps=5, chains=2))))
+    assert np.isfinite(r.best_objective)
+    with pytest.raises(ValueError):      # the nsga path still validates
+        s.submit(Query(_problem(), budget=16))
+
+
+# ---------------------------------------------------------------------------
+# Plan: segment schedule, cache verdict, policy override
+# ---------------------------------------------------------------------------
+def test_plan_cold_schedule_then_warm_verdict(tmp_path):
+    s = _session(tmp_path, chunk_generations=2, adaptive=False)
+    q = Query(_problem(), budget=32)
+    plan = s.plan(q)
+    assert plan.engine == "nsga" and not plan.cache_hit
+    # budget 32 at pop 8 => 4 generations in 2 chunks of 2
+    assert plan.segments == (SegmentPlan(0, 8, 2, 16),
+                             SegmentPlan(1, 8, 2, 16))
+    assert plan.n_evals_planned == 32
+    assert plan.neighbors == () and plan.seed_cap == 0
+    r = s.submit(q)
+    assert not r.provenance.from_cache
+    assert r.provenance.cache_key == plan.cache_key
+    assert r.provenance.n_evals_run == plan.n_evals_planned
+    # planning spends nothing: the warm verdict now flips, segments empty
+    plan2 = s.plan(q)
+    assert plan2.cache_hit and plan2.segments == ()
+    r2 = s.submit(q)
+    assert r2.provenance.from_cache and r2.provenance.n_evals_run == 0
+
+
+def test_plan_honors_query_policy_override(tmp_path):
+    s = _session(tmp_path, chunk_generations=2)
+    q = Query(_problem(), budget=32,
+              policy=BudgetPolicy(chunk_generations=1))
+    assert len(s.plan(q).segments) == 4    # chunk 1 => one segment per gen
+    with pytest.raises(ValueError):        # conflicting overrides
+        s.submit([Query(_problem(), policy=BudgetPolicy(patience=1)),
+                  Query(_problem(96), policy=BudgetPolicy(patience=3))])
+
+
+def test_plan_predicts_transfer_and_provenance_matches(tmp_path):
+    """The acceptance gate: on a transfer-eligible cold query the plan
+    reports engine, segment schedule and >= 1 predicted neighbor with a
+    quota; executing it yields provenance matching the prediction."""
+    s = _session(tmp_path, adaptive=False)
+    s.submit(Query(_problem(64), budget=16))        # the future neighbor
+    q = Query(_problem(96), budget=16, transfer=True)
+    plan = s.plan(q)
+    assert plan.engine == "nsga" and not plan.cache_hit
+    assert len(plan.segments) >= 1
+    assert len(plan.neighbors) >= 1
+    assert all(isinstance(n, NeighborPlan) and n.quota >= 1
+               and n.distance >= 0.0 for n in plan.neighbors)
+    assert plan.seed_cap >= 1
+    r = s.submit(q)
+    pv = r.provenance
+    assert pv.engine == plan.engine and pv.cache_key == plan.cache_key
+    assert pv.from_cache == plan.cache_hit is False
+    # every seeding source was a predicted neighbor, within the cap
+    assert len(pv.transferred_from) >= 1
+    assert set(pv.transferred_from) <= {n.key for n in plan.neighbors}
+    assert 1 <= pv.n_transfer_seeds <= plan.seed_cap
+    # the run executed the planned schedule (no plateau: adaptive off)
+    assert r.trace.archive_hv.shape[0] == len(plan.segments)
+    assert pv.n_evals_run == plan.n_evals_planned
+
+
+# ---------------------------------------------------------------------------
+# Session.submit: unified results, streaming, mixed engines
+# ---------------------------------------------------------------------------
+def test_streaming_segments_reassemble_into_trace(tmp_path):
+    s = _session(tmp_path, chunk_generations=2, adaptive=False)
+    events = []
+    r = s.submit(Query(_problem(), budget=32), on_segment=events.append)
+    assert [e.segment for e in events] == [0, 1]
+    assert all(isinstance(e, SegmentEvent) and e.phase == "refine"
+               and e.cache_key == r.provenance.cache_key for e in events)
+    # the streamed slices ARE the run: extending them recovers the trace
+    whole = events[0].trace.extend(events[1].trace)
+    assert whole.generations == r.trace.generations
+    np.testing.assert_array_equal(whole.n_evals, r.trace.n_evals)
+    np.testing.assert_allclose(whole.hypervolume, r.trace.hypervolume)
+    # a throwing callback warns but never fails the query
+    def boom(e):
+        raise RuntimeError("dashboard down")
+    with pytest.warns(UserWarning, match="on_segment callback failed"):
+        r2 = s.submit(Query(_problem(96), budget=16), on_segment=boom)
+    assert not r2.provenance.from_cache
+
+
+def test_mixed_engine_batch(tmp_path):
+    s = _session(tmp_path)
+    spec = C.SystemSpec.build(_graph(), ch_max=2)
+    space = C.DesignSpace(spec, **TINY)
+    qs = [Query(_problem(), budget=16),
+          Query(Problem.from_spec(spec, space), engine="bo_sa",
+                weights=(1.0, 1.0, 0.0, 0.0),
+                engine_opts=dict(bo_fields=(), n_init=2,
+                                 sa=SAConfig(steps=10, chains=2)))]
+    ra, rb = s.submit(qs)
+    assert ra.provenance.engine == "nsga" and ra.best_design is None
+    assert rb.provenance.engine == "bo_sa"
+    assert rb.best_design is not None and np.isfinite(rb.best_objective)
+    # one unified Result shape either way
+    for r in (ra, rb):
+        assert r.front_objs.shape[1] == 2
+        assert len(r.front_designs) == len(r.front_objs)
+        assert isinstance(r.provenance, Provenance)
+
+
+def test_scalarized_result_with_archive_serves_front(tmp_path):
+    s = _session(tmp_path)
+    spec = C.SystemSpec.build(_graph(), ch_max=2)
+    space = C.DesignSpace(spec, **TINY)
+    arc = ParetoArchive(
+        16, jax.tree.map(np.asarray,
+                         C.random_design(jax.random.PRNGKey(0), space)),
+        n_obj=4, obj_keys=C.METRIC_KEYS)
+    events = []
+    r = s.submit(Query(Problem.from_spec(spec, space, objectives=OBJ),
+                       engine="bo_sa", weights=(1.0, 0.0, 1.0, 0.0),
+                       archive=arc,
+                       engine_opts=dict(bo_fields=(), n_init=3,
+                                        sa=SAConfig(steps=10, chains=2))),
+                 on_segment=events.append)
+    # scalarized engines stream one completion event
+    assert len(events) == 1 and events[0].phase == "bo_sa"
+    assert len(r.front_objs) >= 1
+    assert len(pareto_front(r.front_objs)) == len(r.front_objs)
+    assert r.provenance.n_evals_run == 3 * 10 * 2
+    assert arc.n_evals == 3                # the archive recorded the run
+
+
+def test_module_level_default_session(tmp_path, monkeypatch):
+    """The process-wide conveniences: ``session()`` is a singleton (kwargs
+    only on first construction), ``plan``/``submit`` delegate to it."""
+    import repro.explore.api as api_mod
+    monkeypatch.setattr(api_mod, "_DEFAULT_SESSION", None)
+    s = api_mod.session(cache_dir=tmp_path,
+                        nsga=NSGAConfig(pop=8, generations=2))
+    assert api_mod.session() is s
+    with pytest.raises(RuntimeError):
+        api_mod.session(cache_dir=tmp_path / "other")
+    q = Query(_problem(), budget=16)
+    assert not api_mod.plan(q).cache_hit
+    r = api_mod.submit(q)
+    assert r.provenance.n_evals_run >= 16
+    assert api_mod.plan(q).cache_hit
+
+
+# ---------------------------------------------------------------------------
+# REPRO_CACHE_DIR override + construction-time validation
+# ---------------------------------------------------------------------------
+def test_repro_cache_dir_env_override(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_EXPLORE_CACHE", raising=False)
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "fleet"))
+    svc = ExplorationService()
+    assert svc.cache_dir == tmp_path / "fleet"
+    assert svc.cache_dir.is_dir()          # created at construction
+    # the historic env var outranks the fleet-wide one ...
+    monkeypatch.setenv("REPRO_EXPLORE_CACHE", str(tmp_path / "legacy"))
+    assert ExplorationService().cache_dir == tmp_path / "legacy"
+    # ... and the explicit argument outranks both
+    assert ExplorationService(cache_dir=tmp_path / "arg").cache_dir \
+        == tmp_path / "arg"
+
+
+def test_cache_dir_validated_at_construction(tmp_path, monkeypatch):
+    clash = tmp_path / "not_a_dir"
+    clash.write_text("occupied")
+    monkeypatch.delenv("REPRO_EXPLORE_CACHE", raising=False)
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(clash))
+    with pytest.raises(ValueError, match="unusable"):
+        ExplorationService()
+    with pytest.raises(ValueError, match="unusable"):
+        resolve_cache_dir(clash)
+
+
+# ---------------------------------------------------------------------------
+# opt-in archive-file GC (ManifestPolicy.reap_evicted_after)
+# ---------------------------------------------------------------------------
+def _manifest_with_files(tmp_path, policy, keys):
+    Path(tmp_path).mkdir(parents=True, exist_ok=True)
+    m = ArchiveManifest(tmp_path / MANIFEST_NAME, policy=policy)
+    for i, k in enumerate(keys):
+        (tmp_path / f"{k}.npz").write_bytes(b"stub")
+        m.update(k, embedding=np.ones(3) * i, dims=(1, 2, 1),
+                 n_evals=8, budget_covered=8, searched=OBJ, digest={})
+    return m
+
+
+def test_manifest_gc_reaps_stale_evictions_only(tmp_path):
+    pol = ManifestPolicy(max_entries=1, reap_evicted_after=2)
+    m = _manifest_with_files(tmp_path, pol, ["aaa", "bbb"])
+    # aaa was evicted when bbb arrived; not yet stale
+    assert "aaa" in m.evicted and m.reap_evicted() == ()
+    assert (tmp_path / "aaa.npz").exists()
+    m.touch("bbb")                          # tick the clock past the bound
+    m.touch("bbb")
+    assert m.reap_evicted() == ("aaa",)
+    assert not (tmp_path / "aaa.npz").exists()
+    assert (tmp_path / "bbb.npz").exists()  # indexed entries never reaped
+    assert m.evicted == {}                  # record consumed
+
+
+def test_manifest_gc_is_opt_in_and_reindex_cancels(tmp_path):
+    m = _manifest_with_files(tmp_path, ManifestPolicy(max_entries=1),
+                             ["aaa", "bbb"])
+    for _ in range(5):
+        m.touch("bbb")
+    assert m.reap_evicted() == ()           # default policy: never
+    assert (tmp_path / "aaa.npz").exists()
+    # re-indexing an evicted key cancels its pending reap
+    pol = ManifestPolicy(max_entries=2, reap_evicted_after=1)
+    m2 = _manifest_with_files(tmp_path / "b", pol, ["aaa"])
+    m2.evicted["ccc"] = 0
+    (tmp_path / "b" / "ccc.npz").write_bytes(b"stub")
+    m2.update("ccc", embedding=np.zeros(3), dims=(1, 2, 1), n_evals=1,
+              budget_covered=1, searched=OBJ, digest={})
+    for _ in range(3):
+        m2.touch("ccc")
+    assert m2.reap_evicted() == ()
+    assert (tmp_path / "b" / "ccc.npz").exists()
+
+
+def test_manifest_gc_eviction_records_roundtrip(tmp_path):
+    pol = ManifestPolicy(max_entries=1, reap_evicted_after=10)
+    m = _manifest_with_files(tmp_path, pol, ["aaa", "bbb"])
+    m.save()
+    back = ArchiveManifest.load(tmp_path / MANIFEST_NAME, policy=pol)
+    assert back.evicted == m.evicted and "aaa" in back.evicted
+
+
+def test_service_gc_end_to_end(tmp_path):
+    """A fleet cache under disk pressure: with the opt-in policy, the
+    archive file of a long-evicted entry disappears after enough ticks;
+    fresher evictions keep their files."""
+    svc = ExplorationService(
+        cache_dir=tmp_path, nsga=NSGAConfig(pop=8, generations=2),
+        policy=BudgetPolicy(adaptive=False, reallocate=False),
+        manifest_policy=ManifestPolicy(max_entries=1,
+                                       reap_evicted_after=1))
+    session = Session(service=svc)
+    keys = []
+    for k in (64, 96, 128):
+        keys.append(session.submit(
+            Query(_problem(k), budget=16)).provenance.cache_key)
+    a, b, c = keys
+    assert not svc._path(a).exists()       # evicted first, stale => reaped
+    assert svc._path(b).exists()           # evicted too recently
+    assert svc._path(c).exists()           # still indexed
+    assert list(svc.manifest.entries) == [c]

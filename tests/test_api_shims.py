@@ -1,0 +1,132 @@
+"""Deprecation shims over the unified ``repro.api`` path: each of the
+four legacy entry points (``ExplorationService.explore`` /
+``explore_batch``, ``optimize`` / ``two_stage_optimize``) emits exactly
+ONE ``DeprecationWarning`` and returns results bit-identical to the
+equivalent ``Session.submit`` call."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro.api import Problem, Query, Session
+from repro.core.optimizer import SAConfig, optimize, two_stage_optimize
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import (BudgetPolicy, ExplorationService,
+                                   ExploreQuery)
+
+TINY = dict(max_shape=(16, 16, 4, 4, 1, 2))
+OBJ = ("latency_ns", "cost_usd")
+KEY = jax.random.PRNGKey(3)
+
+
+def _graph(k=64):
+    return C.WorkloadGraph([C.matmul("mm", 512, 512, k)], [])
+
+
+def _svc(tmp_path, sub):
+    return ExplorationService(cache_dir=tmp_path / sub,
+                              nsga=NSGAConfig(pop=8, generations=2),
+                              policy=BudgetPolicy(adaptive=False))
+
+
+def _deprecations(rec):
+    return [w for w in rec if issubclass(w.category, DeprecationWarning)
+            and str(w.message).startswith("legacy entry point")]
+
+
+def _assert_identical_fronts(legacy, new_raw):
+    np.testing.assert_array_equal(legacy.front_objs, new_raw.front_objs)
+    np.testing.assert_array_equal(legacy.front_metrics,
+                                  new_raw.front_metrics)
+    assert legacy.n_evals_run == new_raw.n_evals_run
+    assert legacy.cache_key == new_raw.cache_key
+    assert legacy.from_cache == new_raw.from_cache
+    for dl, dn in zip(legacy.front_designs, new_raw.front_designs):
+        for k in dl:
+            np.testing.assert_array_equal(dl[k], dn[k])
+
+
+def test_explore_shim_warns_once_and_matches_submit(tmp_path):
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = _svc(tmp_path, "a").explore(
+            _graph(), OBJ, budget=16, ch_max=2, space_kwargs=TINY, key=KEY)
+    assert len(_deprecations(rec)) == 1
+    new = Session(service=_svc(tmp_path, "b")).submit(
+        Query(Problem(_graph(), OBJ, 2, TINY), budget=16, engine="nsga"),
+        key=KEY)
+    _assert_identical_fronts(legacy, new.raw)
+    np.testing.assert_array_equal(legacy.trace.hypervolume,
+                                  new.raw.trace.hypervolume)
+
+
+def test_explore_batch_shim_warns_once_and_matches_submit(tmp_path):
+    qs = lambda: [ExploreQuery(_graph(), OBJ, 16, 2, TINY),
+                  ExploreQuery(_graph(), ("energy_pj", "area_mm2"),
+                               16, 2, TINY)]
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = _svc(tmp_path, "a").explore_batch(qs(), key=KEY)
+    assert len(_deprecations(rec)) == 1    # one warning per CALL, not per
+    #                                        query in the batch
+    new = Session(service=_svc(tmp_path, "b")).submit(
+        [Query(Problem(q.graph, q.objectives, q.ch_max, q.space_kwargs),
+               budget=q.budget, engine="nsga") for q in qs()], key=KEY)
+    assert len(legacy) == len(new) == 2
+    for lr, nr in zip(legacy, new):
+        _assert_identical_fronts(lr, nr.raw)
+
+
+def test_optimize_shim_warns_once_and_matches_submit(tmp_path):
+    spec = C.SystemSpec.build(_graph(), ch_max=2)
+    space = C.DesignSpace(spec, **TINY)
+    kw = dict(weights=(1.0, 1.0, 0.0, 0.0), bo_fields=(), n_init=2,
+              sa=SAConfig(steps=10, chains=2))
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = optimize(spec, space, KEY, **kw)
+    assert len(_deprecations(rec)) == 1
+    new = Session(cache_dir=tmp_path / "b").submit(
+        Query(Problem.from_spec(spec, space), engine="bo_sa",
+              weights=kw["weights"],
+              engine_opts=dict(bo_fields=(), n_init=2, sa=kw["sa"])),
+        key=KEY)
+    assert legacy.objective == new.raw.objective == new.best_objective
+    assert legacy.history == new.raw.history
+    for k in legacy.design:
+        np.testing.assert_array_equal(np.asarray(legacy.design[k]),
+                                      np.asarray(new.raw.design[k]))
+    for k in legacy.metrics:
+        np.testing.assert_array_equal(np.asarray(legacy.metrics[k]),
+                                      np.asarray(new.raw.metrics[k]))
+
+
+def test_two_stage_shim_warns_once_and_matches_submit(tmp_path):
+    spec = C.SystemSpec.build(_graph(), ch_max=2)
+    space = C.DesignSpace(spec, **TINY)
+    sa = SAConfig(steps=8, chains=2)
+    with pytest.warns(DeprecationWarning) as rec:
+        legacy = two_stage_optimize(spec, space, KEY, n_candidates=2,
+                                    sa=sa)
+    assert len(_deprecations(rec)) == 1    # the nested optimize() calls
+    #                                        run through the backend impl,
+    #                                        not the warning shim
+    new = Session(cache_dir=tmp_path / "b").submit(
+        Query(Problem.from_spec(spec, space), engine="two_stage",
+              engine_opts=dict(n_candidates=2, sa=sa)), key=KEY)
+    assert legacy.objective == new.raw.objective
+    for k in legacy.design:
+        np.testing.assert_array_equal(np.asarray(legacy.design[k]),
+                                      np.asarray(new.raw.design[k]))
+    assert legacy.history == new.raw.history
+
+
+def test_module_level_explore_delegates_with_one_warning(tmp_path):
+    from repro.explore.service import explore
+    svc = _svc(tmp_path, "mod")
+    with pytest.warns(DeprecationWarning) as rec:
+        r = explore(_graph(), OBJ, budget=16, ch_max=2,
+                    space_kwargs=TINY, service=svc, key=KEY)
+    assert len(_deprecations(rec)) == 1
+    assert r.n_evals_run >= 16

@@ -1,0 +1,48 @@
+"""Public-API surface snapshot: ``repro.api.__all__`` and the field
+names of the declarative types are contract — any drift must be a
+conscious decision, made visible by updating
+``tests/data/api_surface.json`` in the same change.  Runs in tier-1."""
+
+import dataclasses
+import json
+from pathlib import Path
+
+import repro.api as api
+
+SNAPSHOT = json.loads(
+    (Path(__file__).parent / "data" / "api_surface.json").read_text())
+
+
+def _fields(cls):
+    return [f.name for f in dataclasses.fields(cls)]
+
+
+def test_api_all_matches_snapshot():
+    assert sorted(api.__all__) == sorted(SNAPSHOT["all"])
+    # everything advertised is importable
+    for name in api.__all__:
+        assert hasattr(api, name), f"repro.api.{name} missing"
+    # the explore package re-exports the core types too
+    import repro.explore as ex
+    for name in ("Problem", "Query", "Plan", "Result", "Session"):
+        assert getattr(ex, name) is getattr(api, name)
+
+
+def test_engine_names_match_snapshot():
+    assert list(api.ENGINES) == SNAPSHOT["engines"]
+
+
+def test_declarative_type_fields_match_snapshot():
+    for name, expect in SNAPSHOT["fields"].items():
+        cls = getattr(api, name)
+        got = _fields(cls)
+        assert got == expect, (
+            f"{name} fields drifted: {got} != snapshot {expect} — if "
+            f"intentional, update tests/data/api_surface.json")
+
+
+def test_problem_surface_is_stable():
+    # Problem is slotted, not a dataclass: its public attribute contract
+    assert api.Problem.__slots__ == (
+        "graph", "objectives", "ch_max", "space_kwargs", "spec", "space",
+        "_key")

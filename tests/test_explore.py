@@ -34,6 +34,10 @@ def _brute_front(pts):
     return keep
 
 
+# this module deliberately exercises the legacy explore/optimize entry
+# points (now deprecation shims over repro.api) — expected warnings only
+pytestmark = pytest.mark.filterwarnings("ignore:legacy entry point")
+
 TINY_SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))   # <= 2 chiplets =>
 #                      every design satisfies the ch_max=2 node constraint
 

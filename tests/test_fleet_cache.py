@@ -17,6 +17,10 @@ from repro.explore.archive import MANIFEST_NAME, ArchiveManifest, ManifestPolicy
 from repro.explore.nsga import NSGAConfig
 from repro.explore.service import BudgetPolicy, ExplorationService
 
+# this module deliberately exercises the legacy explore entry points
+# (now deprecation shims over repro.api) — expected warnings only
+pytestmark = pytest.mark.filterwarnings("ignore:legacy entry point")
+
 SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
 OBJ = ("latency_ns", "cost_usd")
 COLD = ("attn_qwen2_72b", "attn_qwen2_5_32b", "attn_internlm2",

@@ -26,6 +26,10 @@ from repro.explore.archive import (MANIFEST_NAME, ArchiveManifest,
 from repro.explore.nsga import NSGAConfig
 from repro.explore.service import BudgetPolicy, ExplorationService
 
+# this module deliberately exercises the legacy explore/optimize entry
+# points (now deprecation shims over repro.api) — expected warnings only
+pytestmark = pytest.mark.filterwarnings("ignore:legacy entry point")
+
 TINY_SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
 
 
