@@ -1,0 +1,161 @@
+"""``repro.obs`` flight-recorder benchmark: instrumentation overhead and
+journal completeness.
+
+Acceptance gates reported as derived values:
+
+* ``overhead`` — wall-time of an instrumented + journaled submission over
+  the identical submission with observability disabled (min over repeats,
+  fresh archive each rep, scan runners pre-compiled by a warmup).  Must
+  be <= 1.03 (3%), with a small absolute floor so a sub-100ms workload
+  can't fail the gate on scheduler noise.
+* ``identical`` — the enabled and disabled arms must produce
+  bit-identical front metrics (instrumentation reads clocks, never
+  numeric state).  Must be 1.
+* ``replay`` — folding the journal back through ``obs.replay`` must
+  reproduce the in-memory ``Result``: same segment count, same
+  evaluation total, same final archive-projected hypervolume.  Must
+  be 1.
+* ``report`` — the rendered plan-vs-actual report must show every
+  planned segment with an actual observation.  Must be 1.
+"""
+
+from __future__ import annotations
+
+import shutil
+import time
+
+import jax
+
+import repro.core as C
+from repro import obs
+from repro.api import Problem, Query, Session
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import BudgetPolicy
+from repro.obs.report import render
+
+from .common import ARTIFACTS, QUICK
+
+OBJECTIVES = ("latency_ns", "cost_usd")
+SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
+NSGA = NSGAConfig(pop=8, generations=2)
+POLICY = BudgetPolicy(chunk_generations=2, adaptive=False,
+                      reallocate=False)
+
+
+def _graph(k):
+    return C.WorkloadGraph([C.matmul("mm", 512, 512, k)], [])
+
+
+def _submit_cold(cache_dir, journal, budget):
+    """One cold submission into a FRESH archive directory (the scan
+    runners stay compiled in the process-wide NSGA cache, so after the
+    warmup this measures pure segment execution + bookkeeping)."""
+    if cache_dir.exists():
+        shutil.rmtree(cache_dir)
+    s = Session(cache_dir=cache_dir, journal=journal, nsga=NSGA,
+                policy=POLICY)
+    return s.submit(Query(Problem(_graph(64), objectives=OBJECTIVES,
+                                  ch_max=2, space_kwargs=SPACE_KW),
+                          budget=budget),
+                    key=jax.random.PRNGKey(7))
+
+
+def run(quick: bool = QUICK):
+    budget = 64 if quick else 256
+    repeats = 3 if quick else 5
+    root = ARTIFACTS / "obs_bench"
+    if root.exists():
+        shutil.rmtree(root)
+
+    # warmup compiles the scan variant both arms reuse — first-call XLA
+    # lowering must not be attributed to either arm
+    _submit_cold(root / "warmup", False, budget)
+
+    # arms are INTERLEAVED (off, on, off, on, ...) with min-over-repeats
+    # per arm, so page-cache warmup and scheduler drift hit both equally
+    # instead of biasing whichever arm runs first
+    jp = None
+    best = {False: float("inf"), True: float("inf")}
+    result = {False: None, True: None}
+    for i in range(repeats):
+        for enabled in (False, True):
+            if enabled:
+                obs.enable()
+                # one journal file per rep: replay/report check the LAST
+                # rep's journal against its in-memory result
+                jp = root / f"journal_{i}.jsonl"
+                journal = jp
+            else:
+                obs.disable()
+                journal = False
+            try:
+                t0 = time.perf_counter()
+                result[enabled] = _submit_cold(
+                    root / f"cache_{int(enabled)}", journal, budget)
+                best[enabled] = min(best[enabled],
+                                    time.perf_counter() - t0)
+            finally:
+                obs.enable()
+
+    r_off, t_off = result[False], best[False]
+    r_on, t_on = result[True], best[True]
+
+    overhead = t_on / t_off
+    identical = int(
+        r_on.front_metrics.tobytes() == r_off.front_metrics.tobytes()
+        and r_on.front_objs.tobytes() == r_off.front_objs.tobytes())
+
+    records = list(obs.read_journal(jp))
+    ck = r_on.provenance.cache_key
+    rp = obs.replay(records).get(ck, {})
+    replay_ok = int(
+        rp.get("segments") == r_on.trace.archive_hv.shape[0]
+        and rp.get("n_evals") == r_on.provenance.n_evals_run
+        and rp.get("final_hv") is not None
+        and abs(rp["final_hv"] - float(r_on.trace.archive_hv[-1, 0]))
+        <= 1e-9 * max(abs(float(r_on.trace.archive_hv[-1, 0])), 1.0))
+
+    report = render(records)
+    seg_rows = [ln for ln in report.splitlines()
+                if ln.startswith("  refine")]
+
+    def observed(row):                  # actual_s column is a float, not
+        try:                            # the '-' of an unobserved segment
+            return float(row.split()[5]) > 0.0
+        except ValueError:
+            return False
+
+    # the journal holds one plan per journaled rep; each planned segment
+    # of each rep must render with an observation
+    n_planned = sum(len(p.get("segments", ()))
+                    for p in records if p.get("type") == "plan")
+    report_ok = int(n_planned > 0 and len(seg_rows) == n_planned
+                    and all(observed(r) for r in seg_rows))
+
+    # 3% relative, floored at 50ms absolute: micro-workloads can't fail
+    # the gate on scheduler noise alone
+    gate = max(1.03 * t_off, t_off + 0.05)
+    assert t_on <= gate, (
+        f"observability overhead too high: {t_on:.3f}s instrumented vs "
+        f"{t_off:.3f}s disabled (gate {gate:.3f}s)")
+    assert identical, "fronts differ with observability on vs off"
+    assert replay_ok, (
+        f"journal replay mismatch: {rp} vs in-memory "
+        f"segments={r_on.trace.archive_hv.shape[0]} "
+        f"n_evals={r_on.provenance.n_evals_run}")
+    assert report_ok, (
+        f"report incomplete: {len(seg_rows)} observed rows for "
+        f"{n_planned} planned segments")
+
+    return [
+        dict(name="obs_disabled_submit", us_per_call=t_off * 1e6,
+             derived=""),
+        dict(name="obs_journaled_submit", us_per_call=t_on * 1e6,
+             derived=f"overhead={overhead:.4f}"),
+        dict(name="obs_identical_fronts", us_per_call=0,
+             derived=f"identical={identical}"),
+        dict(name="obs_journal_replay", us_per_call=0,
+             derived=f"replay={replay_ok}"),
+        dict(name="obs_report_complete", us_per_call=0,
+             derived=f"report={report_ok}"),
+    ]

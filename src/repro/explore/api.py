@@ -28,6 +28,13 @@ Streaming is part of the contract: ``submit(..., on_segment=cb)`` fires
 ``cb(SegmentEvent)`` at every scan-segment boundary with the incremental
 ``ConvergenceTrace`` slice (scalarized engines fire once, on completion),
 so dashboards and async serving observe a run without waiting for it.
+
+So is observability (``repro.obs``): ``Session(journal=...)`` — or the
+``$REPRO_JOURNAL_DIR`` env var — attaches a crash-safe JSONL journal to
+every ``plan``/``submit`` of the session, recording one line per plan,
+scan segment, result and span close (``python -m repro.obs.report``
+renders them).  Instrumentation only reads clocks: fronts are
+bit-identical with observability on or off.
 """
 
 from __future__ import annotations
@@ -35,12 +42,12 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
+from .. import obs
 from ..core.constants import DEFAULT_TECH
 from ..core.encoding import DesignSpace
 from ..core.evaluate import SystemSpec
@@ -262,16 +269,23 @@ class Session:
     when not supplied), which owns the archive cache directory, the NSGA
     engine configuration, the budget policy, and the transfer manifest;
     the scalarized engines share the session's ``TechConstants``.
+
+    ``journal`` attaches a ``repro.obs`` run journal to every ``plan`` /
+    ``submit`` of this session: a ``Journal``, a path (opened append-only
+    on first write), ``None`` (the default — the process journal under
+    ``$REPRO_JOURNAL_DIR`` when that env var is set, else no journal), or
+    ``False`` to opt out even when the env var is set.
     """
 
     def __init__(self, service: Optional[ExplorationService] = None,
-                 **service_kwargs):
+                 journal=None, **service_kwargs):
         # the service is built LAZILY, on the first query that needs the
         # archive cache: purely scalarized sessions (the optimize /
         # two_stage shims) never validate-and-create a cache directory
         # they will not touch
         self._service = service
         self._service_kwargs = dict(service_kwargs)
+        self._journal = obs.resolve_journal(journal)
 
     @property
     def service(self) -> ExplorationService:
@@ -297,7 +311,29 @@ class Session:
         """Inspect what ``submit`` would do for one query, spending no
         evaluations: resolved engine, archive cache key (and warm-serve
         verdict), the quantized segment schedule, and — for transfer
-        queries — the predicted neighbors with their seed quotas."""
+        queries — the predicted neighbors with their seed quotas.
+
+        With observability on and a journal attached, one ``plan`` record
+        per call lands in the journal — the "plan" half of the report's
+        plan-vs-actual table."""
+        with obs.sink_attached(self._journal), \
+                obs.span("session.plan", engine=query.resolved_engine()):
+            pl = self._plan_impl(query)
+            if obs.active():
+                obs.emit(dict(
+                    type="plan", key=pl.cache_key, engine=pl.engine,
+                    budget=pl.budget, cache_hit=pl.cache_hit,
+                    objectives=list(pl.objectives),
+                    segments=[dict(segment=s.index, pop=s.pop,
+                                   generations=s.generations,
+                                   n_evals=s.n_evals)
+                              for s in pl.segments],
+                    neighbors=[dict(key=n.key, distance=n.distance,
+                                    quota=n.quota) for n in pl.neighbors],
+                    seed_cap=pl.seed_cap))
+        return pl
+
+    def _plan_impl(self, query: Query) -> Plan:
         engine = query.resolved_engine()
         p = query.problem
         ck = self._cache_key(p)
@@ -361,12 +397,51 @@ class Session:
         banked budget reallocates across the batch, exactly the legacy
         ``explore_batch`` semantics.  ``on_segment`` streams every scan
         segment's ``SegmentEvent`` as it completes (scalarized engines
-        fire one event on completion)."""
+        fire one event on completion).
+
+        With observability on and a journal attached (see ``journal=`` on
+        the constructor), the submission journals one ``plan`` record per
+        query, one ``segment`` record per scan-segment boundary, one
+        ``result`` record per answer, and a final ``metrics`` snapshot —
+        everything ``repro.obs.report`` needs.  Instrumentation never
+        touches PRNG keys or numeric state: results are bit-identical
+        with observability on or off."""
         single = isinstance(queries, Query)
         qs: List[Query] = [queries] if single else list(queries)
         if not qs:
             return []
+        with obs.sink_attached(self._journal), \
+                obs.span("session.submit", queries=len(qs)):
+            out = self._submit_impl(qs, key=key, on_segment=on_segment,
+                                    single=single)
+            if obs.active():
+                for r in out:
+                    pv = r.provenance
+                    obs.emit(dict(
+                        type="result", key=pv.cache_key, engine=pv.engine,
+                        from_cache=pv.from_cache, n_evals=pv.n_evals_run,
+                        n_evals_banked=pv.n_evals_banked,
+                        n_evals_realloc=pv.n_evals_realloc,
+                        plateaued=pv.plateaued, elapsed_s=pv.elapsed_s,
+                        front_size=int(len(r.front_objs))))
+                obs.emit(dict(type="metrics",
+                              snapshot=obs.REGISTRY.snapshot()))
+            for r in out:
+                obs.observe("session.time_to_front_s",
+                            r.provenance.elapsed_s)
+        return out[0] if single else out
+
+    def _submit_impl(self, qs: List[Query], key=None, on_segment=None,
+                     single: bool = False) -> List[Result]:
+        # ``single`` preserves the legacy key convention: only a bare
+        # (non-list) Query takes the caller's key verbatim on the
+        # scalarized path — a one-element list still domain-separates
         key = jax.random.PRNGKey(0) if key is None else key
+        if obs.active():        # journal the plan of record for every
+            #                     query before the engines run — read-only
+            #                     (archive/manifest inspection), no PRNG
+            for q in qs:
+                self.plan(q)
         override = {q.policy for q in qs if q.policy is not None}
         if len(override) > 1:
             raise ValueError("one submission takes at most one "
@@ -402,8 +477,7 @@ class Session:
             k = key if single else jax.random.fold_in(
                 jax.random.fold_in(key, 0x5ca1a2), i)
             results[i] = self._run_scalarized(q, eng, k, on_segment)
-        out = [results[i] for i in range(len(qs))]
-        return out[0] if single else out
+        return [results[i] for i in range(len(qs))]
 
     @staticmethod
     def _validate_scalarized(q: Query) -> None:
@@ -467,12 +541,14 @@ class Session:
                                 tech=self.tech, archive=q.archive,
                                 seed_designs=q.seed_designs, **opts)
         elapsed = time.perf_counter() - t0
-        if on_segment is not None and sr.trace is not None:
-            try:                        # one completion event: scalarized
-                #                         engines have no scan segments
-                on_segment(SegmentEvent(ck, 0, sr.trace, engine))
-            except Exception as e:
-                warnings.warn(f"on_segment callback failed for {ck}: {e}")
+        cb = ExplorationService._segment_cb(on_segment, ck, engine)
+        if cb is not None and sr.trace is not None:
+            # one completion event: scalarized engines have no scan
+            # segments.  The shared wrapper tags the event with the
+            # engine phase and wall-clock, journals it, and keeps
+            # callback failures non-fatal (warned with phase/segment
+            # coordinates, counted on obs.on_segment_errors)
+            cb(0, sr.trace, elapsed, False)
         n_evals = int(sr.trace.n_evals[-1]) if sr.trace is not None \
             and len(sr.trace.n_evals) else 0
         idx = [METRIC_KEYS.index(o) for o in p.objectives]

@@ -1,8 +1,9 @@
 """Pareto archive: the canonical dominance math + a fixed-capacity,
 jit-compatible nondominated archive with a persistent on-disk cache.
 
-This module is deliberately standalone (jax/numpy only, no ``repro.core``
-imports) so both the optimizer (``repro.core.optimizer``) and the benchmark
+This module is deliberately standalone (jax/numpy plus the equally
+dependency-free ``repro.obs`` tracing layer — no ``repro.core`` imports)
+so both the optimizer (``repro.core.optimizer``) and the benchmark
 suite can use one dominance convention without import cycles:
 
     a dominates b  <=>  all(a <= b) and any(a < b)      (all minimized)
@@ -34,6 +35,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs import trace as obs
 
 F = jnp.float32
 BIG = 1e30         # sentinel objective for invalid / non-finite rows
@@ -408,15 +411,18 @@ class ParetoArchive:
                     obj_keys=list(self.obj_keys or ()),
                     budget_covered=self.budget_covered,
                     trace_summary=self.trace_summary)
-        return atomic_savez(
-            path, __meta=np.frombuffer(
-                json.dumps(meta).encode(), dtype=np.uint8),
-            objs=self.objs, valid=self.valid,
-            **{f"d_{k}": v for k, v in self.designs.items()})
+        with obs.span("archive.save", key=Path(path).stem,
+                      n_front=len(self)):
+            return atomic_savez(
+                path, __meta=np.frombuffer(
+                    json.dumps(meta).encode(), dtype=np.uint8),
+                objs=self.objs, valid=self.valid,
+                **{f"d_{k}": v for k, v in self.designs.items()})
 
     @classmethod
     def load(cls, path) -> "ParetoArchive":
-        with np.load(Path(path)) as z:
+        with obs.span("archive.load", key=Path(path).stem), \
+                np.load(Path(path)) as z:
             meta = json.loads(bytes(z["__meta"]).decode())
             designs = {k[2:]: z[k] for k in z.files if k.startswith("d_")}
             template = {k: v[0] for k, v in designs.items()}
@@ -625,6 +631,7 @@ class ArchiveManifest:
                 self.entries[k].get("last_used", 0), k))
             del self.entries[victim]
             self.evicted[victim] = self.clock
+            obs.inc("explore.manifest.evictions")
         return self
 
     def reap_evicted(self, cache_dir=None) -> Tuple[str, ...]:
@@ -707,6 +714,7 @@ class ArchiveManifest:
             del self.entries[k]
             self.evicted[k] = self.clock    # merged away counts as evicted
             #                                 for the opt-in file GC too
+            obs.inc("explore.manifest.dedup_merges")
         return self
 
     # ---- trust table -------------------------------------------------------

@@ -130,8 +130,9 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
         imm_fn = jax.jit(jax.vmap(jax.vmap(
             lambda k: random_design(k, space)))) if n_imm else None
         _NSGA_CACHE[cache_key] = (
-            jax.jit(_build_run(space, dims, idx, cfg, tech)), imm_fn, n_imm)
-    jitted, imm_fn, n_imm = _NSGA_CACHE[cache_key]
+            jax.jit(_build_run(space, dims, idx, cfg, tech)), imm_fn, n_imm,
+            dict(executed=False))
+    jitted, imm_fn, n_imm, state = _NSGA_CACHE[cache_key]
 
     def runner(key, pop0, arrays=None):
         arr = {k: jnp.asarray(v) for k, v in (arrays or spec.arrays).items()}
@@ -140,8 +141,15 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
         if n_imm:
             kk = jax.random.split(k_imm, cfg.generations * n_imm)
             imm = imm_fn(kk.reshape(cfg.generations, n_imm, *kk.shape[1:]))
-        return jitted(k_run, pop0, arr, imm)
+        out = jitted(k_run, pop0, arr, imm)
+        state["executed"] = True
+        return out
 
+    # first-call attribution for the observability layer: a scan variant
+    # that has never executed in this process pays XLA lowering on its
+    # first call, which per-segment wall-clock must attribute separately
+    # (the raw material for plan-cost estimates)
+    runner.compile_state = state
     return runner
 
 

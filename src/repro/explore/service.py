@@ -47,6 +47,7 @@ the archive npz.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import os
 import time
 import warnings
@@ -58,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.constants import DEFAULT_TECH
 from ..core.encoding import (DesignSpace, balanced_init, migrate,
                              portable_signature, random_design, repair,
@@ -207,11 +209,21 @@ class SegmentEvent:
     index within its phase, the segment's incremental ``ConvergenceTrace``
     slice (extend the slices to recover the run's full trace), and the
     phase — ``"refine"`` for a group's own budget, ``"realloc"`` for a
-    reallocation top-up spending banked ledger credit."""
+    reallocation top-up spending banked ledger credit (scalarized engines
+    fire one completion event tagged with the engine name).
+
+    ``elapsed_s`` is the segment's wall-clock, measured once at the scan
+    boundary from the same monotonic clock as the result's ``elapsed_s``
+    accounting — consumers get per-segment timing without running their
+    own timers or a journal.  ``seq`` totally orders the events of one
+    execution stream (monotone across ALL phases of a ``run_queries`` /
+    ``Session.submit`` call, while ``segment`` restarts per phase)."""
     cache_key: str
     segment: int
     trace: ConvergenceTrace
     phase: str = "refine"
+    elapsed_s: float = 0.0
+    seq: int = 0
 
 
 @dataclasses.dataclass
@@ -299,9 +311,13 @@ class ExplorationService:
         snapshot's mutations are saved at the end (last writer wins)."""
         mtime = self._manifest_stat()
         if self._manifest is None or mtime != self._manifest_mtime:
-            self._manifest = ArchiveManifest.load(
-                self.cache_dir / MANIFEST_NAME,
-                policy=self.manifest_policy)
+            if self._manifest is not None:      # a genuine staleness
+                obs.inc("explore.manifest.reloads")     # reload, not the
+            #                                     first lazy load
+            with obs.span("manifest.reload"):
+                self._manifest = ArchiveManifest.load(
+                    self.cache_dir / MANIFEST_NAME,
+                    policy=self.manifest_policy)
             self._manifest_mtime = mtime
         return self._manifest
 
@@ -398,7 +414,9 @@ class ExplorationService:
         ``on_segment`` (callable taking one ``SegmentEvent``) streams each
         scan segment's incremental ``ConvergenceTrace`` slice as soon as
         the segment finishes — the dashboard/async-serving hook.  Callback
-        failures are warned about, never fatal to the query."""
+        failures are warned about (with phase and segment index), counted
+        on the ``obs.on_segment_errors`` counter, and journaled as
+        ``callback_error`` records — never fatal to the query."""
         key = jax.random.PRNGKey(0) if key is None else key
         # group by canonical problem hash
         groups: Dict[str, Dict] = {}
@@ -411,34 +429,69 @@ class ExplorationService:
             order.append((ck, len(g["queries"])))
             g["queries"].append(q)
 
-        for i, (ck, g) in enumerate(groups.items()):
-            self._refine_group(ck, g, jax.random.fold_in(key, i),
-                               on_segment=on_segment)
-        if self.policy.reallocate:
-            self._reallocate(groups, jax.random.fold_in(key, len(groups)),
-                             on_segment=on_segment)
+        # one monotone event sequence across every phase of this batch
+        seq = itertools.count()
+        with obs.span("explore.run_queries", queries=len(queries),
+                      groups=len(groups)):
+            for i, (ck, g) in enumerate(groups.items()):
+                self._refine_group(ck, g, jax.random.fold_in(key, i),
+                                   on_segment=on_segment, seq=seq)
+            if self.policy.reallocate:
+                self._reallocate(groups,
+                                 jax.random.fold_in(key, len(groups)),
+                                 on_segment=on_segment, seq=seq)
 
         group_results = {ck: self._project_group(ck, g)
                          for ck, g in groups.items()}
         return [group_results[ck][slot] for ck, slot in order]
 
     @staticmethod
-    def _segment_cb(on_segment, ck: str, phase: str):
+    def _segment_cb(on_segment, ck: str, phase: str, seq=None):
         """Wrap the user callback for one group's refinement: tag events
-        with the archive key and phase, and never let a callback failure
-        kill the query it was observing."""
-        if on_segment is None:
+        with the archive key, phase, stream sequence number and the
+        segment's wall-clock (measured once, at the scan boundary in
+        ``_refine``), journal one ``segment`` record per boundary, and
+        never let a callback failure kill the query it was observing —
+        failures are warned about with their phase/segment coordinates,
+        counted (``obs.on_segment_errors``) and journaled so telemetry
+        consumers can see the events they lost.  ``None`` (skip event
+        assembly entirely) when nobody is listening."""
+        if on_segment is None and not obs.active():
             return None
+        seq = seq if seq is not None else itertools.count()
 
-        def cb(s: int, tr: ConvergenceTrace):
+        def cb(s: int, tr: ConvergenceTrace, elapsed_s: float,
+               compiled: bool):
+            ev = SegmentEvent(ck, s, tr, phase, elapsed_s=elapsed_s,
+                              seq=next(seq))
+            if obs.active():
+                hv = (tr.archive_hv[-1] if tr.archive_hv is not None
+                      and len(tr.archive_hv) else None)
+                obs.emit(dict(
+                    type="segment", key=ck, phase=phase, segment=s,
+                    seq=ev.seq, elapsed_s=elapsed_s, compile=compiled,
+                    n_evals=int(tr.n_evals[-1]) if len(tr.n_evals) else 0,
+                    front_size=(int(tr.front_size[-1])
+                                if len(tr.front_size) else 0),
+                    hv=[float(v) for v in hv] if hv is not None else None))
+            if on_segment is None:
+                return
             try:
-                on_segment(SegmentEvent(ck, s, tr, phase))
+                on_segment(ev)
             except Exception as e:
-                warnings.warn(f"on_segment callback failed for {ck}: {e}")
+                obs.inc("obs.on_segment_errors")
+                if obs.active():
+                    obs.emit(dict(type="callback_error", key=ck,
+                                  phase=phase, segment=s, seq=ev.seq,
+                                  error=repr(e)))
+                warnings.warn(
+                    f"on_segment callback failed for {ck} "
+                    f"(phase={phase}, segment={s}): {e}")
         return cb
 
     # ---- one problem group -------------------------------------------------
-    def _refine_group(self, ck: str, g: Dict, key, on_segment=None) -> None:
+    def _refine_group(self, ck: str, g: Dict, key, on_segment=None,
+                      seq=None) -> None:
         """Phase 1: spend (or bank) the group's own budget.  Mutates ``g``
         with the run's accounting; fronts are projected later, after any
         cross-group budget reallocation topped the archive up."""
@@ -450,6 +503,7 @@ class ExplorationService:
             k for k in METRIC_KEYS
             if any(k in q.objectives for q in g["queries"]))
         warm = self.warm_verdict(arc, union, budget)
+        obs.inc("explore.cache.hit" if warm else "explore.cache.miss")
         g.update(warm=warm, n_run=0, trace=None, plateaued=False,
                  banked=0, realloc=0, transferred_from=(), n_seeds=0)
         if warm:
@@ -458,36 +512,44 @@ class ExplorationService:
                 #                                  caches into the index
             g["elapsed"] = time.perf_counter() - t0
             return
-        seeds = None
-        if any(q.transfer for q in g["queries"]):
-            # cold starts AND warm refinements take seeds: a half-explored
-            # archive profits from neighbor fronts it has never seen, but
-            # its own front head keeps at least half the population
-            pop_eff = self._effective_pop(budget)
-            cap = pop_eff if len(arc) == 0 else max(pop_eff // 2, 1)
-            seeds, srcs = self._transfer_seeds(
-                ck, g["space"], g["embedding"],
-                jax.random.fold_in(key, 0x7e5), arc=arc, cap=cap)
-            g["transferred_from"] = srcs
-            g["n_seeds"] = (int(next(iter(seeds.values())).shape[0])
-                            if seeds else 0)
-        n_run, trace, plateaued, banked = self._refine(
-            arc, g["spec"], g["space"], union, budget, key, seeds=seeds,
-            on_segment=self._segment_cb(on_segment, ck, "refine"))
-        arc.searched = tuple(k for k in METRIC_KEYS
-                             if k in arc.searched or k in union)
-        arc.budget_covered = max(arc.budget_covered, budget)
-        if banked:
-            self.ledger[ck] = self.ledger.get(ck, 0) + banked
-        g.update(n_run=n_run, trace=trace, plateaued=plateaued,
-                 banked=banked)
-        arc.trace_summary = trace.summary()
-        self.save(ck)
-        m = self.manifest               # ONE snapshot: the trust records
-        #                                 land in the same object the
-        #                                 index update saves below
-        self._record_trust(ck, g, trace, m)
-        self._update_manifest(ck, g, m)
+        with obs.span("explore.refine_group", key=ck, budget=budget) as sp:
+            seeds = None
+            if any(q.transfer for q in g["queries"]):
+                # cold starts AND warm refinements take seeds: a
+                # half-explored archive profits from neighbor fronts it has
+                # never seen, but its own front head keeps at least half
+                # the population
+                pop_eff = self._effective_pop(budget)
+                cap = pop_eff if len(arc) == 0 else max(pop_eff // 2, 1)
+                with obs.span("explore.transfer_seeds", key=ck):
+                    seeds, srcs = self._transfer_seeds(
+                        ck, g["space"], g["embedding"],
+                        jax.random.fold_in(key, 0x7e5), arc=arc, cap=cap)
+                g["transferred_from"] = srcs
+                g["n_seeds"] = (int(next(iter(seeds.values())).shape[0])
+                                if seeds else 0)
+            n_run, trace, plateaued, banked = self._refine(
+                arc, g["spec"], g["space"], union, budget, key, seeds=seeds,
+                on_segment=self._segment_cb(on_segment, ck, "refine",
+                                            seq=seq))
+            arc.searched = tuple(k for k in METRIC_KEYS
+                                 if k in arc.searched or k in union)
+            arc.budget_covered = max(arc.budget_covered, budget)
+            obs.inc("explore.evals.spent", n_run)
+            if banked:
+                obs.inc("explore.evals.banked", banked)
+                self.ledger[ck] = self.ledger.get(ck, 0) + banked
+            g.update(n_run=n_run, trace=trace, plateaued=plateaued,
+                     banked=banked)
+            sp.set(n_run=n_run, plateaued=plateaued, banked=banked,
+                   n_seeds=g["n_seeds"])
+            arc.trace_summary = trace.summary()
+            self.save(ck)
+            m = self.manifest           # ONE snapshot: the trust records
+            #                             land in the same object the
+            #                             index update saves below
+            self._record_trust(ck, g, trace, m)
+            self._update_manifest(ck, g, m)
         g["elapsed"] = time.perf_counter() - t0
 
     @staticmethod
@@ -660,6 +722,7 @@ class ExplorationService:
                     md = migrate(d, ent["digest"], dst)
                     sig = portable_signature(md, dst)
                     if sig in taken:    # already on the destination front
+                        obs.inc("explore.transfer.seeds_deduped")
                         continue        # (or offered by a closer neighbor)
                     taken.add(sig)
                     migrated.append(md)
@@ -671,6 +734,7 @@ class ExplorationService:
             if migrated:                # seeds and telemetry stay
                 #                         consistent: nk is credited iff
                 #                         its designs were injected
+                obs.inc("explore.transfer.seeds_injected", len(migrated))
                 seeds.extend(migrated)
                 srcs.append(nk)
             if len(seeds) >= cap:
@@ -685,7 +749,7 @@ class ExplorationService:
                  for k2 in seeds[0]}, tuple(srcs))
 
     def _reallocate(self, groups: Dict[str, Dict], key,
-                    on_segment=None) -> None:
+                    on_segment=None, seq=None) -> None:
         """Phase 2: spend the ledger on this batch's under-explored
         archives — groups that ran to budget exhaustion WITHOUT plateauing
         (their front was still improving), lowest eval-count first.  Spent
@@ -703,10 +767,14 @@ class ExplorationService:
             t0 = time.perf_counter()
             # quantize_down caps the spend at the available credit — the
             # ledger must never be overdrawn by pow2 rounding
-            n_run, trace, plateaued, _ = self._refine(
-                arc, g["spec"], g["space"], g["union"], pool,
-                jax.random.fold_in(key, i), quantize_down=True,
-                on_segment=self._segment_cb(on_segment, ck, "realloc"))
+            with obs.span("explore.reallocate", key=ck, pool=pool) as sp:
+                n_run, trace, plateaued, _ = self._refine(
+                    arc, g["spec"], g["space"], g["union"], pool,
+                    jax.random.fold_in(key, i), quantize_down=True,
+                    on_segment=self._segment_cb(on_segment, ck, "realloc",
+                                                seq=seq))
+                sp.set(n_run=n_run)
+            obs.inc("explore.evals.realloc", n_run)
             pool -= n_run                # only what was actually spent
             self._drain_ledger(n_run)
             g["elapsed"] += time.perf_counter() - t0
@@ -856,6 +924,11 @@ class ExplorationService:
         hv_hist: List[np.ndarray] = []
         streak, plateaued, spent_g = 0, False, 0
         for s in range(n_seg):
+            t_seg = time.perf_counter()
+            # first call of this scan variant pays XLA lowering — attribute
+            # it separately so plan-vs-actual tables and the segment-time
+            # histogram aren't polluted by one-off compiles
+            compiled = not run.compile_state["executed"]
             pop_s, _raw, _sel, ev_designs, ev_raw, ev_feas, tr = run(
                 jax.random.fold_in(k_run, s),
                 seed(filler, seeds if s == 0 else None))
@@ -876,8 +949,15 @@ class ExplorationService:
                                  for p in hv_pairs])
             seg_trace.archive_hv = hv_now[None, :]
             trace = seg_trace if trace is None else trace.extend(seg_trace)
+            # the trace/hypervolume work above runs on the host, so the
+            # async dispatch has drained by here: dt is honest wall-clock
+            dt = time.perf_counter() - t_seg
+            obs.inc("explore.segments")
+            obs.observe("explore.segment_compile_s" if compiled
+                        else "explore.segment_s", dt)
             if on_segment is not None:     # stream the segment boundary:
-                on_segment(s, seg_trace)   # the incremental trace slice
+                on_segment(s, seg_trace, dt, compiled)     # the
+                #                            incremental trace slice
             # ---- plateau check on the archive-projected hypervolume ----
             # an empty archive means NOTHING has been found yet — that is
             # stagnation, not convergence, and must never stop the search
@@ -888,6 +968,7 @@ class ExplorationService:
                     else 0
                 if streak >= policy.patience and s + 1 < n_seg:
                     plateaued = True
+                    obs.inc("explore.plateau_stops")
                     hv_hist.append(hv_now)
                     break
             hv_hist.append(hv_now)

@@ -1,0 +1,37 @@
+"""``repro.obs`` — the flight recorder: structured tracing, a process
+metrics registry, and crash-safe JSONL run journals.
+
+Dependency-free (stdlib + numpy at the serialization edge) and threaded
+through the whole search stack (``repro.explore`` service / api /
+archive).  Three layers:
+
+* ``trace``   — nested wall-clock spans (``span("refine", problem=ck)``),
+  the enable/disable switch (a shared no-op singleton when disabled:
+  results are bit-identical with observability on or off), and the
+  record-sink fan-out journals attach to.
+* ``metrics`` — process-wide registry of counters / gauges / bounded
+  reservoir histograms with exact p50/p90/p99 (``REGISTRY.snapshot()``).
+* ``journal`` — append-only JSONL run journals with atomic line writes,
+  keyed by ``Problem.key()``-derived cache keys; one record per span
+  close, scan segment, plan, and result.  Enable per session
+  (``Session(journal=...)``) or fleet-wide via ``$REPRO_JOURNAL_DIR``.
+* ``report``  — the CLI renderer: ``python -m repro.obs.report
+  <journal>`` prints plan-vs-actual tables and a fleet summary (hit
+  rate, evals/sec, p50/p99 time-to-front).
+"""
+
+from .journal import (JOURNAL_ENV, Journal, default_journal,  # noqa: F401
+                      read_journal, replay, resolve_journal)
+from .metrics import (REGISTRY, Counter, Gauge, Histogram,  # noqa: F401
+                      MetricsRegistry)
+from .trace import (NOOP_SPAN, Span, active, add_sink,  # noqa: F401
+                    disable, emit, enable, enabled, gauge, inc, observe,
+                    remove_sink, sink_attached, span)
+
+__all__ = [
+    "JOURNAL_ENV", "Journal", "NOOP_SPAN", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "REGISTRY", "Span", "active", "add_sink",
+    "default_journal", "disable", "emit", "enable", "enabled", "gauge",
+    "inc", "observe", "read_journal", "remove_sink", "replay",
+    "resolve_journal", "sink_attached", "span",
+]

@@ -46,3 +46,17 @@ def test_problem_surface_is_stable():
     assert api.Problem.__slots__ == (
         "graph", "objectives", "ch_max", "space_kwargs", "spec", "space",
         "_key")
+
+
+def test_obs_surface_matches_snapshot():
+    import repro.obs as obs
+    assert sorted(obs.__all__) == sorted(SNAPSHOT["obs_all"])
+    for name in obs.__all__:
+        assert hasattr(obs, name), f"repro.obs.{name} missing"
+
+
+def test_session_takes_journal_kwarg():
+    import inspect
+    params = inspect.signature(api.Session.__init__).parameters
+    assert "journal" in params
+    assert params["journal"].default is None
