@@ -1,0 +1,206 @@
+"""``repro.serve`` serving benchmark: N concurrent clients against one
+session, overload degradation, and crash-resume overhead.
+
+Three arms, each with hard acceptance gates (asserted, not just
+reported):
+
+* ``fleet`` — N concurrent clients submit a cold/warm/refine mix of
+  async jobs through one ``Executor`` (worker threads = cloned sessions
+  coordinating only through the lock-arbitrated cache directory).
+  Reports p50/p99 time-to-front and the cache hit rate; gates on every
+  client receiving a front within the deadline.
+* ``overload`` — an executor with ZERO admission slots: every warm
+  query must be answered immediately with the freshest cached
+  (possibly stale) front, and the banked refinements must drain once
+  capacity returns.  Gates on all clients served stale + all banked
+  jobs reaching DONE.
+* ``resume`` — one run interrupted at a segment boundary and resumed in
+  a fresh session vs the identical uninterrupted run.  Gates on
+  bit-identical final fronts and exact residual-only spend; reports the
+  wall-clock resume overhead (interrupted + resumed vs uninterrupted).
+"""
+
+from __future__ import annotations
+
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+import repro.core as C
+from repro.api import Problem, Query, Session
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import BudgetPolicy, RunControl
+from repro.serve import DONE, Executor
+
+from .common import ARTIFACTS, QUICK
+
+OBJECTIVES = ("latency_ns", "cost_usd")
+SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
+NSGA = NSGAConfig(pop=8, generations=2)
+POLICY = BudgetPolicy(chunk_generations=1, adaptive=False,
+                      reallocate=False)
+
+
+def _problem(k):
+    return Problem(C.WorkloadGraph([C.matmul("mm", 512, 512, k)], []),
+                   objectives=OBJECTIVES, ch_max=2, space_kwargs=SPACE_KW)
+
+
+def _session(cache_dir):
+    return Session(cache_dir=cache_dir, nsga=NSGA, policy=POLICY)
+
+
+def _fleet_arm(root, budget, n_clients, deadline_s):
+    """Mixed cold/warm/refine clients through one executor."""
+    sess = _session(root / "cache")
+    p_warm, p_cold = _problem(64), _problem(96)
+    sess.submit(Query(p_warm, budget=budget))       # pre-warm one archive
+    ex = Executor(sess, store=root / "jobs", max_workers=2,
+                  max_pending=max(4, n_clients))
+    # round-robin mix: warm hit, refine (bigger budget), cold problem
+    mix = [Query(p_warm, budget=budget),
+           Query(p_warm, budget=2 * budget),
+           Query(p_cold, budget=budget)]
+    ttf = [None] * n_clients
+    results = [None] * n_clients
+
+    def client(i):
+        t0 = time.perf_counter()
+        h = ex.submit(mix[i % len(mix)], key=i, deadline_s=1.0)
+        r = h.stale if h.stale is not None else h.result(deadline_s)
+        ttf[i] = time.perf_counter() - t0
+        results[i] = r
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(deadline_s)
+    wall = time.perf_counter() - t0
+    ex.shutdown()
+    served = sum(r is not None for r in results)
+    assert served == n_clients, (
+        f"fleet: only {served}/{n_clients} clients served a front "
+        f"within {deadline_s}s")
+    lat = sorted(ttf)
+    hits = sum(bool(r.provenance.from_cache) for r in results)
+    return dict(
+        wall_s=wall, p50_s=lat[len(lat) // 2],
+        p99_s=lat[min(len(lat) - 1, int(0.99 * len(lat)))],
+        hit_rate=hits / n_clients,
+        total_evals=sum(r.provenance.n_evals_run for r in results))
+
+
+def _overload_arm(root, budget, n_clients, deadline_s):
+    """Zero admission slots: warm queries degrade to stale fronts
+    immediately; the banked refinements drain on resume_pending."""
+    sess = _session(root / "cache")
+    p = _problem(64)
+    sess.submit(Query(p, budget=budget))            # warm the archive
+    ex = Executor(sess, store=root / "jobs", max_workers=1,
+                  max_pending=0)
+    t0 = time.perf_counter()
+    handles = [ex.submit(Query(p, budget=budget), key=i, deadline_s=0.0)
+               for i in range(n_clients)]
+    stale_t = time.perf_counter() - t0
+    n_stale = sum(h.stale is not None for h in handles)
+    assert n_stale == n_clients, (
+        f"overload: {n_stale}/{n_clients} clients served stale — warm "
+        "queries must degrade to the cached front, not queue")
+    assert all(h.stale.provenance.stale
+               and h.stale.provenance.n_evals_run == 0 for h in handles)
+    assert stale_t < deadline_s, (
+        f"overload: stale serving took {stale_t:.2f}s "
+        f"(deadline {deadline_s}s)")
+    # capacity returns: the banked refinements must drain to DONE
+    resumed = ex.resume_pending()
+    for h in resumed:
+        h.result(deadline_s)
+    ex.shutdown()
+    states = [h.state() for h in resumed]
+    assert all(s == DONE for s in states), states
+    return dict(n_stale=n_stale, stale_serve_s=stale_t,
+                banked_drained=len(resumed))
+
+
+def _resume_arm(root, budget, deadline_s):
+    """Interrupted + resumed vs uninterrupted: bit-identity, residual
+    spend, wall-clock overhead."""
+    q = Query(_problem(64), budget=budget)
+    key = jax.random.PRNGKey(11)
+    t0 = time.perf_counter()
+    r_full = _session(root / "full").submit(q, key=key)
+    t_full = time.perf_counter() - t0
+
+    crash = _session(root / "crash")
+    ctl = RunControl()
+    seen = []
+
+    def stop_after_two(ev):
+        seen.append(ev)
+        if len(seen) == 2:
+            ctl.stop()
+
+    t0 = time.perf_counter()
+    r_int = crash.submit(q, key=key, resume=True, control=ctl,
+                         on_segment=stop_after_two)
+    t_int = time.perf_counter() - t0
+    assert r_int.provenance.interrupted
+    t0 = time.perf_counter()
+    r_res = _session(root / "crash").submit(q, key=key, resume=True)
+    t_res = time.perf_counter() - t0
+
+    identical = int(
+        r_res.front_objs.tobytes() == r_full.front_objs.tobytes()
+        and r_res.front_metrics.tobytes()
+        == r_full.front_metrics.tobytes())
+    spend_ok = int(r_int.provenance.n_evals_run
+                   + r_res.provenance.n_evals_run
+                   == r_full.provenance.n_evals_run)
+    assert identical, "resumed front differs from uninterrupted run"
+    assert spend_ok, (
+        f"resume respent budget: {r_int.provenance.n_evals_run} + "
+        f"{r_res.provenance.n_evals_run} != "
+        f"{r_full.provenance.n_evals_run}")
+    overhead = (t_int + t_res) / max(t_full, 1e-9)
+    return dict(t_full_s=t_full, t_interrupted_s=t_int, t_resumed_s=t_res,
+                overhead=overhead, identical=identical, spend_ok=spend_ok)
+
+
+def run(quick: bool = QUICK):
+    budget = 64 if quick else 256
+    n_clients = 6 if quick else 16
+    deadline_s = 300.0 if quick else 900.0
+    root = ARTIFACTS / "serve_bench"
+    if root.exists():
+        shutil.rmtree(root)
+
+    # warmup: compile the scan runner once so no arm pays XLA lowering
+    _session(root / "warmup").submit(Query(_problem(64), budget=budget))
+
+    fleet = _fleet_arm(root / "fleet", budget, n_clients, deadline_s)
+    overload = _overload_arm(root / "overload", budget, 4, deadline_s)
+    resume = _resume_arm(root / "resume", budget, deadline_s)
+
+    return [
+        dict(name="serve_fleet_ttf_p50", us_per_call=fleet["p50_s"] * 1e6,
+             derived=f"hit_rate={fleet['hit_rate']:.2f}"),
+        dict(name="serve_fleet_ttf_p99", us_per_call=fleet["p99_s"] * 1e6,
+             derived=f"clients={n_clients}"),
+        dict(name="serve_fleet_wall", us_per_call=fleet["wall_s"] * 1e6,
+             derived=f"evals={fleet['total_evals']}"),
+        dict(name="serve_overload_stale", us_per_call=
+             overload["stale_serve_s"] * 1e6,
+             derived=f"stale={overload['n_stale']}"
+                     f";drained={overload['banked_drained']}"),
+        dict(name="serve_resume_overhead", us_per_call=0,
+             derived=f"overhead={resume['overhead']:.3f}"),
+        dict(name="serve_resume_identical", us_per_call=0,
+             derived=f"identical={resume['identical']}"
+                     f";residual_spend={resume['spend_ok']}"),
+    ]

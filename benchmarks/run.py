@@ -11,8 +11,8 @@ import sys
 
 from . import (bench_validation, bench_cost_fig3, bench_comparison,
                bench_codesign, bench_pareto, bench_explore, bench_transfer,
-               bench_obs, bench_tt, bench_roofline, bench_autoshard,
-               bench_kernels)
+               bench_obs, bench_serve, bench_tt, bench_roofline,
+               bench_autoshard, bench_kernels)
 from .common import QUICK, emit
 
 MODULES = {
@@ -24,6 +24,7 @@ MODULES = {
     "explore": bench_explore,          # repro.explore front + cache service
     "transfer": bench_transfer,        # cross-workload transfer warm-starts
     "obs": bench_obs,                  # flight-recorder overhead + journal
+    "serve": bench_serve,              # async jobs, overload, crash-resume
     "tt": bench_tt,                    # Fig. 10 case study
     "roofline": bench_roofline,        # dry-run roofline table
     "autoshard": bench_autoshard,      # Level-B advisor

@@ -36,8 +36,10 @@ _LAZY = {
     "BudgetPolicy": ".service",
     "ExplorationService": ".service", "ExploreQuery": ".service",
     "ExploreResult": ".service", "SegmentEvent": ".service",
+    "PlateauState": ".service", "RunControl": ".service",
     "default_service": ".service",
     "explore": ".service",
+    "file_lock": ".locks",
     "Problem": ".api", "Query": ".api", "Plan": ".api", "Result": ".api",
     "Session": ".api", "Provenance": ".api", "SegmentPlan": ".api",
     "NeighborPlan": ".api",

@@ -41,7 +41,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import time
+import uuid
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -238,6 +240,13 @@ class Provenance:
     n_transfer_seeds: int
     plateaued: bool
     elapsed_s: float
+    interrupted: bool = False       # a cooperative stop (RunControl) ended
+    #                                 the run early; resumable checkpoint
+    #                                 state may remain on disk
+    stale: bool = False             # served from the archive WITHOUT the
+    #                                 budget being covered — the overload
+    #                                 degradation path (freshest cached
+    #                                 front now, refinement banked)
 
 
 @dataclasses.dataclass
@@ -286,12 +295,39 @@ class Session:
         self._service = service
         self._service_kwargs = dict(service_kwargs)
         self._journal = obs.resolve_journal(journal)
+        self._executor = None           # lazy repro.serve.Executor behind
+        #                                 submit_async
+        # one id per session + a per-submission counter: every submit of
+        # this session journals under its own run id, so overlapping
+        # submissions sharing one fleet journal replay apart cleanly
+        self._sid = uuid.uuid4().hex[:8]
+        self._run_seq = itertools.count()
 
     @property
     def service(self) -> ExplorationService:
         if self._service is None:
             self._service = ExplorationService(**self._service_kwargs)
         return self._service
+
+    def _service_config(self) -> Dict:
+        """The service configuration a sibling session needs to point at
+        the same cache directory with the same engines/policies."""
+        if self._service is None:
+            return dict(self._service_kwargs)
+        s = self._service
+        return dict(cache_dir=s.cache_dir, capacity=s.capacity,
+                    nsga=s.nsga, tech=s.tech, policy=s.policy,
+                    transfer_k=s.transfer_k,
+                    manifest_policy=s.manifest_policy)
+
+    def clone(self) -> "Session":
+        """A sibling session: same configuration, same cache directory
+        and journal, its OWN ``ExplorationService``.  Services are
+        single-threaded by design — the async executor hands each worker
+        thread a clone, and the shared cache directory (file locks +
+        reload-merge writes) is the only coordination point, exactly as
+        it is between separate processes."""
+        return Session(journal=self._journal, **self._service_config())
 
     @property
     def tech(self):
@@ -390,7 +426,8 @@ class Session:
 
     # ---- execution ---------------------------------------------------------
     def submit(self, queries: Union[Query, Sequence[Query]], key=None,
-               on_segment=None) -> Union[Result, List[Result]]:
+               on_segment=None, resume: bool = False,
+               control=None) -> Union[Result, List[Result]]:
         """Execute one query (returns its ``Result``) or a batch (returns
         a ``Result`` per query, in order).  NSGA queries of one batch are
         answered together — same-problem queries merge into one run and
@@ -403,17 +440,29 @@ class Session:
         the constructor), the submission journals one ``plan`` record per
         query, one ``segment`` record per scan-segment boundary, one
         ``result`` record per answer, and a final ``metrics`` snapshot —
-        everything ``repro.obs.report`` needs.  Instrumentation never
-        touches PRNG keys or numeric state: results are bit-identical
-        with observability on or off."""
+        everything ``repro.obs.report`` needs.  Every submission journals
+        under its own run id (``obs.run_context``), so overlapping
+        submissions sharing one fleet journal replay apart cleanly.
+        Instrumentation never touches PRNG keys or numeric state: results
+        are bit-identical with observability on or off.
+
+        ``resume=True`` turns on per-segment crash checkpointing for the
+        NSGA engine: a killed submission re-submitted with the same
+        queries and ``key`` restores the last completed segment's state
+        and spends only the residual budget (bit-identical final front).
+        ``control`` (a ``repro.explore.service.RunControl``) requests a
+        cooperative stop at the next segment boundary; interrupted
+        results carry ``provenance.interrupted=True``."""
         single = isinstance(queries, Query)
         qs: List[Query] = [queries] if single else list(queries)
         if not qs:
             return []
-        with obs.sink_attached(self._journal), \
+        rid = f"{self._sid}.{next(self._run_seq)}"
+        with obs.sink_attached(self._journal), obs.run_context(rid), \
                 obs.span("session.submit", queries=len(qs)):
             out = self._submit_impl(qs, key=key, on_segment=on_segment,
-                                    single=single)
+                                    single=single, resume=resume,
+                                    control=control)
             if obs.active():
                 for r in out:
                     pv = r.provenance
@@ -423,6 +472,7 @@ class Session:
                         n_evals_banked=pv.n_evals_banked,
                         n_evals_realloc=pv.n_evals_realloc,
                         plateaued=pv.plateaued, elapsed_s=pv.elapsed_s,
+                        interrupted=pv.interrupted,
                         front_size=int(len(r.front_objs))))
                 obs.emit(dict(type="metrics",
                               snapshot=obs.REGISTRY.snapshot()))
@@ -431,8 +481,41 @@ class Session:
                             r.provenance.elapsed_s)
         return out[0] if single else out
 
+    def submit_async(self, query: Query, key=None,
+                     deadline_s: Optional[float] = None):
+        """Submit one query asynchronously: returns a
+        ``repro.serve.JobHandle`` immediately (poll / ``result(timeout)``
+        / ``cancel()`` / streamed ``SegmentEvent``s) while a worker
+        thread runs the search.  Jobs are journaled durably under the
+        cache directory and keyed on ``Problem.key()``, so a crashed
+        process's jobs are recoverable (``Executor.resume_pending``) and
+        a killed run resumes from its last completed segment.  Under
+        overload (queue full), a query whose archive holds ANY front is
+        answered immediately with that possibly-stale front
+        (``provenance.stale=True``) and the refinement stays banked in
+        the job store.  ``deadline_s`` bounds how long admission may
+        defer before degrading."""
+        return self.executor().submit(query, key=key,
+                                      deadline_s=deadline_s)
+
+    def executor(self, **kwargs):
+        """The session-owned ``repro.serve.Executor`` (built lazily, on
+        the first ``submit_async``; kwargs accepted only on first
+        construction — build an ``Executor`` directly for anything
+        fancier)."""
+        if self._executor is None:
+            from ..serve import Executor
+            self._executor = Executor(self, **kwargs)
+        elif kwargs:
+            raise RuntimeError(
+                "this session's executor is already initialized; "
+                "construct repro.serve.Executor(session, ...) directly "
+                "for a custom configuration")
+        return self._executor
+
     def _submit_impl(self, qs: List[Query], key=None, on_segment=None,
-                     single: bool = False) -> List[Result]:
+                     single: bool = False, resume: bool = False,
+                     control=None) -> List[Result]:
         # ``single`` preserves the legacy key convention: only a bare
         # (non-list) Query takes the caller's key verbatim on the
         # scalarized path — a one-element list still domain-separates
@@ -462,7 +545,8 @@ class Session:
             try:
                 eqs = [self._to_explore_query(qs[i]) for i in nsga_idx]
                 for i, er in zip(nsga_idx, svc.run_queries(
-                        eqs, key=key, on_segment=on_segment)):
+                        eqs, key=key, on_segment=on_segment,
+                        resume=resume, control=control)):
                     results[i] = self._wrap_explore(qs[i], er)
             finally:
                 svc.policy = saved_policy
@@ -520,7 +604,8 @@ class Session:
                 n_evals_realloc=er.n_evals_realloc,
                 transferred_from=er.transferred_from,
                 n_transfer_seeds=er.n_transfer_seeds,
-                plateaued=er.plateaued, elapsed_s=er.elapsed_s),
+                plateaued=er.plateaued, elapsed_s=er.elapsed_s,
+                interrupted=er.interrupted),
             raw=er)
 
     def _run_scalarized(self, q: Query, engine: str, key,

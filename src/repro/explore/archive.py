@@ -28,6 +28,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import threading
 import warnings
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -290,7 +291,8 @@ def atomic_savez(path, **arrays) -> Path:
     opened explicitly so numpy cannot append a second ``.npz`` suffix."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    tmp = path.with_name(f".{path.name}.tmp{os.getpid()}")
+    tmp = path.with_name(
+        f".{path.name}.tmp{os.getpid()}.{threading.get_ident()}")
     try:
         with open(tmp, "wb") as f:
             np.savez_compressed(f, **arrays)
@@ -386,6 +388,39 @@ class ParetoArchive:
         self.designs = {k: np.asarray(x) for k, x in d.items()}
         if count_evals:
             self.n_evals += int(m)
+        return self
+
+    def merge(self, other: "ParetoArchive") -> "ParetoArchive":
+        """Fold another archive of the SAME problem into this one — the
+        reload-under-lock half of the shared-cache write path: a writer
+        about to ``save`` merges whatever a peer process put on disk
+        since it last loaded, so concurrent refinements union instead of
+        last-``os.replace``-wins.
+
+        Only rows not already present are inserted (exact objective-row
+        bytes; nondominated duplicates would otherwise coexist, since
+        neither dominates the other), with ``count_evals=False`` — the
+        evaluations behind ``other``'s rows were counted by the process
+        that paid for them.  Counters take the element-wise max (both
+        sides descend from a common disk state, so max is the tightest
+        merge that never *under*-reports coverage), ``searched`` is the
+        union."""
+        if set(other.designs) != set(self.designs):
+            raise ValueError("cannot merge archives of different design "
+                             "templates")
+        have = {r.tobytes() for r in self.objs[self.valid]}
+        sel = np.flatnonzero(other.valid)
+        sel = np.asarray([i for i in sel
+                          if other.objs[i].tobytes() not in have], int)
+        if sel.size:
+            self.insert({k: v[sel] for k, v in other.designs.items()},
+                        other.objs[sel], count_evals=False)
+        self.n_evals = max(self.n_evals, other.n_evals)
+        self.budget_covered = max(self.budget_covered, other.budget_covered)
+        self.searched = tuple(sorted(set(self.searched)
+                                     | set(other.searched)))
+        if not self.trace_summary:
+            self.trace_summary = dict(other.trace_summary)
         return self
 
     def front(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
@@ -715,6 +750,61 @@ class ArchiveManifest:
             self.evicted[k] = self.clock    # merged away counts as evicted
             #                                 for the opt-in file GC too
             obs.inc("explore.manifest.dedup_merges")
+        return self
+
+    def merge(self, other: "ArchiveManifest") -> "ArchiveManifest":
+        """Fold another manifest into this one — the reload-under-lock
+        half of the shared-index write path (see ``ParetoArchive.merge``
+        for the race it closes).  Typically ``self`` is the manifest
+        just re-read from disk and ``other`` carries this process's
+        pending mutations; the merge is field-wise so neither side's
+        records are dropped:
+
+        * entries: union by key; a key present on both sides keeps
+          ``self``'s embedding/dims/digest (same problem, same content)
+          and takes the max of the freshness counters and LRU tick, and
+          the union of ``searched`` — counters only ever grow, so max
+          never un-covers a budget a peer already paid for.
+        * trust records: union, deduplicated by full record identity
+          (two processes recording the same outcome from a shared
+          journal must not double-weight the fit).
+        * ``clock``/``evicted``: max tick wins; a key any side currently
+          indexes is not evicted.
+
+        Growth-policy enforcement is the CALLER's job (the writer holds
+        the lock and knows which key to protect)."""
+        for key, e in other.entries.items():
+            mine = self.entries.get(key)
+            if mine is None:
+                self.entries[key] = dict(
+                    e, embedding=np.asarray(e["embedding"], np.float64),
+                    searched=tuple(e["searched"]))
+                continue
+            mine["n_evals"] = max(mine["n_evals"], e["n_evals"])
+            mine["budget_covered"] = max(mine["budget_covered"],
+                                         e["budget_covered"])
+            mine["searched"] = tuple(sorted(set(mine["searched"])
+                                            | set(e["searched"])))
+            mine["last_used"] = max(mine.get("last_used", 0),
+                                    e.get("last_used", 0))
+            if mine.get("digest") is None:
+                mine["digest"] = e.get("digest")
+        seen = {(r["src"], r["dst"], r["lift"], r["delta"].tobytes())
+                for r in self.trust}
+        for r in other.trust:
+            ident = (r["src"], r["dst"], r["lift"], r["delta"].tobytes())
+            if ident not in seen:
+                seen.add(ident)
+                self.trust.append(dict(r))
+        keep = max(int(self.policy.max_trust_records), 1)
+        if len(self.trust) > keep:
+            self.trust = self.trust[-keep:]
+        self.clock = max(self.clock, other.clock)
+        for k, t in other.evicted.items():
+            self.evicted[k] = max(self.evicted.get(k, 0), int(t))
+        for k in list(self.evicted):
+            if k in self.entries:
+                del self.evicted[k]
         return self
 
     # ---- trust table -------------------------------------------------------

@@ -47,8 +47,11 @@ the archive npz.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import json
 import os
+import threading
 import time
 import warnings
 from collections import OrderedDict
@@ -69,8 +72,9 @@ from ..core.optimizer import METRIC_KEYS
 from ..core.workload import (WorkloadGraph, embedding_delta,
                              workload_features)
 from .archive import (MANIFEST_NAME, ArchiveManifest, ConvergenceTrace,
-                      ManifestPolicy, ParetoArchive, objective_pairs,
-                      pareto_front, spec_space_key)
+                      ManifestPolicy, ParetoArchive, atomic_savez,
+                      objective_pairs, pareto_front, spec_space_key)
+from .locks import LockTimeout, file_lock, lock_path
 from .nsga import NSGAConfig, make_nsga
 
 # the default archive cache is anchored to the repo root (four levels above
@@ -157,6 +161,66 @@ class BudgetPolicy:
     patience: int = 2
     adaptive: bool = True
     reallocate: bool = True
+
+
+@dataclasses.dataclass
+class PlateauState:
+    """The plateau detector's memory across the scan segments refining
+    ONE archive: the previous segment's archive-projected hypervolume
+    vector and the current below-threshold streak.
+
+    Held per problem *group* (not per ``_refine`` call) so a
+    checkpointed resume continues the streak exactly where the killed
+    run left it, and so the detector's history is an explicit object
+    with an explicit lifetime: ``reset()`` forgets it, and is called
+    when a reallocation top-up grants fresh budget — a topped-up archive
+    must earn a NEW streak before being declared plateaued, never be
+    stopped one segment into its top-up on the strength of pre-top-up
+    stagnation."""
+    last_hv: Optional[np.ndarray] = None
+    streak: int = 0
+
+    def observe(self, hv_now, rel_tol: float, count: bool = True) -> int:
+        """Record one segment's hypervolume vector and return the
+        updated streak.  ``count=False`` records the vector without
+        judging it (the empty-archive case: nothing found yet is
+        stagnation, not convergence — it must never feed the streak,
+        but the NEXT segment still compares against this one)."""
+        hv_now = np.asarray(hv_now, np.float64)
+        if (count and self.last_hv is not None
+                and self.last_hv.shape == hv_now.shape):
+            rel = (hv_now - self.last_hv) / np.maximum(
+                np.abs(self.last_hv), 1e-9)
+            self.streak = self.streak + 1 if np.all(rel < rel_tol) else 0
+        self.last_hv = hv_now
+        return self.streak
+
+    def reset(self) -> "PlateauState":
+        self.last_hv = None
+        self.streak = 0
+        return self
+
+
+class RunControl:
+    """Cooperative stop token for a running submission.  ``stop()``
+    (from any thread) makes the engine break at the NEXT scan-segment
+    boundary: the segment in flight completes, the resume checkpoint
+    stays on disk, and every result of the interrupted submission
+    carries ``interrupted=True`` with ``budget_covered`` NOT bumped — a
+    later ``resume=True`` submission of the same problem picks up from
+    that checkpoint and spends only the residual budget."""
+
+    __slots__ = ("_stop",)
+
+    def __init__(self):
+        self._stop = threading.Event()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    @property
+    def stopped(self) -> bool:
+        return self._stop.is_set()
 
 
 @dataclasses.dataclass
@@ -253,6 +317,10 @@ class ExploreResult:
     #                                 migrated fronts seeded this cold run
     n_transfer_seeds: int = 0       # seed designs injected into the initial
     #                                 population (migrated or balanced_init)
+    interrupted: bool = False       # a RunControl stop (or checkpointed
+    #                                 kill) ended the run before its budget:
+    #                                 the front reflects partial progress
+    #                                 and budget_covered was NOT bumped
 
 
 class ExplorationService:
@@ -291,6 +359,10 @@ class ExplorationService:
         self._neighbor_cache_cap = max(8, 2 * self.transfer_k)
         self._manifest: Optional[ArchiveManifest] = None
         self._manifest_mtime: Optional[int] = None
+        # per-key npz mtime at the last load/save THIS service performed:
+        # a differing disk mtime at save time means a peer process wrote
+        # the archive since, and the locked save merges before replacing
+        self._archive_sync: Dict[str, Optional[int]] = {}
 
     def _manifest_stat(self) -> Optional[int]:
         try:
@@ -353,12 +425,75 @@ class ExplorationService:
             arc = ParetoArchive(self.capacity, template,
                                 n_obj=len(METRIC_KEYS),
                                 obj_keys=METRIC_KEYS)
+        else:
+            self._mark_sync(key, p)
         self._archives[key] = arc
         return arc
 
+    def _mark_sync(self, key: str, p: Path) -> None:
+        try:
+            self._archive_sync[key] = p.stat().st_mtime_ns
+        except OSError:
+            self._archive_sync.pop(key, None)
+
+    def _merge_disk(self, key: str, arc: ParetoArchive, p: Path) -> None:
+        """Fold a peer process's on-disk archive state into ``arc`` when
+        the npz changed since this service last synced it.  Unreadable
+        peer state is skipped with a warning — a cache merge must never
+        fail the query riding on it."""
+        try:
+            mt = p.stat().st_mtime_ns
+        except OSError:
+            return
+        if mt == self._archive_sync.get(key):
+            return
+        try:
+            arc.merge(ParetoArchive.load(p))
+            self._archive_sync[key] = mt
+            obs.inc("explore.archive.merges")
+        except Exception as e:
+            warnings.warn(f"could not merge peer archive state {p}: {e}")
+
     def save(self, key: str):
-        if key in self._archives:
-            self._archives[key].save(self._path(key))
+        """Persist one archive, lock → reload → merge → replace: under
+        the per-archive file lock, anything a peer process put on disk
+        since this service last synced is merged in before the atomic
+        replace, so concurrent refinements of one problem union instead
+        of last-``os.replace``-wins.  A lock timeout degrades to the
+        historic unmerged save with a warning — a wedged peer must never
+        fail the query whose results are being persisted."""
+        arc = self._archives.get(key)
+        if arc is None:
+            return
+        p = self._path(key)
+        try:
+            with file_lock(lock_path(p)):
+                self._merge_disk(key, arc, p)
+                arc.save(p)
+                self._mark_sync(key, p)
+        except LockTimeout as e:
+            warnings.warn(f"archive lock busy for {key} ({e}); "
+                          f"saving without peer merge")
+            arc.save(p)
+            self._mark_sync(key, p)
+
+    def refresh_archive(self, spec: SystemSpec, space: DesignSpace,
+                        key: Optional[str] = None) -> ParetoArchive:
+        """The freshest known archive for one problem: the in-memory
+        copy merged with whatever peer processes have put on disk since
+        this service last synced it.  The overload/degradation path
+        serves (possibly stale) fronts straight from here, spending zero
+        evaluations — fresh enough beats perfectly fresh when the
+        alternative is an unbounded queue."""
+        key = key or self.problem_key(spec, space)
+        arc = self.archive_for(spec, space, key=key)
+        self._merge_disk(key, arc, self._path(key))
+        return arc
+
+    def _ckpt_path(self, key: str) -> Path:
+        """Where a resumable submission checkpoints mid-run state (one
+        atomic npz beside the archive; deleted on normal completion)."""
+        return self.cache_dir / f"{key}.ckpt.npz"
 
     # ---- the query API -----------------------------------------------------
     def explore(self, graph: WorkloadGraph,
@@ -398,7 +533,9 @@ class ExplorationService:
         return [r.raw for r in Session(service=self).submit(qs, key=key)]
 
     def run_queries(self, queries: Sequence[ExploreQuery], key=None,
-                    on_segment=None) -> List[ExploreResult]:
+                    on_segment=None, resume: bool = False,
+                    control: Optional[RunControl] = None
+                    ) -> List[ExploreResult]:
         """The NSGA engine backend: answer a batch of queries, merging
         same-problem queries into one vmapped NSGA run (union objectives,
         max budget).  This is the execution path behind
@@ -416,7 +553,19 @@ class ExplorationService:
         the segment finishes — the dashboard/async-serving hook.  Callback
         failures are warned about (with phase and segment index), counted
         on the ``obs.on_segment_errors`` counter, and journaled as
-        ``callback_error`` records — never fatal to the query."""
+        ``callback_error`` records — never fatal to the query.
+
+        ``resume=True`` makes every cold group checkpoint its mid-run
+        state after each segment (one atomic npz beside the archive) and
+        restore from a matching checkpoint on entry: a killed run
+        re-submitted with the same queries and ``key`` replays from the
+        last completed segment, spends only the residual budget, and
+        lands on the bit-identical final front (the PRNG chain folds the
+        segment index, so segment ``s`` draws the same keys whichever
+        attempt runs it).  ``control`` (a ``RunControl``) requests a
+        cooperative stop at the next segment boundary — interrupted
+        results carry ``interrupted=True`` and do NOT mark the budget
+        covered."""
         key = jax.random.PRNGKey(0) if key is None else key
         # group by canonical problem hash
         groups: Dict[str, Dict] = {}
@@ -435,11 +584,13 @@ class ExplorationService:
                       groups=len(groups)):
             for i, (ck, g) in enumerate(groups.items()):
                 self._refine_group(ck, g, jax.random.fold_in(key, i),
-                                   on_segment=on_segment, seq=seq)
+                                   on_segment=on_segment, seq=seq,
+                                   resume=resume, control=control)
             if self.policy.reallocate:
                 self._reallocate(groups,
                                  jax.random.fold_in(key, len(groups)),
-                                 on_segment=on_segment, seq=seq)
+                                 on_segment=on_segment, seq=seq,
+                                 control=control)
 
         group_results = {ck: self._project_group(ck, g)
                          for ck, g in groups.items()}
@@ -491,7 +642,8 @@ class ExplorationService:
 
     # ---- one problem group -------------------------------------------------
     def _refine_group(self, ck: str, g: Dict, key, on_segment=None,
-                      seq=None) -> None:
+                      seq=None, resume: bool = False,
+                      control: Optional[RunControl] = None) -> None:
         """Phase 1: spend (or bank) the group's own budget.  Mutates ``g``
         with the run's accounting; fronts are projected later, after any
         cross-group budget reallocation topped the archive up."""
@@ -505,7 +657,8 @@ class ExplorationService:
         warm = self.warm_verdict(arc, union, budget)
         obs.inc("explore.cache.hit" if warm else "explore.cache.miss")
         g.update(warm=warm, n_run=0, trace=None, plateaued=False,
-                 banked=0, realloc=0, transferred_from=(), n_seeds=0)
+                 banked=0, realloc=0, transferred_from=(), n_seeds=0,
+                 interrupted=False, plateau=PlateauState())
         if warm:
             if ck not in self.manifest.entries:
                 self._update_manifest(ck, g)     # backfill pre-manifest
@@ -528,22 +681,28 @@ class ExplorationService:
                 g["transferred_from"] = srcs
                 g["n_seeds"] = (int(next(iter(seeds.values())).shape[0])
                                 if seeds else 0)
-            n_run, trace, plateaued, banked = self._refine(
+            n_run, trace, plateaued, banked, interrupted = self._refine(
                 arc, g["spec"], g["space"], union, budget, key, seeds=seeds,
                 on_segment=self._segment_cb(on_segment, ck, "refine",
-                                            seq=seq))
+                                            seq=seq),
+                plateau=g["plateau"], control=control,
+                checkpoint=self._ckpt_path(ck) if resume else None)
             arc.searched = tuple(k for k in METRIC_KEYS
                                  if k in arc.searched or k in union)
-            arc.budget_covered = max(arc.budget_covered, budget)
+            if not interrupted:
+                # an interrupted run must NOT mark the budget covered —
+                # the resumed attempt still owes the residual segments
+                arc.budget_covered = max(arc.budget_covered, budget)
             obs.inc("explore.evals.spent", n_run)
             if banked:
                 obs.inc("explore.evals.banked", banked)
                 self.ledger[ck] = self.ledger.get(ck, 0) + banked
             g.update(n_run=n_run, trace=trace, plateaued=plateaued,
-                     banked=banked)
+                     banked=banked, interrupted=interrupted)
             sp.set(n_run=n_run, plateaued=plateaued, banked=banked,
-                   n_seeds=g["n_seeds"])
-            arc.trace_summary = trace.summary()
+                   n_seeds=g["n_seeds"], interrupted=interrupted)
+            if trace is not None:       # a stop before the first segment
+                arc.trace_summary = trace.summary()     # leaves no trace
             self.save(ck)
             m = self.manifest           # ONE snapshot: the trust records
             #                             land in the same object the
@@ -594,11 +753,18 @@ class ExplorationService:
     def _update_manifest(self, ck: str, g: Dict,
                          m: Optional[ArchiveManifest] = None) -> None:
         """Refresh the cross-spec index entry for one problem (embedding,
-        freshness counters, migration digest) and persist it atomically.
-        Works on the caller's manifest snapshot when given, so a
-        mid-operation mtime reload can't drop sibling mutations (trust
-        records) before the save.  Index maintenance must never fail a
-        query."""
+        freshness counters, migration digest) and persist it, lock →
+        reload → merge → replace.  Works on the caller's manifest
+        snapshot when given, so a mid-operation mtime reload can't drop
+        sibling mutations (trust records) before the save.
+
+        The commit itself runs under the manifest's file lock: when the
+        file's mtime moved past the state this snapshot descends from, a
+        peer process committed in between — the snapshot is MERGED into
+        a fresh read of the disk state instead of replacing it, closing
+        the lost-update race where the slower of two writers silently
+        dropped the faster one's index entries and trust records.  Index
+        maintenance must never fail a query."""
         arc, spec = g["arc"], g["spec"]
         try:
             m = m if m is not None else self.manifest
@@ -608,10 +774,30 @@ class ExplorationService:
                 n_evals=arc.n_evals, budget_covered=arc.budget_covered,
                 searched=arc.searched,
                 digest=space_digest(g["space"]).to_json_dict())
-            m.reap_evicted(self.cache_dir)   # opt-in archive-file GC
-            m.save()
-            self._manifest = m          # what was just saved IS current
-            self._manifest_mtime = self._manifest_stat()
+            path = self.cache_dir / MANIFEST_NAME
+            with file_lock(lock_path(path)):
+                if self._manifest_stat() != self._manifest_mtime:
+                    disk = ArchiveManifest.load(
+                        path, policy=self.manifest_policy)
+                    disk.merge(m)
+                    disk.enforce(protect=(ck,))
+                    m = disk
+                    obs.inc("explore.manifest.merges")
+                m.reap_evicted(self.cache_dir)   # opt-in archive-file GC
+                m.save()
+                self._manifest = m      # what was just saved IS current
+                self._manifest_mtime = self._manifest_stat()
+        except LockTimeout as e:        # wedged peer: the historic
+            #                             unmerged save beats losing OUR
+            #                             records too
+            warnings.warn(f"manifest lock busy ({e}); saving unmerged")
+            try:
+                m.save()
+                self._manifest = m
+                self._manifest_mtime = self._manifest_stat()
+            except Exception as e2:
+                warnings.warn(f"explore manifest update failed for "
+                              f"{ck}: {e2}")
         except Exception as e:
             warnings.warn(f"explore manifest update failed for {ck}: {e}")
 
@@ -749,30 +935,42 @@ class ExplorationService:
                  for k2 in seeds[0]}, tuple(srcs))
 
     def _reallocate(self, groups: Dict[str, Dict], key,
-                    on_segment=None, seq=None) -> None:
+                    on_segment=None, seq=None,
+                    control: Optional[RunControl] = None) -> None:
         """Phase 2: spend the ledger on this batch's under-explored
         archives — groups that ran to budget exhaustion WITHOUT plateauing
         (their front was still improving), lowest eval-count first.  Spent
         credit is drained FIFO from the ledger; credit no group can use
-        stays banked for future batches."""
+        stays banked for future batches.  Interrupted groups take no
+        top-up (their own budget is still owed) and a stopped control
+        token ends the phase at the next boundary."""
         pool = sum(self.ledger.values())
         takers = sorted(
             ((ck, g) for ck, g in groups.items()
-             if not g["warm"] and g["n_run"] and not g["plateaued"]),
+             if not g["warm"] and g["n_run"] and not g["plateaued"]
+             and not g["interrupted"]),
             key=lambda item: item[1]["arc"].n_evals)
         for i, (ck, g) in enumerate(takers):
+            if control is not None and control.stopped:
+                break
             if pool < 8:                 # below the smallest runnable pop
                 break
             arc = g["arc"]
             t0 = time.perf_counter()
+            # a top-up is FRESH budget: the plateau streak the group's own
+            # refinement accumulated must not carry into the realloc
+            # segments, or a topped-up archive gets declared plateaued one
+            # segment after receiving credit it never got to spend
+            g["plateau"].reset()
             # quantize_down caps the spend at the available credit — the
             # ledger must never be overdrawn by pow2 rounding
             with obs.span("explore.reallocate", key=ck, pool=pool) as sp:
-                n_run, trace, plateaued, _ = self._refine(
+                n_run, trace, plateaued, _, interrupted = self._refine(
                     arc, g["spec"], g["space"], g["union"], pool,
                     jax.random.fold_in(key, i), quantize_down=True,
                     on_segment=self._segment_cb(on_segment, ck, "realloc",
-                                                seq=seq))
+                                                seq=seq),
+                    plateau=g["plateau"], control=control)
                 sp.set(n_run=n_run)
             obs.inc("explore.evals.realloc", n_run)
             pool -= n_run                # only what was actually spent
@@ -781,9 +979,12 @@ class ExplorationService:
             g["n_run"] += n_run
             g["realloc"] += n_run
             g["plateaued"] = plateaued
-            g["trace"] = (g["trace"].extend(trace)
-                          if g["trace"] is not None else trace)
-            arc.trace_summary = g["trace"].summary()
+            g["interrupted"] = g["interrupted"] or interrupted
+            if trace is not None:
+                g["trace"] = (g["trace"].extend(trace)
+                              if g["trace"] is not None else trace)
+            if g["trace"] is not None:
+                arc.trace_summary = g["trace"].summary()
             self.save(ck)
             self._update_manifest(ck, g)
 
@@ -819,7 +1020,8 @@ class ExplorationService:
                 trace=g["trace"], plateaued=g["plateaued"],
                 n_evals_banked=g["banked"], n_evals_realloc=g["realloc"],
                 transferred_from=g["transferred_from"],
-                n_transfer_seeds=g["n_seeds"]))
+                n_transfer_seeds=g["n_seeds"],
+                interrupted=g["interrupted"]))
         return results
 
     def _effective_pop(self, budget: int, quantize_down: bool = False
@@ -837,11 +1039,133 @@ class ExplorationService:
             pop = min(pop, max(8, p))
         return pop
 
+    def _ckpt_signature(self, objectives: Tuple[str, ...], budget: int,
+                        pop: int, generations: int, chunk: int, key,
+                        seeds: Optional[Dict]) -> str:
+        """Identity of one deterministic refinement: everything that
+        fixes the segment-by-segment PRNG/compute chain.  A checkpoint
+        written under a different signature answers a DIFFERENT run and
+        is ignored — resuming must never splice two unequal runs."""
+        h = hashlib.sha256()
+        h.update(repr((tuple(objectives), int(budget), int(pop),
+                       int(generations), int(chunk), int(self.capacity),
+                       repr(self.nsga),
+                       repr(self.tech or DEFAULT_TECH))).encode())
+        h.update(np.asarray(key).tobytes())
+        if seeds is not None:
+            for k in sorted(seeds):
+                h.update(k.encode())
+                h.update(np.asarray(seeds[k]).tobytes())
+        return h.hexdigest()[:16]
+
+    @staticmethod
+    def _save_ckpt(path, sig: str, s_next: int, spent_g: int,
+                   arc: ParetoArchive, filler: Dict,
+                   trace: ConvergenceTrace, st: PlateauState) -> None:
+        """One atomic npz holding a CONSISTENT mid-run snapshot: the
+        archive state after segment ``s_next - 1``'s insert, the evolving
+        population that segment produced, the accumulated trace, and the
+        plateau detector's memory.  Written via ``atomic_savez``, so a
+        kill mid-checkpoint leaves the previous segment's snapshot — the
+        resume replays at most one extra segment, never sees a torn one.
+        Checkpoint failure is a warning: losing resumability must not
+        fail the run being protected."""
+        try:
+            meta = dict(
+                sig=sig, s_next=int(s_next), spent_g=int(spent_g),
+                streak=int(st.streak),
+                last_hv=([float(v) for v in st.last_hv]
+                         if st.last_hv is not None else None),
+                arc=dict(n_evals=arc.n_evals,
+                         budget_covered=arc.budget_covered,
+                         searched=list(arc.searched)),
+                trace=dict(objectives=list(trace.objectives),
+                           pairs=[list(p) for p in trace.pairs],
+                           has_archive_hv=trace.archive_hv is not None,
+                           has_hv_gen=trace.hv_gen is not None))
+            arrays = dict(
+                objs=arc.objs, valid=arc.valid,
+                t_front_size=np.asarray(trace.front_size),
+                t_hypervolume=np.asarray(trace.hypervolume),
+                t_best=np.asarray(trace.best),
+                t_feasible_frac=np.asarray(trace.feasible_frac),
+                t_n_evals=np.asarray(trace.n_evals))
+            if trace.archive_hv is not None:
+                arrays["t_archive_hv"] = np.asarray(trace.archive_hv)
+            if trace.hv_gen is not None:
+                arrays["t_hv_gen"] = np.asarray(trace.hv_gen)
+            arrays.update({f"d_{k}": np.asarray(v)
+                           for k, v in arc.designs.items()})
+            arrays.update({f"f_{k}": np.asarray(v)
+                           for k, v in filler.items()})
+            with obs.span("explore.checkpoint", segment=int(s_next) - 1):
+                atomic_savez(path, __meta=np.frombuffer(
+                    json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+        except Exception as e:
+            warnings.warn(f"resume checkpoint write failed ({path}): {e}")
+
+    @staticmethod
+    def _load_ckpt(path, sig: str, arc: ParetoArchive, st: PlateauState
+                   ) -> Optional[Tuple[int, int, Dict, ConvergenceTrace]]:
+        """Restore a mid-run snapshot into ``arc``/``st`` if ``path``
+        holds a checkpoint of THIS run (signature match, compatible
+        shapes).  Returns ``(s_next, spent_g, filler, trace)`` or
+        ``None`` (no/foreign/damaged checkpoint → start from scratch,
+        never fatal)."""
+        path = Path(path)
+        if not path.exists():
+            return None
+        try:
+            with np.load(path) as z:
+                meta = json.loads(bytes(z["__meta"]).decode())
+                if meta["sig"] != sig:
+                    return None
+                objs, valid = z["objs"], z["valid"]
+                designs = {k[2:]: z[k].copy() for k in z.files
+                           if k.startswith("d_")}
+                if (objs.shape != arc.objs.shape
+                        or set(designs) != set(arc.designs)):
+                    return None
+                filler = {k[2:]: z[k].copy() for k in z.files
+                          if k.startswith("f_")}
+                tm = meta["trace"]
+                trace = ConvergenceTrace(
+                    objectives=tuple(tm["objectives"]),
+                    pairs=tuple(tuple(p) for p in tm["pairs"]),
+                    front_size=z["t_front_size"].copy(),
+                    hypervolume=z["t_hypervolume"].copy(),
+                    best=z["t_best"].copy(),
+                    feasible_frac=z["t_feasible_frac"].copy(),
+                    n_evals=z["t_n_evals"].copy(),
+                    archive_hv=(z["t_archive_hv"].copy()
+                                if tm["has_archive_hv"] else None),
+                    hv_gen=(z["t_hv_gen"].copy()
+                            if tm["has_hv_gen"] else None))
+            arc.objs = objs.copy()
+            arc.valid = valid.copy()
+            arc.designs = designs
+            arc.n_evals = int(meta["arc"]["n_evals"])
+            arc.budget_covered = int(meta["arc"]["budget_covered"])
+            arc.searched = tuple(meta["arc"]["searched"])
+            st.streak = int(meta["streak"])
+            st.last_hv = (np.asarray(meta["last_hv"], np.float64)
+                          if meta["last_hv"] is not None else None)
+            obs.inc("explore.resume.restored")
+            return int(meta["s_next"]), int(meta["spent_g"]), filler, trace
+        except Exception as e:
+            warnings.warn(f"discarding unreadable resume checkpoint "
+                          f"{path}: {e}")
+            return None
+
     def _refine(self, arc: ParetoArchive, spec: SystemSpec,
                 space: DesignSpace, objectives: Tuple[str, ...],
                 budget: int, key, quantize_down: bool = False,
-                seeds: Optional[Dict] = None, on_segment=None
-                ) -> Tuple[int, ConvergenceTrace, bool, int]:
+                seeds: Optional[Dict] = None, on_segment=None,
+                plateau: Optional[PlateauState] = None,
+                control: Optional[RunControl] = None,
+                checkpoint=None
+                ) -> Tuple[int, Optional[ConvergenceTrace], bool, int,
+                           bool]:
         """Spend up to ~``budget`` evaluations improving the archive:
         warm-start the population from the cached front, evolve in scan
         segments, re-insert every evaluation, stop early on plateau.
@@ -854,12 +1178,21 @@ class ExplorationService:
         budget; the service's ``nsga`` config supplies the population
         ceiling and variation knobs.
 
-        Returns ``(n_run, trace, plateaued, banked)``: evaluations spent,
-        the concatenated per-generation ``ConvergenceTrace`` (with one
-        archive-projected hypervolume row per segment), whether the
-        hypervolume plateau stopped the run early, and the evaluations of
-        the *requested* budget that early stop left unspent (never more
-        than the caller offered, however the scan was quantized).
+        Returns ``(n_run, trace, plateaued, banked, interrupted)``:
+        evaluations spent by THIS attempt (a resumed run reports only
+        its residual spend; the archive's counters carry the total), the
+        concatenated per-generation ``ConvergenceTrace`` spanning every
+        attempt (with one archive-projected hypervolume row per
+        segment; ``None`` if stopped before any segment ran), whether
+        the hypervolume plateau stopped the run early, the evaluations
+        of the *requested* budget that early stop left unspent (never
+        more than the caller offered, however the scan was quantized),
+        and whether a ``control`` stop ended the run before its budget.
+
+        ``plateau`` (a ``PlateauState``) carries the streak detector's
+        memory across attempts of one group; ``checkpoint`` (a path)
+        turns on per-segment crash checkpointing and resume-on-entry;
+        ``control`` is polled at each segment boundary.
 
         ``quantize_down`` floors instead of ceils the pow2 generation
         quantization, guaranteeing the run never spends more than
@@ -920,10 +1253,21 @@ class ExplorationService:
 
         filler = jax.vmap(lambda k: random_design(k, space))(
             jax.random.split(k_init, pop))
+        st = plateau if plateau is not None else PlateauState()
         trace = None
-        hv_hist: List[np.ndarray] = []
-        streak, plateaued, spent_g = 0, False, 0
-        for s in range(n_seg):
+        plateaued, interrupted, spent_g = False, False, 0
+        s0, spent0, sig = 0, 0, None    # spent0: chunks paid for by a
+        #                                 killed earlier attempt
+        if checkpoint is not None:
+            sig = self._ckpt_signature(objectives, budget, pop,
+                                       generations, chunk, key, seeds)
+            rest = self._load_ckpt(checkpoint, sig, arc, st)
+            if rest is not None:
+                s0, spent0, filler, trace = rest
+        for s in range(s0, n_seg):
+            if control is not None and control.stopped:
+                interrupted = True      # the checkpoint (if any) stays:
+                break                   # a resume picks up right here
             t_seg = time.perf_counter()
             # first call of this scan variant pays XLA lowering — attribute
             # it separately so plan-vs-actual tables and the segment-time
@@ -960,24 +1304,33 @@ class ExplorationService:
                 #                            incremental trace slice
             # ---- plateau check on the archive-projected hypervolume ----
             # an empty archive means NOTHING has been found yet — that is
-            # stagnation, not convergence, and must never stop the search
-            if policy.adaptive and hv_pairs and len(hv_hist) and len(arc):
-                rel = (hv_now - hv_hist[-1]) / np.maximum(
-                    np.abs(hv_hist[-1]), 1e-9)
-                streak = streak + 1 if np.all(rel < policy.plateau_rel) \
-                    else 0
+            # stagnation, not convergence, and must never feed the streak
+            # (count=False records the vector without judging it)
+            if policy.adaptive and hv_pairs:
+                streak = st.observe(hv_now, policy.plateau_rel,
+                                    count=bool(len(arc)))
                 if streak >= policy.patience and s + 1 < n_seg:
                     plateaued = True
                     obs.inc("explore.plateau_stops")
-                    hv_hist.append(hv_now)
                     break
-            hv_hist.append(hv_now)
+            if checkpoint is not None:  # AFTER the plateau observation:
+                #                         the snapshot must carry this
+                #                         segment's hv as the comparison
+                #                         base, or a resume re-judges the
+                #                         seam against a stale vector
+                self._save_ckpt(checkpoint, sig, s + 1, spent0 + spent_g,
+                                arc, filler, trace, st)
         n_run = spent_g * pop
         # the ledger may only be fed from budget the CALLER offered and
-        # this run left unspent — the pow2 quantization headroom above the
-        # requested budget is not real credit
-        banked = max(0, budget - n_run) if plateaued else 0
-        return n_run, trace, plateaued, banked
+        # the run — ALL attempts of it — left unspent: the pow2
+        # quantization headroom above the requested budget is not real
+        # credit, and a resumed attempt's own spend understates the total
+        banked = max(0, budget - (spent0 + spent_g) * pop) \
+            if plateaued else 0
+        if checkpoint is not None and not interrupted:
+            Path(checkpoint).unlink(missing_ok=True)    # run complete:
+            #                                 nothing left to resume
+        return n_run, trace, plateaued, banked, interrupted
 
 
 # ---------------------------------------------------------------------------

@@ -25,13 +25,14 @@ from .journal import (JOURNAL_ENV, Journal, default_journal,  # noqa: F401
 from .metrics import (REGISTRY, Counter, Gauge, Histogram,  # noqa: F401
                       MetricsRegistry)
 from .trace import (NOOP_SPAN, Span, active, add_sink,  # noqa: F401
-                    disable, emit, enable, enabled, gauge, inc, observe,
-                    remove_sink, sink_attached, span)
+                    current_run, disable, emit, enable, enabled, gauge,
+                    inc, observe, remove_sink, run_context, sink_attached,
+                    span)
 
 __all__ = [
     "JOURNAL_ENV", "Journal", "NOOP_SPAN", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "REGISTRY", "Span", "active", "add_sink",
-    "default_journal", "disable", "emit", "enable", "enabled", "gauge",
-    "inc", "observe", "read_journal", "remove_sink", "replay",
-    "resolve_journal", "sink_attached", "span",
+    "current_run", "default_journal", "disable", "emit", "enable",
+    "enabled", "gauge", "inc", "observe", "read_journal", "remove_sink",
+    "replay", "resolve_journal", "run_context", "sink_attached", "span",
 ]

@@ -128,9 +128,14 @@ class Journal:
 # ---------------------------------------------------------------------------
 def read_journal(path) -> Iterator[Dict]:
     """Yield the records of one journal file (or every ``*.jsonl`` under
-    a directory, in name order).  Unparseable lines — the truncated tail
-    a crash can leave, foreign garbage — are skipped with one summary
-    warning, never fatal: a journal must be readable after any crash."""
+    a directory, in name order).  Unparseable MID-FILE lines — foreign
+    garbage, a corrupted record — are skipped with one summary warning,
+    never fatal: a journal must be readable after any crash.  A partial
+    FINAL line that the file does not terminate with a newline is
+    skipped silently: that is the normal in-flight write of a live
+    appender (or the truncated tail of a crash), not damage — readers
+    polling a journal a writer is still appending to must not warn on
+    every poll."""
     path = Path(path)
     files = sorted(path.glob("*.jsonl")) if path.is_dir() else [path]
     bad = 0
@@ -140,7 +145,11 @@ def read_journal(path) -> Iterator[Dict]:
         except OSError as e:
             warnings.warn(f"unreadable journal {f}: {e}")
             continue
-        for line in text.splitlines():
+        lines = text.split("\n")
+        live_tail = lines.pop() if lines else ""    # "" when the file
+        #                                 ends in \n; else an in-flight
+        #                                 or truncated final line
+        for line in lines:
             line = line.strip()
             if not line:
                 continue
@@ -153,16 +162,44 @@ def read_journal(path) -> Iterator[Dict]:
                 yield rec
             else:
                 bad += 1
+        live_tail = live_tail.strip()
+        if live_tail:                   # salvage a complete-but-unflushed
+            try:                        # record; else drop it silently
+                rec = json.loads(live_tail)
+                if isinstance(rec, dict):
+                    yield rec
+            except json.JSONDecodeError:
+                pass
     if bad:
         warnings.warn(f"journal {path}: skipped {bad} unparseable "
-                      f"line(s) (truncated tail?)")
+                      f"line(s)")
+
+
+def _replay_slot() -> Dict:
+    return dict(segments=0, segments_by_phase={}, n_evals=0,
+                final_hv=None, hv_path=[], results=[], plans=[],
+                planned_segments=0, elapsed_s=0.0)
 
 
 def replay(records: Union[Sequence[Dict], Iterator[Dict]]) -> Dict[str, Dict]:
     """Fold a record stream into per-key run summaries:
 
     ``{key: {segments, segments_by_phase, n_evals, final_hv, hv_path,
-    results, planned_segments, plans, elapsed_s}}``
+    results, planned_segments, plans, elapsed_s, runs}}``
+
+    Records are PARTITIONED by the ``run`` stamp each submission's
+    ``obs.run_context`` put on them (records without one share a single
+    legacy partition), not by record order: overlapping submissions
+    interleave their records in a shared fleet journal, so order-based
+    attribution would splice one run's segments into another's.  Each
+    partition is summarized independently under ``runs[run_id]``; the
+    per-key top level aggregates them — counters sum, ``results`` /
+    ``plans`` concatenate (partition-ordered), while ``final_hv`` /
+    ``hv_path`` come from the run with the LATEST record (a hypervolume
+    trajectory only means something within one run; summing two runs'
+    paths would fabricate a trajectory nobody searched).  With a single
+    run in the journal the aggregate equals the partition, so
+    single-submission consumers are unchanged.
 
     ``segments`` counts every segment record of the key (all phases);
     ``final_hv`` is the first column of the last segment's
@@ -170,20 +207,26 @@ def replay(records: Union[Sequence[Dict], Iterator[Dict]]) -> Dict[str, Dict]:
     monitors and ``ConvergenceTrace.archive_hv`` carries in memory) —
     the invariant ``bench_obs`` replays against the in-memory result."""
     out: Dict[str, Dict] = {}
+    last_t: Dict[str, Dict] = {}
 
-    def slot(key: str) -> Dict:
-        return out.setdefault(key, dict(
-            segments=0, segments_by_phase={}, n_evals=0, final_hv=None,
-            hv_path=[], results=[], plans=[], planned_segments=0,
-            elapsed_s=0.0))
+    def slot(key: str, run) -> Dict:
+        k = out.setdefault(key, dict(_replay_slot(), runs={}))
+        if run not in k["runs"]:
+            k["runs"][run] = _replay_slot()
+            last_t.setdefault(key, {})[run] = float("-inf")
+        return k["runs"][run]
 
     for rec in records:
         key = rec.get("key")
         typ = rec.get("type")
         if key is None:
             continue
+        run = rec.get("run")
+        if typ in ("segment", "result", "plan"):
+            s = slot(key, run)
+            last_t[key][run] = max(last_t[key][run],
+                                   float(rec.get("t", 0.0)))
         if typ == "segment":
-            s = slot(key)
             s["segments"] += 1
             ph = rec.get("phase", "refine")
             s["segments_by_phase"][ph] = \
@@ -195,11 +238,27 @@ def replay(records: Union[Sequence[Dict], Iterator[Dict]]) -> Dict[str, Dict]:
                 s["hv_path"].append(float(hv[0]))
                 s["final_hv"] = float(hv[0])
         elif typ == "result":
-            slot(key)["results"].append(rec)
+            s["results"].append(rec)
         elif typ == "plan":
-            s = slot(key)
             s["plans"].append(rec)
             s["planned_segments"] += len(rec.get("segments", ()))
+    for key, k in out.items():
+        for run, s in k["runs"].items():
+            k["segments"] += s["segments"]
+            for ph, n in s["segments_by_phase"].items():
+                k["segments_by_phase"][ph] = \
+                    k["segments_by_phase"].get(ph, 0) + n
+            k["n_evals"] += s["n_evals"]
+            k["elapsed_s"] += s["elapsed_s"]
+            k["planned_segments"] += s["planned_segments"]
+            k["results"].extend(s["results"])
+            k["plans"].extend(s["plans"])
+        with_hv = [r for r, s in k["runs"].items()
+                   if s["final_hv"] is not None]
+        if with_hv:
+            latest = max(with_hv, key=lambda r: last_t[key][r])
+            k["final_hv"] = k["runs"][latest]["final_hv"]
+            k["hv_path"] = list(k["runs"][latest]["hv_path"])
     return out
 
 

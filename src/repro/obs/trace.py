@@ -106,13 +106,46 @@ def sink_attached(sink: Optional[Callable[[Dict], None]]):
                 _SINK_REFS[sink] = n
 
 
+# ---------------------------------------------------------------------------
+# run identity: which submission a record belongs to
+# ---------------------------------------------------------------------------
+def current_run() -> Optional[str]:
+    """The run id records emitted by THIS thread are stamped with, or
+    ``None`` outside any ``run_context``."""
+    return getattr(_TLS, "run", None)
+
+
+@contextlib.contextmanager
+def run_context(run_id: Optional[str]):
+    """Stamp every record this thread emits with ``run=run_id`` for the
+    duration of the block (``None`` is a no-op).  Thread-local, so
+    overlapping submissions sharing one fleet journal each stamp their
+    own records — ``replay()`` partitions on the stamp instead of
+    guessing from record order.  Nests: the innermost context wins
+    (records of a sub-operation belong to the run that issued it)."""
+    if run_id is None:
+        yield
+        return
+    prev = getattr(_TLS, "run", None)
+    _TLS.run = str(run_id)
+    try:
+        yield
+    finally:
+        _TLS.run = prev
+
+
 def emit(record: Dict) -> None:
-    """Fan one record out to every attached sink.  A sink failure is
-    contained (observability must never fail the work it observes): the
-    sink is dropped for the rest of the run and an ``obs.sink_errors``
-    counter records the loss."""
+    """Fan one record out to every attached sink, stamped with the
+    thread's current run id (see ``run_context``) when one is set and
+    the record doesn't carry its own.  A sink failure is contained
+    (observability must never fail the work it observes): the sink is
+    dropped for the rest of the run and an ``obs.sink_errors`` counter
+    records the loss."""
     if not _ENABLED or not _SINKS:
         return
+    run = getattr(_TLS, "run", None)
+    if run is not None and "run" not in record:
+        record = dict(record, run=run)
     for sink in list(_SINKS):
         try:
             sink(record)
@@ -217,6 +250,7 @@ def span(name: str, **attrs):
     return Span(name, attrs)
 
 
-__all__ = ["NOOP_SPAN", "Span", "active", "add_sink", "disable", "emit",
-           "enable", "enabled", "gauge", "inc", "observe", "remove_sink",
-           "sink_attached", "span"]
+__all__ = ["NOOP_SPAN", "Span", "active", "add_sink", "current_run",
+           "disable", "emit", "enable", "enabled", "gauge", "inc",
+           "observe", "remove_sink", "run_context", "sink_attached",
+           "span"]

@@ -8,6 +8,7 @@ and the plan-vs-actual report."""
 
 import json
 import threading
+import warnings
 
 import numpy as np
 import pytest
@@ -214,6 +215,26 @@ def test_read_journal_tolerates_truncated_tail(tmp_path):
         j.write({"type": "b"})
     with open(p, "a") as f:
         f.write('{"type":"c","half')    # the line a crash leaves behind
+    # an unterminated final line is the normal in-flight state of a LIVE
+    # journal (or a crash tail) — skipped silently, so a reader polling
+    # a journal under active append doesn't warn on every poll
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        recs = list(obs.read_journal(p))
+    assert [r["type"] for r in recs] == ["a", "b"]
+    # a COMPLETE final record the writer just hasn't newline-terminated
+    # is salvaged, not dropped
+    p2 = tmp_path / "j2.jsonl"
+    with obs.Journal(p2) as j:
+        j.write({"type": "a"})
+    with open(p2, "a") as f:
+        f.write('{"type":"c"}')         # complete JSON, no trailing newline
+    assert [r["type"] for r in obs.read_journal(p2)] == ["a", "c"]
+
+
+def test_read_journal_warns_on_midfile_garbage(tmp_path):
+    p = tmp_path / "j.jsonl"
+    p.write_text('{"type":"a"}\nnot json at all\n{"type":"b"}\n')
     with pytest.warns(UserWarning, match="unparseable"):
         recs = list(obs.read_journal(p))
     assert [r["type"] for r in recs] == ["a", "b"]

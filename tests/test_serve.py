@@ -1,0 +1,625 @@
+"""The async serving layer (``repro.serve``) and the shared-cache
+concurrency fixes it rides on: durable ``JobStore`` claims and crash
+recovery, query payload round-trips, ``submit_async`` job handles
+(poll / await / cancel / streamed events), overload degradation to
+possibly-stale cached fronts, cooperative interrupt + checkpointed
+resume (bit-identical final front, residual-only spend — including a
+real SIGKILL of a worker process), the manifest lost-update regression
+(lock → reload → merge → replace), archive peer-merge on save, plateau
+streak semantics across reallocation top-ups, and run-partitioned
+journal replay under overlapping submissions."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro import obs
+from repro.api import Problem, Query, Session
+from repro.core.workload import workload_features
+from repro.explore.archive import (MANIFEST_NAME, ArchiveManifest,
+                                   ParetoArchive)
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import (BudgetPolicy, ExplorationService,
+                                   PlateauState, RunControl)
+from repro.serve import (CANCELLED, DONE, PENDING, RUNNING,
+                         CancelledError, Executor, JobHandle, JobStore,
+                         graph_from_json, graph_to_json,
+                         query_from_payload, query_to_payload, run_job)
+
+TINY = dict(max_shape=(16, 16, 4, 4, 1, 2))
+OBJ = ("latency_ns", "cost_usd")
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _graph(k=64):
+    return C.WorkloadGraph([C.matmul("mm", 512, 512, k)], [])
+
+
+def _problem(k=64):
+    return Problem(_graph(k), objectives=OBJ, ch_max=2, space_kwargs=TINY)
+
+
+def _session(tmp_path, **policy_kw):
+    policy_kw.setdefault("chunk_generations", 1)
+    policy_kw.setdefault("adaptive", False)
+    return Session(cache_dir=tmp_path,
+                   nsga=NSGAConfig(pop=8, generations=2),
+                   policy=BudgetPolicy(**policy_kw))
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# JobStore: durable records, lock-arbitrated claims, crash recovery
+# ---------------------------------------------------------------------------
+def test_jobstore_lifecycle_and_claim_exclusivity(tmp_path):
+    store = JobStore(tmp_path / "jobs")
+    rec = store.create({"budget": 64}, "pkey", "ckey", seed=7)
+    assert rec.state == PENDING and rec.seed == 7 and rec.attempts == 0
+    got = store.get(rec.job_id)
+    assert got.payload == {"budget": 64} and got.problem_key == "pkey"
+    assert [r.job_id for r in store.pending()] == [rec.job_id]
+
+    claimed = store.claim(rec.job_id)
+    assert claimed.state == RUNNING and claimed.owner_pid == os.getpid()
+    assert claimed.attempts == 1
+    # a second claim of a RUNNING job loses
+    assert store.claim(rec.job_id) is None
+    assert store.pending() == []
+
+    store.update(claimed, state=DONE, owner_pid=None,
+                 n_evals_attempts=[64])
+    final = store.get(rec.job_id)
+    assert final.state == DONE and final.n_evals_attempts == [64]
+    assert store.claim(rec.job_id) is None      # terminal stays terminal
+
+
+def test_jobstore_recover_flips_dead_owners_only(tmp_path):
+    store = JobStore(tmp_path / "jobs")
+    dead = store.create({}, "p1", "c1", 0)
+    live = store.create({}, "p2", "c2", 0)
+    # a PID that is certainly dead: a child that already exited
+    child = subprocess.Popen(["true"])
+    child.wait()
+    store.update(store.claim(dead.job_id), owner_pid=child.pid)
+    store.claim(live.job_id)                    # owned by US (alive)
+    recovered = store.recover()
+    assert [r.job_id for r in recovered] == [dead.job_id]
+    assert store.get(dead.job_id).state == PENDING
+    assert store.get(dead.job_id).owner_pid is None
+    assert store.get(live.job_id).state == RUNNING
+
+
+def test_jobstore_tolerates_torn_record(tmp_path):
+    store = JobStore(tmp_path / "jobs")
+    ok = store.create({}, "p", "c", 0)
+    (store.root / "job-deadbeef0000.json").write_text('{"torn":')
+    with pytest.warns(UserWarning, match="unreadable job record"):
+        recs = store.jobs()
+    assert [r.job_id for r in recs] == [ok.job_id]
+
+
+# ---------------------------------------------------------------------------
+# payload round-trip: the job store must rebuild the exact Problem
+# ---------------------------------------------------------------------------
+def test_query_payload_roundtrips_problem_key():
+    q = Query(_problem(), budget=96, engine="nsga", transfer=True)
+    pay = json.loads(json.dumps(query_to_payload(q)))   # through JSON
+    q2 = query_from_payload(pay)
+    assert q2.problem.key() == q.problem.key()
+    assert q2.problem == q.problem
+    assert (q2.budget, q2.engine, q2.transfer) == (96, "nsga", True)
+    # the graph round-trip alone is exact too
+    g2 = graph_from_json(json.loads(json.dumps(graph_to_json(_graph()))))
+    assert Problem(g2, OBJ, 2, TINY).key() == _problem().key()
+
+
+def test_query_payload_rejects_non_durable_options():
+    with pytest.raises(ValueError, match="do not survive"):
+        query_to_payload(Query(_problem(), engine="nsga",
+                               policy=BudgetPolicy()))
+    with pytest.raises(ValueError, match="do not survive"):
+        query_to_payload(Query(_problem(), engine="nsga",
+                               seed_designs=[{"x": 1}]))
+
+
+def test_executor_submit_rejects_opaque_keys_and_engines(tmp_path):
+    sess = _session(tmp_path)
+    ex = Executor(sess, store=tmp_path / "jobs")
+    with pytest.raises(ValueError, match="integer seed"):
+        ex.submit(Query(_problem(), engine="nsga"),
+                  key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="nsga engine"):
+        ex.submit(Query(_problem(), engine="bo_sa", weights=(1.0, 1.0)))
+    ex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# plateau streak semantics (incl. the reallocation-reset regression)
+# ---------------------------------------------------------------------------
+def test_plateau_state_observe_reset_and_count():
+    st = PlateauState()
+    hv = np.array([1.0, 2.0])
+    assert st.observe(hv, 0.01) == 0        # first look: nothing to judge
+    assert st.observe(hv, 0.01) == 1        # flat -> streak grows
+    assert st.observe(hv, 0.01) == 2
+    assert st.observe(hv * 1.5, 0.01) == 0  # improvement resets
+    # count=False records the hv as the next comparison base WITHOUT
+    # judging (the empty-archive segment case)
+    st2 = PlateauState()
+    st2.observe(hv, 0.01)
+    st2.observe(hv, 0.01)
+    assert st2.observe(hv, 0.01, count=False) == 1  # streak untouched
+    assert st2.observe(hv, 0.01) == 2       # judged against recorded hv
+    st2.reset()
+    assert st2.streak == 0 and st2.last_hv is None
+
+
+def test_realloc_topup_gets_fresh_plateau_window():
+    """The regression: a run plateaus (streak == patience), then a
+    reallocation top-up extends it with FRESH budget.  Without the
+    reset, the stale streak made the top-up's very first segment count
+    as 'still plateaued' and the extension stopped instantly even while
+    the front was improving."""
+    from repro.explore.archive import ConvergenceTrace
+    patience = 2
+    st = PlateauState()
+    flat = np.array([5.0])
+    for _ in range(patience + 1):
+        st.observe(flat, 0.01)
+    assert st.streak >= patience            # plateaued: budget banked
+    # the top-up's segments DO improve the archive
+    topup = ConvergenceTrace(
+        objectives=OBJ, pairs=((OBJ[0], OBJ[1]),),
+        front_size=np.array([4, 5, 6]),
+        hypervolume=np.array([[5.0], [5.5], [6.1]]),
+        best=np.zeros(3), feasible_frac=np.ones(3),
+        n_evals=np.array([8, 16, 24]),
+        archive_hv=np.array([[5.0], [5.5], [6.1]]))
+    st.reset()                              # what _reallocate now does
+    for row in topup.archive_hv:
+        streak = st.observe(row, 0.01)
+        assert streak < patience, (
+            "an improving top-up must never read as plateaued")
+
+
+# ---------------------------------------------------------------------------
+# journal: run-partitioned replay + live concurrent reads
+# ---------------------------------------------------------------------------
+def test_replay_partitions_overlapping_runs():
+    recs = [  # two submissions of one problem, records interleaved
+        dict(type="plan", key="k1", run="A", segments=[{}, {}], t=0.0),
+        dict(type="segment", key="k1", run="A", n_evals=8, hv=[10.0],
+             t=1.0),
+        dict(type="segment", key="k1", run="B", n_evals=8, hv=[3.0],
+             t=2.0),
+        dict(type="segment", key="k1", run="A", n_evals=8, hv=[12.0],
+             t=3.0),
+        dict(type="result", key="k1", run="A", t=4.0),
+        dict(type="segment", key="k1", run="B", n_evals=8, hv=[4.0],
+             t=5.0),
+        dict(type="result", key="k1", run="B", t=6.0),
+    ]
+    k = obs.replay(recs)["k1"]
+    # each run's trajectory is its own — record order never splices
+    # run B's segments into run A's hv path
+    assert k["runs"]["A"]["hv_path"] == [10.0, 12.0]
+    assert k["runs"]["B"]["hv_path"] == [3.0, 4.0]
+    assert k["runs"]["A"]["segments"] == 2
+    # aggregates: counters sum, trajectory comes from the latest run
+    assert k["segments"] == 4 and k["n_evals"] == 32
+    assert len(k["results"]) == 2 and k["planned_segments"] == 2
+    assert k["final_hv"] == 4.0 and k["hv_path"] == [3.0, 4.0]
+
+
+def test_replay_without_run_stamps_is_unchanged():
+    recs = [
+        dict(type="segment", key="k1", n_evals=8, hv=[1.0], t=1.0),
+        dict(type="result", key="k1", t=2.0),
+    ]
+    k = obs.replay(recs)["k1"]
+    assert k["segments"] == 1 and k["final_hv"] == 1.0
+    assert list(k["runs"]) == [None]
+
+
+def test_run_context_stamps_records_thread_locally():
+    captured = []
+    obs.add_sink(captured.append)
+    try:
+        with obs.run_context("r1"):
+            assert obs.current_run() == "r1"
+            obs.emit({"type": "x"})
+            with obs.run_context("r2"):     # innermost wins
+                obs.emit({"type": "y"})
+            # a sibling thread without a context stays unstamped
+            t = threading.Thread(target=lambda: obs.emit({"type": "z"}))
+            t.start()
+            t.join()
+        obs.emit({"type": "w"})             # outside: unstamped
+    finally:
+        obs.remove_sink(captured.append)
+    by_type = {r["type"]: r for r in captured}
+    assert by_type["x"]["run"] == "r1"
+    assert by_type["y"]["run"] == "r2"
+    assert "run" not in by_type["z"] and "run" not in by_type["w"]
+
+
+def test_journal_concurrent_writer_reader(tmp_path):
+    """A reader polling a journal under active append sees only whole
+    records and never warns about the writer's in-flight tail."""
+    p = tmp_path / "live.jsonl"
+    j = obs.Journal(p)
+    N = 200
+    def write():
+        for i in range(N):
+            j.write({"type": "seg", "i": i})
+    t = threading.Thread(target=write)
+    t.start()
+    seen = 0
+    deadline = time.monotonic() + 30
+    while seen < N and time.monotonic() < deadline:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            recs = list(obs.read_journal(p)) if p.exists() else []
+        assert all(r["type"] == "seg" for r in recs)
+        # a poll sees a prefix: complete records, in order
+        assert [r["i"] for r in recs] == list(range(len(recs)))
+        seen = len(recs)
+    t.join()
+    j.close()
+    assert seen == N
+
+
+# ---------------------------------------------------------------------------
+# shared-cache writes: the lost-update regressions
+# ---------------------------------------------------------------------------
+def _group_for(svc, k=64):
+    g = _graph(k)
+    spec = C.SystemSpec.build(g, ch_max=2)
+    space = C.DesignSpace(spec, **TINY)
+    key = svc.problem_key(spec, space)
+    arc = svc.archive_for(spec, space, key=key)
+    return key, dict(arc=arc, spec=spec, space=space,
+                     embedding=workload_features(spec.graph))
+
+
+def _insert_row(arc, vals):
+    designs = {k: v[:1] for k, v in arc.designs.items()}
+    arc.insert(designs, np.asarray([vals], np.float64),
+               count_evals=False)
+    arc.n_evals += 8                        # an explicit 8-eval "run"
+
+
+def test_manifest_lost_update_is_fixed(tmp_path):
+    """The headline regression: service 1 snapshots the manifest, then
+    service 2 commits an entry, then service 1 commits ITS entry from
+    the stale snapshot.  The old reload-by-mtime + ``os.replace`` path
+    made service 1's save silently drop service 2's records; the locked
+    commit now merges the snapshot into a fresh read of the disk state
+    before replacing."""
+    s1 = ExplorationService(cache_dir=tmp_path)
+    s2 = ExplorationService(cache_dir=tmp_path)
+    m1 = s1.manifest                        # stale snapshot of record
+    ck2, g2 = _group_for(s2, k=96)
+    s2._update_manifest(ck2, g2)            # peer commits first
+    ck1, g1 = _group_for(s1, k=64)
+    s1._update_manifest(ck1, g1, m=m1)      # commit from the snapshot
+    disk = ArchiveManifest.load(tmp_path / MANIFEST_NAME)
+    assert ck1 in disk.entries, "slower writer lost its own entry"
+    assert ck2 in disk.entries, \
+        "lost update: the slower writer dropped the faster one's entry"
+    # and the slower writer's cached view matches what it saved
+    assert ck1 in s1.manifest.entries and ck2 in s1.manifest.entries
+
+
+def test_archive_save_merges_peer_rows(tmp_path):
+    """Two services refining ONE problem against one cache directory:
+    the second save must union with what the first put on disk, not
+    overwrite it (lock -> reload -> merge -> replace)."""
+    s1 = ExplorationService(cache_dir=tmp_path)
+    s2 = ExplorationService(cache_dir=tmp_path)
+    key, g1 = _group_for(s1)
+    _insert_row(g1["arc"], [1.0, 2.0, 1.0, 1.0])
+    s1.save(key)
+    time.sleep(0.01)                        # distinct mtimes
+    _key2, g2 = _group_for(s2)              # loads s1's row from disk
+    assert _key2 == key and len(g2["arc"]) == 1
+    _insert_row(g2["arc"], [2.0, 1.0, 1.0, 1.0])    # nondominated peer
+    _insert_row(g1["arc"], [0.5, 3.0, 1.0, 1.0])
+    s1.save(key)                            # disk: rows {1, 3}
+    time.sleep(0.01)
+    s2.save(key)                            # must merge, not clobber
+    disk = ParetoArchive.load(s1._path(key))
+    rows = {tuple(r) for r in disk.objs[disk.valid]}
+    assert (1.0, 2.0, 1.0, 1.0) in rows
+    assert (2.0, 1.0, 1.0, 1.0) in rows
+    assert (0.5, 3.0, 1.0, 1.0) in rows, \
+        "lost update: the slower save dropped the faster one's rows"
+    assert disk.n_evals == 16               # max of both ledgers, not sum
+
+
+_CHILD = r"""
+import sys, time
+from pathlib import Path
+import numpy as np
+import repro.core as C
+from repro.core.workload import workload_features
+from repro.explore.service import ExplorationService
+
+cache, go, k_own, row0 = sys.argv[1], sys.argv[2], int(sys.argv[3]), \
+    float(sys.argv[4])
+TINY = dict(max_shape=(16, 16, 4, 4, 1, 2))
+
+def group(svc, k):
+    g = C.WorkloadGraph([C.matmul("mm", 512, 512, k)], [])
+    spec = C.SystemSpec.build(g, ch_max=2)
+    space = C.DesignSpace(spec, **TINY)
+    key = svc.problem_key(spec, space)
+    arc = svc.archive_for(spec, space, key=key)
+    return key, dict(arc=arc, spec=spec, space=space,
+                     embedding=workload_features(spec.graph))
+
+svc = ExplorationService(cache_dir=cache)
+shared_key, shared = group(svc, 64)         # both children share this
+own_key, own = group(svc, k_own)            # unique per child
+designs = {k: v[:1] for k, v in shared["arc"].designs.items()}
+shared["arc"].insert(designs, np.asarray([[row0, 1.0 / row0, 1.0, 1.0]]))
+shared["arc"].n_evals += 8
+Path(go + f".ready.{k_own}").touch()        # signal armed, then block
+while not Path(go).exists():                # on the start barrier so
+    time.sleep(0.005)                       # both processes race
+svc.save(shared_key)                        # race the peer on purpose
+svc._update_manifest(shared_key, shared)
+svc._update_manifest(own_key, own)
+print("OK", shared_key, own_key)
+"""
+
+
+@pytest.mark.slow
+def test_two_processes_race_shared_cache_writes(tmp_path):
+    """The satellite regression test that fails on the old code: two
+    real processes save the same archive and commit manifest entries
+    near-simultaneously (a go-file barrier lines them up).  Every row
+    and every index entry must survive, whichever process writes last."""
+    script = tmp_path / "child.py"
+    script.write_text(_CHILD)
+    cache, go = tmp_path / "cache", tmp_path / "go"
+    procs = [subprocess.Popen(
+        [sys.executable, str(script), str(cache), str(go), str(k), str(r)],
+        env=_env(), stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        text=True) for k, r in ((96, 2.0), (128, 4.0))]
+    deadline = time.monotonic() + 240
+    while not all((tmp_path / f"go.ready.{k}").exists()
+                  for k in (96, 128)):
+        assert time.monotonic() < deadline, "children never got ready"
+        time.sleep(0.05)
+    go.touch()
+    outs = [p.communicate(timeout=300) for p in procs]
+    assert all(p.returncode == 0 for p in procs), outs
+    keys = [out.split()[1:3] for out, _ in outs]
+    shared_key = keys[0][0]
+    assert keys[1][0] == shared_key
+    disk = ParetoArchive.load(cache / f"{shared_key}.npz")
+    rows = {tuple(r) for r in disk.objs[disk.valid]}
+    assert (2.0, 0.5, 1.0, 1.0) in rows and (4.0, 0.25, 1.0, 1.0) in rows
+    m = ArchiveManifest.load(cache / MANIFEST_NAME)
+    for ck in {shared_key, keys[0][1], keys[1][1]}:
+        assert ck in m.entries, f"lost manifest entry {ck}"
+
+
+# ---------------------------------------------------------------------------
+# submit_async: handles, events, overload degradation, cancellation
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_submit_async_matches_sync_bit_for_bit(tmp_path):
+    q = Query(_problem(), budget=64, engine="nsga")
+    sync = _session(tmp_path / "sync").submit(q)            # PRNGKey(0)
+    sess = _session(tmp_path / "async")
+    h = sess.submit_async(q)                                # seed 0
+    evs = list(h.events(timeout=300))
+    r = h.result(timeout=300)
+    assert h.done() and h.state() == DONE
+    assert r.front_objs.tobytes() == sync.front_objs.tobytes()
+    assert r.front_metrics.tobytes() == sync.front_metrics.tobytes()
+    assert r.provenance.n_evals_run == 64
+    # 64 evals / (pop 8 * chunk 1) = 8 streamed segments
+    assert len(evs) == 8
+    assert [e.segment for e in evs] == list(range(8))
+    rec = h.record()
+    assert rec.state == DONE and rec.attempts == 1
+    assert rec.n_evals_attempts == [64]
+    assert rec.problem_key == q.problem.key()
+    sess.executor().shutdown()
+
+
+@pytest.mark.slow
+def test_overload_serves_stale_front_and_banks_refinement(tmp_path):
+    sess = _session(tmp_path)
+    q = Query(_problem(), budget=64, engine="nsga")
+    warmed = sess.submit(q)                 # warm the archive first
+    ex = Executor(sess, store=tmp_path / "jobs", max_workers=1,
+                  max_pending=0)            # always overloaded
+    h = ex.submit(q, deadline_s=0.0)
+    # answered immediately from the cache, zero evaluations spent
+    stale = h.poll()
+    assert stale is not None and stale is h.stale
+    pv = stale.provenance
+    assert pv.stale and pv.from_cache and pv.n_evals_run == 0
+    assert pv.n_evals_banked == 64
+    assert stale.front_objs.tobytes() == warmed.front_objs.tobytes()
+    # the refinement is banked, not dropped: the job is PENDING on disk
+    assert not h.done() and h.state() == PENDING
+    # ... and a later capacity window picks it up
+    handles = ex.resume_pending()
+    assert [x.job_id for x in handles] == [h.job_id]
+    r = handles[0].result(timeout=300)
+    assert handles[0].state() == DONE
+    assert r.provenance.from_cache          # budget was already covered
+    ex.shutdown()
+
+
+@pytest.mark.slow
+def test_overload_cold_problem_queues_anyway(tmp_path):
+    """Degradation needs something to serve: a cold problem (empty
+    archive) is queued past the admission bound rather than answered
+    with nothing."""
+    sess = _session(tmp_path)
+    ex = Executor(sess, store=tmp_path / "jobs", max_workers=1,
+                  max_pending=0)
+    h = ex.submit(Query(_problem(), budget=64, engine="nsga"),
+                  deadline_s=0.0)
+    assert h.stale is None
+    r = h.result(timeout=300)
+    assert h.state() == DONE and r.provenance.n_evals_run == 64
+    ex.shutdown()
+
+
+def test_cancel_pending_job_never_runs(tmp_path):
+    store = JobStore(tmp_path / "jobs")
+    # a banked job: durably recorded, not scheduled anywhere (what the
+    # overload degradation path leaves behind)
+    rec = store.create(query_to_payload(Query(_problem(), engine="nsga",
+                                              budget=64)),
+                       _problem().key(), "ck", 0)
+    h = JobHandle(rec.job_id, store)
+    assert h.cancel() is True
+    assert h.state() == CANCELLED
+    with pytest.raises(CancelledError):
+        h.result(timeout=1)
+    assert store.claim(rec.job_id) is None  # a worker can never win it
+    assert h.cancel() is False              # already terminal
+
+
+def test_cancelled_running_job_keeps_checkpoint_state(tmp_path):
+    """run_job's cancel branch, driven deterministically: the handle's
+    stop token is set before the engine starts, so the run interrupts at
+    the first segment boundary and the store lands on CANCELLED."""
+    sess = _session(tmp_path)
+    store = JobStore(tmp_path / "jobs")
+    q = Query(_problem(), budget=64, engine="nsga")
+    rec = store.create(query_to_payload(q), q.problem.key(),
+                       sess._cache_key(q.problem), 0)
+    h = JobHandle(rec.job_id, store)
+    h._cancelled = True
+    h._control.stop()
+    claimed = store.claim(rec.job_id)
+    run_job(sess, store, claimed, handle=h)
+    assert store.get(rec.job_id).state == CANCELLED
+    with pytest.raises(CancelledError):
+        h.result(timeout=1)
+
+
+# ---------------------------------------------------------------------------
+# crash-resume: cooperative interrupt and a real SIGKILL
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_interrupt_then_resume_is_bit_identical(tmp_path):
+    """Kill a run at a segment boundary (cooperative stop), restart in a
+    FRESH session: the checkpoint restores the last completed segment,
+    only the residual budget is spent, and the final front is
+    bit-identical to an uninterrupted run."""
+    q = Query(_problem(), budget=64, engine="nsga")
+    key = jax.random.PRNGKey(3)
+    r0 = _session(tmp_path / "base").submit(q, key=key)
+
+    sA = _session(tmp_path / "crash")
+    ctl = RunControl()
+    seen = []
+    def stop_after_two(ev):
+        seen.append(ev)
+        if len(seen) == 2:
+            ctl.stop()
+    r1 = sA.submit(q, key=key, resume=True, control=ctl,
+                   on_segment=stop_after_two)
+    assert r1.provenance.interrupted and r1.provenance.n_evals_run == 16
+    ck = sA._cache_key(q.problem)
+    assert (tmp_path / "crash" / f"{ck}.ckpt.npz").exists()
+
+    sB = _session(tmp_path / "crash")       # a new process, effectively
+    r2 = sB.submit(q, key=key, resume=True)
+    assert not r2.provenance.interrupted
+    # residual-only spend: the two attempts sum to the uninterrupted run
+    assert r1.provenance.n_evals_run + r2.provenance.n_evals_run \
+        == r0.provenance.n_evals_run == 64
+    assert r2.front_objs.tobytes() == r0.front_objs.tobytes()
+    assert r2.front_metrics.tobytes() == r0.front_metrics.tobytes()
+    # the checkpoint is consumed by normal completion
+    assert not (tmp_path / "crash" / f"{ck}.ckpt.npz").exists()
+
+
+@pytest.mark.slow
+def test_sigkill_worker_then_restart_resumes(tmp_path):
+    """The e2e crash drill: a real worker process is SIGKILLed
+    mid-segment; a restarted worker recovers the job from the store,
+    restores the checkpoint, spends only the residual budget, and lands
+    on the front an uninterrupted run produces."""
+    q = Query(_problem(), budget=64, engine="nsga")
+    seed = 5
+    r0 = _session(tmp_path / "base").submit(
+        q, key=jax.random.PRNGKey(seed))    # uninterrupted baseline
+
+    cache, store_dir = tmp_path / "cache", tmp_path / "store"
+    sess = _session(cache)                  # same config as the workers
+    ck = sess._cache_key(q.problem)
+    store = JobStore(store_dir)
+    rec = store.create(query_to_payload(q), q.problem.key(), ck, seed)
+
+    worker_cmd = [sys.executable, "-m", "repro.serve.worker",
+                  "--store", str(store_dir), "--cache", str(cache),
+                  "--once", "--pop", "8", "--chunk-generations", "1",
+                  "--no-adaptive"]
+    w1 = subprocess.Popen(worker_cmd + ["--segment-delay", "1.0"],
+                          env=_env(), stdout=subprocess.PIPE,
+                          stderr=subprocess.PIPE, text=True)
+    try:
+        ckpt = cache / f"{ck}.ckpt.npz"
+        deadline = time.monotonic() + 240
+        while not ckpt.exists():            # >= 1 segment checkpointed
+            assert w1.poll() is None, w1.communicate()
+            assert time.monotonic() < deadline, "no checkpoint appeared"
+            time.sleep(0.05)
+        time.sleep(0.3)                     # well inside the delay window
+        w1.send_signal(signal.SIGKILL)
+        w1.wait(timeout=30)
+    finally:
+        if w1.poll() is None:
+            w1.kill()
+    after_kill = store.get(rec.job_id)
+    assert after_kill.state == RUNNING      # the crash left it claimed
+    assert ckpt.exists()
+
+    w2 = subprocess.run(worker_cmd, env=_env(), capture_output=True,
+                        text=True, timeout=400)
+    assert w2.returncode == 0, w2.stderr
+    lines = [json.loads(l) for l in w2.stdout.splitlines() if l]
+    states = {l.get("state") for l in lines}
+    assert "RECOVERED" in states            # dead owner detected
+    done = [l for l in lines if l.get("state") == DONE]
+    assert len(done) == 1 and done[0]["attempts"] == 2
+    # residual-only spend: the restored attempt ran strictly less than
+    # the whole budget
+    assert 0 < done[0]["n_evals_attempts"][-1] < 64
+    # bit-identical final front vs the uninterrupted baseline archive
+    base_ck = ck
+    base = ParetoArchive.load(tmp_path / "base" / f"{base_ck}.npz")
+    resumed = ParetoArchive.load(cache / f"{ck}.npz")
+    assert resumed.objs[resumed.valid].tobytes() \
+        == base.objs[base.valid].tobytes()
+    assert int(resumed.n_evals) == 64       # nothing double-counted
+    assert not ckpt.exists()                # consumed on completion
