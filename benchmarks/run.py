@@ -12,7 +12,7 @@ import sys
 from . import (bench_validation, bench_cost_fig3, bench_comparison,
                bench_codesign, bench_pareto, bench_explore, bench_transfer,
                bench_obs, bench_serve, bench_tt, bench_roofline,
-               bench_autoshard, bench_kernels)
+               bench_autoshard, bench_kernels, bench_scale)
 from .common import QUICK, emit
 
 MODULES = {
@@ -29,6 +29,7 @@ MODULES = {
     "roofline": bench_roofline,        # dry-run roofline table
     "autoshard": bench_autoshard,      # Level-B advisor
     "kernels": bench_kernels,          # kernel micro-table
+    "scale": bench_scale,              # islands, megabatch, dominance kernel
 }
 
 

@@ -72,16 +72,20 @@ def _rand_perm_rows(key, W, levels, L):
     return perms.reshape(W, levels, L).astype(jnp.int32)
 
 
-def random_design(key, space: DesignSpace) -> Dict:
-    """Uniform random design point (the paper's 'Random' baseline)."""
+def random_design(key, space: DesignSpace, nl=None, bounds=None) -> Dict:
+    """Uniform random design point (the paper's 'Random' baseline).
+
+    ``nl``/``bounds`` may be passed as traced arrays (from the workload
+    arrays) so the compiled sampler is workload-independent — same
+    contract as ``mutate``."""
     W, CH, L = space.W, space.CH, MAX_LOOPS
     ks = jax.random.split(key, 10)
     mx = jnp.asarray(space.max_shape, jnp.int32)
     shape = jax.random.randint(ks[0], (W, 6), 1, mx + 1)
-    nl = jnp.asarray(space.n_loops)
+    nl = jnp.asarray(space.n_loops if nl is None else nl)
     spatial = jax.random.randint(ks[1], (W, 6), 0, jnp.maximum(nl, 1)[:, None])
     order = _rand_perm_rows(ks[2], W, 3, L)
-    bounds = jnp.asarray(space.bounds)
+    bounds = jnp.asarray(space.bounds if bounds is None else bounds)
     tmax = jnp.maximum(bounds, 1)
     u = jax.random.uniform(ks[3], (W, 2, L))
     tiling = jnp.maximum(

@@ -55,9 +55,11 @@ from ..core.encoding import DesignSpace
 from ..core.evaluate import SystemSpec
 from ..core.optimizer import METRIC_KEYS, OBJ_EDP
 from ..core.workload import WorkloadGraph, workload_features
+from . import quantize
 from .archive import ConvergenceTrace, pareto_front, spec_space_key
+from .nsga import ISLAND_AXIS, make_nsga
 from .service import (DEFAULT_OBJECTIVES, BudgetPolicy, ExplorationService,
-                      ExploreQuery, ExploreResult, SegmentEvent, _pow2)
+                      ExploreQuery, ExploreResult, SegmentEvent)
 
 ENGINES = ("nsga", "bo_sa", "two_stage", "auto")
 
@@ -163,6 +165,11 @@ class Query:
     policy: Optional[BudgetPolicy] = None
     archive: Optional[object] = None            # ParetoArchive passthrough
     engine_opts: Optional[Dict] = None
+    megabatch: bool = True          # allow this query to fuse with OTHER
+    #                                 problems of equal padded shape into
+    #                                 one compiled megabatch dispatch
+    #                                 (nsga engine; see
+    #                                 BudgetPolicy.megabatch)
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -210,7 +217,15 @@ class Plan:
     (``seed_cap`` bounds the total injection).  A plan is advisory on a
     shared cache — a concurrent service may warm the archive between
     ``plan`` and ``submit`` — and per-query: batched same-problem queries
-    share one run sized by their union/max."""
+    share one run sized by their union/max.
+
+    ``islands`` is how many mesh islands the NSGA scan will shard over
+    (1 = the plain single-device scan).  ``predicted_s`` is the wall-clock
+    estimate from the session's segment-time histograms
+    (``explore.segment_s`` / ``explore.segment_compile_s`` medians; the
+    first segment is costed at the compile median when this scan variant
+    has not yet compiled in-process) — ``None`` until those histograms
+    hold at least one observation, ``0.0`` on a cache hit."""
     engine: str
     cache_key: str
     cache_hit: bool
@@ -219,6 +234,8 @@ class Plan:
     segments: Tuple[SegmentPlan, ...]
     neighbors: Tuple[NeighborPlan, ...] = ()
     seed_cap: int = 0
+    islands: int = 1
+    predicted_s: Optional[float] = None
 
     @property
     def n_evals_planned(self) -> int:
@@ -318,7 +335,7 @@ class Session:
         return dict(cache_dir=s.cache_dir, capacity=s.capacity,
                     nsga=s.nsga, tech=s.tech, policy=s.policy,
                     transfer_k=s.transfer_k,
-                    manifest_policy=s.manifest_policy)
+                    manifest_policy=s.manifest_policy, mesh=s.mesh)
 
     def clone(self) -> "Session":
         """A sibling session: same configuration, same cache directory
@@ -366,7 +383,8 @@ class Session:
                               for s in pl.segments],
                     neighbors=[dict(key=n.key, distance=n.distance,
                                     quota=n.quota) for n in pl.neighbors],
-                    seed_cap=pl.seed_cap))
+                    seed_cap=pl.seed_cap, islands=pl.islands,
+                    predicted_s=pl.predicted_s))
         return pl
 
     def _plan_impl(self, query: Query) -> Plan:
@@ -386,14 +404,17 @@ class Session:
         if svc.warm_verdict(arc, p.objectives, budget):
             return Plan(engine=engine, cache_key=ck, cache_hit=True,
                         budget=budget, objectives=p.objectives,
-                        segments=())
+                        segments=(), predicted_s=0.0)
         policy = query.policy or svc.policy
-        pop = svc._effective_pop(budget)
-        generations = _pow2(-(-budget // pop))
-        chunk = min(_pow2(policy.chunk_generations), generations)
+        sched = quantize.schedule(budget, svc.nsga.pop,
+                                  policy.chunk_generations)
+        pop, chunk = sched.pop, sched.chunk
         segments = tuple(
             SegmentPlan(i, pop, chunk, pop * chunk)
-            for i in range(generations // chunk))
+            for i in range(sched.n_seg))
+        mesh = svc._mesh_for(pop)
+        islands = int(mesh.shape[ISLAND_AXIS]) if mesh is not None else 1
+        predicted = self._predict_s(p, sched, mesh)
         neighbors, cap = (), 0
         if query.transfer:
             cap = pop if len(arc) == 0 else max(pop // 2, 1)
@@ -405,7 +426,37 @@ class Session:
                 if m.entries[nk].get("digest") is not None)
         return Plan(engine=engine, cache_key=ck, cache_hit=False,
                     budget=budget, objectives=p.objectives,
-                    segments=segments, neighbors=neighbors, seed_cap=cap)
+                    segments=segments, neighbors=neighbors, seed_cap=cap,
+                    islands=islands, predicted_s=predicted)
+
+    def _predict_s(self, p: Problem, sched: "quantize.Schedule",
+                   mesh) -> Optional[float]:
+        """Wall-clock estimate for one NSGA submission, from the
+        process-wide segment-time histograms.  The first segment is
+        costed at the compile-time median when this exact scan variant
+        has not yet executed in-process (``make_nsga`` is cached, so
+        probing it here is free and a later ``submit`` reuses the
+        runner).  ``None`` while the histograms are empty — a fresh
+        process has nothing to extrapolate from.  When only compile
+        segments have been observed so far (short early runs), the
+        compile median stands in for the steady-state one — a
+        conservative over-estimate beats no estimate."""
+        seg_h = obs.REGISTRY.peek("explore.segment_s")
+        comp_h = obs.REGISTRY.peek("explore.segment_compile_s")
+        seg_p50 = seg_h.quantile(0.5) if seg_h is not None else None
+        comp_p50 = comp_h.quantile(0.5) if comp_h is not None else None
+        if seg_p50 is None and comp_p50 is None:
+            return None
+        if seg_p50 is None:
+            seg_p50 = comp_p50
+        cfg = dataclasses.replace(self.service.nsga, pop=sched.pop,
+                                  generations=sched.chunk)
+        run = make_nsga(p.spec, p.space, p.objectives, cfg,
+                        tech=self.tech, mesh=mesh)
+        first = seg_p50
+        if not run.compile_state["executed"] and comp_p50 is not None:
+            first = comp_p50
+        return first + (sched.n_seg - 1) * seg_p50
 
     def _scalarized_evals(self, query: Query) -> int:
         """Planned evaluation spend of a scalarized query (estimate; the
@@ -590,7 +641,8 @@ class Session:
                 "transfer / policy")
         return ExploreQuery(p.graph, p.objectives, int(q.budget),
                             p.ch_max, p.space_kwargs, q.transfer,
-                            spec=p.spec, space=p.space)
+                            spec=p.spec, space=p.space,
+                            megabatch=q.megabatch)
 
     def _wrap_explore(self, q: Query, er: ExploreResult) -> Result:
         return Result(

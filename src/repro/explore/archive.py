@@ -77,10 +77,27 @@ def dominates(a, b):
     return jnp.all(a <= b) & jnp.any(a < b)
 
 
+# pools at least this large route dominance counting through the tiled
+# ``kernels/pareto_rank`` dispatcher (Pallas on TPU / interpret mode, the
+# identical jnp math elsewhere) instead of materializing the fused
+# (n, n, k) comparison in one shot — the only O(n^2) step in selection
+_PARETO_RANK_MIN_N = int(os.environ.get("REPRO_PARETO_RANK_MIN_N", "128"))
+
+
 def dominance_counts(objs, valid):
     """(n,) number of *valid* points dominating each row of ``objs`` (n, k).
     Zero => nondominated.  One fused (n, n, k) comparison — the vmapped
-    'O(1) scans' insertion primitive."""
+    'O(1) scans' insertion primitive — below ``_PARETO_RANK_MIN_N``; the
+    tiled ``pareto_rank`` kernel above it.  Every ranking consumer (NSGA
+    environmental selection, ``ParetoArchive.insert``) funnels through
+    here, so the kernel serves the whole search path."""
+    n = int(objs.shape[0])
+    if n >= _PARETO_RANK_MIN_N:
+        # local import: the kernel layer is optional compute, and this
+        # module stays importable standalone
+        from ..kernels.pareto_rank.ops import \
+            dominance_counts as _tiled_counts
+        return _tiled_counts(objs, valid)
     le = jnp.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
     lt = jnp.any(objs[:, None, :] < objs[None, :, :], axis=-1)
     dom = le & lt & valid[:, None]

@@ -15,15 +15,31 @@ Evaluation and objectives are the same path the scalarized engines use
 here is good there and vice versa.  Compiled runners are cached on the
 padded workload dims exactly like ``make_sa`` — every graph with equal
 (W, CH, E) shares one compilation.
+
+Two scaling layers sit on top of the single scan:
+
+* **island sharding** (``make_nsga(..., mesh=...)``) — the population axis
+  is sharded across a device mesh with ``shard_map``; each device evolves
+  an island and a ``lax.ppermute`` ring exchanges elite migrants every
+  ``cfg.migration_interval`` generations.  On a 1-device mesh the body
+  statically reduces to the unsharded step, so results are bit-identical
+  to the plain scan.
+* **cross-problem lanes** (``make_nsga_fused(..., lanes=L)``) — the whole
+  run is vmapped over a stacked lane axis so ``L`` *distinct* problems
+  (same padded dims / space statics / schedule) evaluate in one compiled
+  dispatch; per-lane keys, populations, spec arrays and immigrants ride
+  the lane axis.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from ..core.encoding import (ALL_FIELDS, DesignSpace, feasibility_penalty,
                              mutate, random_design)
@@ -38,6 +54,9 @@ F = jnp.float32
 _DESIGN_KEYS = ("shape", "spatial", "order", "tiling", "pipe", "logB",
                 "packaging", "family", "placement")
 
+# the mesh axis the island model shards the population over
+ISLAND_AXIS = "islands"
+
 
 @dataclasses.dataclass(frozen=True)
 class NSGAConfig:
@@ -51,6 +70,12 @@ class NSGAConfig:
     pmx_placement: bool = False   # placement crossover MIXES both parents'
     #                               permutations (PMX) instead of taking one
     #                               wholesale — permutation validity kept
+    # --- island mode (only active under make_nsga(..., mesh=...)) -------
+    migration_interval: int = 4   # ppermute a migrant ring every K
+    #                               generations
+    migration_frac: float = 0.125  # fraction of each island's population
+    #                                sent around the ring (its elite head,
+    #                                replacing the neighbor's worst tail)
 
 
 def pmx(key, a, b):
@@ -81,9 +106,25 @@ def pmx(key, a, b):
 _NSGA_CACHE: dict = {}
 
 
+def _static_key(dims, idx, cfg, tech, space):
+    """Everything compile-relevant about one scan variant EXCEPT how it is
+    laid out over devices (mesh) or lanes — the shared stem of the
+    single-run, island and fused cache keys.
+
+    Workload CONTENT (bounds/loopmask/...) is deliberately absent: every
+    cached closure takes it at runtime via the arrays dict (evaluation,
+    mutation, and immigrant sampling alike), so a cache hit for a
+    statics-equal but different problem is content-correct.  Keep it that
+    way — baking any ``space.spec`` array into a closure here would make
+    results depend on which problem first populated the cache."""
+    return (dims, idx, cfg, tech, space.max_shape, space.max_logB,
+            space.max_total_pes, space.fixed_packaging,
+            space.fixed_family, space.allow_pipeline)
+
+
 def make_nsga(spec: SystemSpec, space: DesignSpace,
               objectives: Tuple[str, ...] = METRIC_KEYS,
-              cfg: NSGAConfig = NSGAConfig(), tech=None):
+              cfg: NSGAConfig = NSGAConfig(), tech=None, mesh=None):
     """Build a jitted front explorer.
 
     Returns ``run(key, pop0, arrays=None) ->
@@ -111,6 +152,17 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
     objective (monotone non-increasing), and ``feasible_frac`` (G,) the
     feasible fraction of each generation's children.  Feed it to
     ``ConvergenceTrace.from_scan`` for the host-side view.
+
+    ``mesh`` (a ``jax.sharding.Mesh`` with an ``"islands"`` axis) turns on
+    the island model: the population axis is sharded across the mesh with
+    ``shard_map``, each device evolves its own island (per-island PRNG
+    streams fold in the island index) and every ``cfg.migration_interval``
+    generations each island's ``cfg.migration_frac`` elite head rotates
+    one hop around a ``lax.ppermute`` ring, replacing the receiver's worst
+    tail.  Telemetry stays GLOBAL (the trace is computed over the
+    all-gathered population, so front size / hypervolume mean the same
+    thing sharded or not).  On a 1-device mesh every island construct is
+    statically skipped and the result is bit-identical to ``mesh=None``.
     """
     from ..core.constants import DEFAULT_TECH
     tech = tech or DEFAULT_TECH
@@ -119,19 +171,49 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
     if not idx:
         raise ValueError("objectives must name at least one metric")
 
-    cache_key = (dims, idx, cfg, tech, space.max_shape, space.max_logB,
-                 space.max_total_pes, space.fixed_packaging,
-                 space.fixed_family, space.allow_pipeline)
+    n_isl = 1
+    if mesh is not None:
+        if ISLAND_AXIS not in mesh.shape:
+            raise ValueError(f"island mesh must name a {ISLAND_AXIS!r} "
+                             f"axis; got {tuple(mesh.shape)}")
+        n_isl = int(mesh.shape[ISLAND_AXIS])
+        if cfg.pop % n_isl or cfg.pop // n_isl < 2:
+            raise ValueError(f"pop={cfg.pop} cannot shard into {n_isl} "
+                             f"islands of at least 2 designs")
+
+    cache_key = _static_key(dims, idx, cfg, tech, space) + (mesh,)
     if cache_key not in _NSGA_CACHE:
-        n_imm = int(round(cfg.pop * cfg.immigrants))
+        n_imm = int(round((cfg.pop // n_isl) * cfg.immigrants)) * n_isl
         # immigrants are drawn OUTSIDE the scanned/jitted evolution (as a
         # scan input) — random_design's permutation sorts are expensive to
-        # compile and belong in one small vmapped kernel, not in the body
+        # compile and belong in one small vmapped kernel, not in the body.
+        # nl/bounds come in as runtime arrays (not baked from `space`) so
+        # the cached sampler carries NO workload content: a cache hit for
+        # a statics-equal but different problem stays content-correct
         imm_fn = jax.jit(jax.vmap(jax.vmap(
-            lambda k: random_design(k, space)))) if n_imm else None
+            lambda k, nl, b: random_design(k, space, nl=nl, bounds=b),
+            in_axes=(0, None, None)),
+            in_axes=(0, None, None))) if n_imm else None
+        body = _build_run(space, dims, idx, cfg, tech, n_isl=n_isl)
+        if mesh is not None:
+            P = PartitionSpec
+            body = shard_map(
+                body, mesh=mesh,
+                # (key, pop0, arr, imm): key + spec arrays replicated,
+                # population sharded on its leading axis, immigrants on
+                # their per-generation axis 1
+                in_specs=(P(), P(ISLAND_AXIS), P(),
+                          P(None, ISLAND_AXIS) if n_imm else P()),
+                # (pop, raw, sel, ev_designs, ev_raw, ev_feas, trace):
+                # per-generation stacks shard on axis 1 (axis 0 is the
+                # scan); the trace is computed over the gathered global
+                # population, hence replicated
+                out_specs=(P(ISLAND_AXIS), P(ISLAND_AXIS), P(ISLAND_AXIS),
+                           P(None, ISLAND_AXIS), P(None, ISLAND_AXIS),
+                           P(None, ISLAND_AXIS), P()),
+                check_rep=False)
         _NSGA_CACHE[cache_key] = (
-            jax.jit(_build_run(space, dims, idx, cfg, tech)), imm_fn, n_imm,
-            dict(executed=False))
+            jax.jit(body), imm_fn, n_imm, dict(executed=False))
     jitted, imm_fn, n_imm, state = _NSGA_CACHE[cache_key]
 
     def runner(key, pop0, arrays=None):
@@ -140,7 +222,9 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
         imm = None
         if n_imm:
             kk = jax.random.split(k_imm, cfg.generations * n_imm)
-            imm = imm_fn(kk.reshape(cfg.generations, n_imm, *kk.shape[1:]))
+            nl = jnp.sum(arr["loopmask"], axis=1).astype(jnp.int32)
+            imm = imm_fn(kk.reshape(cfg.generations, n_imm, *kk.shape[1:]),
+                         nl, arr["bounds"])
         out = jitted(k_run, pop0, arr, imm)
         state["executed"] = True
         return out
@@ -153,8 +237,86 @@ def make_nsga(spec: SystemSpec, space: DesignSpace,
     return runner
 
 
-def _build_run(space, dims, idx, cfg, tech):
-    N = cfg.pop
+def make_nsga_fused(spec: SystemSpec, space: DesignSpace,
+                    objectives: Tuple[str, ...] = METRIC_KEYS,
+                    cfg: NSGAConfig = NSGAConfig(), tech=None,
+                    lanes: int = 1):
+    """Build a jitted MULTI-PROBLEM front explorer: the whole ``make_nsga``
+    run vmapped over a stacked lane axis, so ``lanes`` independent
+    populations — typically *different* problems whose spec arrays share
+    one padded shape — evolve in one compiled dispatch.
+
+    Returns ``run(keys, pops, arrays_seq)`` where ``keys`` is a sequence
+    of ``lanes`` PRNG keys, ``pops`` a stacked design pytree of shape
+    ``(lanes, cfg.pop, ...)`` and ``arrays_seq`` a sequence of ``lanes``
+    spec-array dicts (equal shapes; e.g. each problem's ``spec.arrays``).
+    Outputs match ``make_nsga`` with a leading lane axis.  Per-lane PRNG
+    handling is identical to the single-lane runner (same split/fold
+    chain), so lane ``i``'s results correspond exactly to an unbatched
+    ``make_nsga(...)(keys[i], pops[i], arrays_seq[i])`` run.
+
+    Compiled variants are cached per (statics, lanes); callers should
+    pow2-pad the lane count (``quantize.bucket_lanes``) and discard the
+    padding lanes' outputs, so a long-lived service compiles O(log(max
+    batch)) fused variants.  Mutually exclusive with island sharding.
+    """
+    from ..core.constants import DEFAULT_TECH
+    tech = tech or DEFAULT_TECH
+    dims = (spec.W, spec.CH, spec.E)
+    idx = tuple(METRIC_KEYS.index(o) for o in objectives)
+    if not idx:
+        raise ValueError("objectives must name at least one metric")
+    if lanes < 1:
+        raise ValueError("lanes must be >= 1")
+
+    cache_key = _static_key(dims, idx, cfg, tech, space) + ("lanes", lanes)
+    if cache_key not in _NSGA_CACHE:
+        n_imm = int(round(cfg.pop * cfg.immigrants))
+        imm_fn = jax.jit(jax.vmap(jax.vmap(
+            lambda k, nl, b: random_design(k, space, nl=nl, bounds=b),
+            in_axes=(0, None, None)),
+            in_axes=(0, None, None))) if n_imm else None
+        _NSGA_CACHE[cache_key] = (
+            jax.jit(jax.vmap(_build_run(space, dims, idx, cfg, tech))),
+            imm_fn, n_imm, dict(executed=False))
+    jitted, imm_fn, n_imm, state = _NSGA_CACHE[cache_key]
+
+    def runner(keys, pops, arrays_seq):
+        if len(keys) != lanes or len(arrays_seq) != lanes:
+            raise ValueError(f"expected {lanes} keys/array dicts")
+        arr = {k: jnp.stack([jnp.asarray(a[k]) for a in arrays_seq])
+               for k in arrays_seq[0]}
+        k_runs, imms = [], []
+        for i, key in enumerate(keys):
+            # the exact single-lane key chain, per lane; immigrants are
+            # drawn from lane i's OWN workload arrays, matching what an
+            # unbatched run of that lane's problem would draw
+            k_run, k_imm = jax.random.split(jnp.asarray(key))
+            k_runs.append(k_run)
+            if n_imm:
+                kk = jax.random.split(k_imm, cfg.generations * n_imm)
+                nl = jnp.sum(arr["loopmask"][i], axis=1).astype(jnp.int32)
+                imms.append(imm_fn(
+                    kk.reshape(cfg.generations, n_imm, *kk.shape[1:]),
+                    nl, arr["bounds"][i]))
+        imm = jax.tree.map(lambda *xs: jnp.stack(xs), *imms) \
+            if n_imm else None
+        out = jitted(jnp.stack(k_runs), pops, arr, imm)
+        state["executed"] = True
+        return out
+
+    runner.compile_state = state
+    return runner
+
+
+def _build_run(space, dims, idx, cfg, tech, n_isl: int = 1):
+    # per-island population width; with n_isl == 1 (the unsharded path and
+    # the 1-device mesh) every island construct below is STATICALLY
+    # elided, so the built computation is exactly the historical one
+    N = cfg.pop // n_isl
+    n_mig = min(int(round(N * cfg.migration_frac)), N - 1) if n_isl > 1 \
+        else 0
+    mig_k = max(1, int(cfg.migration_interval))
     obj_idx = jnp.asarray(idx, jnp.int32)
     pairs = objective_pairs(len(idx))
     hv_ref = jnp.asarray([HV_LOG_REF, HV_LOG_REF], F)
@@ -190,7 +352,14 @@ def _build_run(space, dims, idx, cfg, tech):
         dominance/staircase math only, no design evaluations.  ``hv_now``
         (the instantaneous, non-running front hypervolume) is traced
         alongside the running max: it resolves WHEN quality arrived, the
-        signal the transfer trust calibration regresses on."""
+        signal the transfer trust calibration regresses on.  Under island
+        sharding the stats are computed over the all-gathered GLOBAL
+        population (replicated on every device), so the trace means the
+        same thing at any island count."""
+        if n_isl > 1:
+            sel_n = jax.lax.all_gather(sel_n, ISLAND_AXIS, tiled=True)
+            feas_n = jax.lax.all_gather(feas_n, ISLAND_AXIS, tiled=True)
+            cfeas = jax.lax.all_gather(cfeas, ISLAND_AXIS, tiled=True)
         finite = jnp.all(jnp.isfinite(sel_n), axis=-1)
         ok = finite & feas_n
         sane = jnp.where(jnp.isfinite(sel_n), sel_n, F(BIG))
@@ -208,7 +377,7 @@ def _build_run(space, dims, idx, cfg, tech):
                   best=best_run, feasible_frac=jnp.mean(cfeas.astype(F)))
         return hv_run, best_run, tr
 
-    def step(arr, carry, k, imm_g):
+    def step(arr, carry, k, imm_g, g):
         pop, raw, sel, feas, hv_run, best_run = carry
         k_mate, k_cx, k_mut = jax.random.split(k, 3)
         nl = jnp.sum(arr["loopmask"], axis=1).astype(jnp.int32)
@@ -246,11 +415,34 @@ def _build_run(space, dims, idx, cfg, tech):
                          nd.astype(F) * F(1e6) - jnp.minimum(crowd, F(1e5)),
                          F(BIG))
         order = jnp.argsort(keyv)[:N]
+        pop_n = jax.tree.map(lambda x: x[order], a_pop)
+        raw_n = raw_n0 = a_raw[order]
         sel_n, feas_n = a_sel[order], a_feas[order]
+        if n_mig:
+            # --- island migration: the rank-sorted population's elite
+            # head rotates one hop around the device ring; it replaces
+            # the receiver's worst tail, but only on migration
+            # generations (the ppermute itself runs unconditionally —
+            # collectives must not hide inside lax.cond — and jnp.where
+            # keeps or discards the migrants)
+            do_mig = (g % mig_k) == (mig_k - 1)
+            ring = [(i, (i + 1) % n_isl) for i in range(n_isl)]
+            head = (jax.tree.map(lambda x: x[:n_mig], pop_n),
+                    raw_n[:n_mig], sel_n[:n_mig], feas_n[:n_mig])
+            r_pop, r_raw, r_sel, r_feas = jax.lax.ppermute(
+                head, ISLAND_AXIS, ring)
+
+            def splice(x, r):
+                return jnp.concatenate(
+                    [x[:N - n_mig], jnp.where(do_mig, r, x[N - n_mig:])])
+
+            pop_n = jax.tree.map(splice, pop_n, r_pop)
+            raw_n = splice(raw_n0, r_raw)
+            sel_n = splice(sel_n, r_sel)
+            feas_n = splice(feas_n, r_feas)
         hv_run, best_run, tr = telemetry(sel_n, feas_n, cfeas,
                                          hv_run, best_run)
-        return ((jax.tree.map(lambda x: x[order], a_pop),
-                 a_raw[order], sel_n, feas_n, hv_run, best_run),
+        return ((pop_n, raw_n, sel_n, feas_n, hv_run, best_run),
                 (children, craw, cfeas, tr))
 
     def run(key, pop0, arr, imm):
@@ -263,11 +455,16 @@ def _build_run(space, dims, idx, cfg, tech):
         feas0 = jnp.zeros((N,), bool)
         hv0 = jnp.zeros((len(pairs),), F)
         best0 = jnp.asarray(jnp.inf, F)
+        if n_isl > 1:
+            # islands draw from diverged PRNG streams; skipped statically
+            # at n_isl == 1 so the 1-device mesh replays the plain chain
+            key = jax.random.fold_in(key, jax.lax.axis_index(ISLAND_AXIS))
         keys = jax.random.split(key, cfg.generations)
+        gens = jnp.arange(cfg.generations, dtype=jnp.int32)
         carry0 = (pop0, raw0, sel0, feas0, hv0, best0)
         ((pop, raw, sel, _feas, _hv, _best),
          (ev_designs, ev_raw, ev_feas, trace)) = jax.lax.scan(
-            lambda c, xs: step(arr, c, *xs), carry0, (keys, imm))
+            lambda c, xs: step(arr, c, *xs), carry0, (keys, imm, gens))
         return pop, raw, sel, ev_designs, ev_raw, ev_feas, trace
 
     return run

@@ -74,8 +74,10 @@ from ..core.workload import (WorkloadGraph, embedding_delta,
 from .archive import (MANIFEST_NAME, ArchiveManifest, ConvergenceTrace,
                       ManifestPolicy, ParetoArchive, atomic_savez,
                       objective_pairs, pareto_front, spec_space_key)
+from . import quantize
 from .locks import LockTimeout, file_lock, lock_path
-from .nsga import NSGAConfig, make_nsga
+from .nsga import (ISLAND_AXIS, NSGAConfig, _static_key, make_nsga,
+                   make_nsga_fused)
 
 # the default archive cache is anchored to the repo root (four levels above
 # this file: src/repro/explore/service.py), NOT the process CWD — otherwise
@@ -112,9 +114,10 @@ def resolve_cache_dir(cache_dir=None) -> Path:
     return p
 
 
-def _pow2(n: int) -> int:
-    """Smallest power of two >= n (n >= 1)."""
-    return 1 << max(0, int(n) - 1).bit_length() if n > 1 else 1
+# `_pow2` kept as a module-level alias: the quantization lattice now
+# lives in `repro.explore.quantize` (shared with megabatch bucketing and
+# `api` plan math), but external callers historically import it from here.
+_pow2 = quantize.pow2_ceil
 
 
 def _transfer_lift(trace: ConvergenceTrace) -> float:
@@ -155,12 +158,21 @@ class BudgetPolicy:
     service's per-problem ledger.  ``reallocate`` lets ``explore_batch``
     spend banked credit on the batch's under-explored, still-improving
     archives.  Single-objective queries have no hypervolume pairs and
-    never stop early."""
+    never stop early.
+
+    ``megabatch`` lets ``run_queries`` fuse DIFFERENT problems whose spec
+    arrays and quantized schedules coincide into one vmapped dispatch
+    (lane counts pow2-padded, capped at ``megabatch_lanes``); individual
+    queries opt out via ``ExploreQuery.megabatch=False``, and the fused
+    path is skipped entirely under ``resume=True`` (checkpoints stay
+    per-group) or when the service shards over a device mesh."""
     chunk_generations: int = 8
     plateau_rel: float = 0.005
     patience: int = 2
     adaptive: bool = True
     reallocate: bool = True
+    megabatch: bool = True
+    megabatch_lanes: int = 8
 
 
 @dataclasses.dataclass
@@ -247,6 +259,9 @@ class ExploreQuery:
     #                                 own front and take no fallback)
     spec: Optional[SystemSpec] = None
     space: Optional[DesignSpace] = None
+    megabatch: bool = True          # allow this query's group to fuse with
+    #                                 other problems into one compiled
+    #                                 dispatch (see BudgetPolicy.megabatch)
 
     def __post_init__(self):
         self.objectives = tuple(self.objectives)
@@ -337,15 +352,23 @@ class ExplorationService:
                  nsga: NSGAConfig = NSGAConfig(), tech=None,
                  policy: BudgetPolicy = BudgetPolicy(),
                  transfer_k: int = 3,
-                 manifest_policy: ManifestPolicy = ManifestPolicy()):
+                 manifest_policy: ManifestPolicy = ManifestPolicy(),
+                 mesh=None):
         # nsga.generations is not used on the query path — each query's
         # budget sets the scan length (see _refine); the config's pop /
         # fields / crossover / mutation / immigrant knobs apply as given.
+        # ``mesh`` (a jax.sharding.Mesh with an "islands" axis) shards
+        # every refinement's population across the mesh as island-model
+        # NSGA (see make_nsga); quantized populations too small to shard
+        # fall back to the single-device scan, and megabatching is
+        # disabled while a mesh is set (the two layouts are mutually
+        # exclusive — fusing sharded runs is a follow-on).
         self.cache_dir = resolve_cache_dir(cache_dir)
         self.capacity = int(capacity)
         self.nsga = nsga
         self.tech = tech
         self.policy = policy
+        self.mesh = mesh
         self.transfer_k = int(transfer_k)
         self.manifest_policy = manifest_policy
         self.ledger: Dict[str, int] = {}
@@ -582,8 +605,21 @@ class ExplorationService:
         seq = itertools.count()
         with obs.span("explore.run_queries", queries=len(queries),
                       groups=len(groups)):
-            for i, (ck, g) in enumerate(groups.items()):
-                self._refine_group(ck, g, jax.random.fold_in(key, i),
+            # per-group keys are fixed by enumeration order BEFORE any
+            # batching decision, so a group's PRNG chain — and therefore
+            # its refined front — is identical whether it runs
+            # sequentially or fused into a megabatch lane
+            gkeys = {ck: jax.random.fold_in(key, i)
+                     for i, ck in enumerate(groups)}
+            fused = set()
+            if (self.policy.megabatch and not resume and self.mesh is None
+                    and len(groups) > 1):
+                fused = self._megabatch_pass(groups, gkeys, on_segment,
+                                             seq, control)
+            for ck, g in groups.items():
+                if ck in fused:
+                    continue
+                self._refine_group(ck, g, gkeys[ck],
                                    on_segment=on_segment, seq=seq,
                                    resume=resume, control=control)
             if self.policy.reallocate:
@@ -641,16 +677,17 @@ class ExplorationService:
         return cb
 
     # ---- one problem group -------------------------------------------------
-    def _refine_group(self, ck: str, g: Dict, key, on_segment=None,
-                      seq=None, resume: bool = False,
-                      control: Optional[RunControl] = None) -> None:
-        """Phase 1: spend (or bank) the group's own budget.  Mutates ``g``
-        with the run's accounting; fronts are projected later, after any
-        cross-group budget reallocation topped the archive up."""
-        t0 = time.perf_counter()
+    def _open_group(self, ck: str, g: Dict) -> bool:
+        """Shared prologue of one group's refinement (sequential OR
+        megabatched): resolve the archive, record the query facts on
+        ``g`` and return the warm verdict (True => served straight from
+        cache, nothing to refine).  Idempotent — the megabatch pre-pass
+        may open a group the sequential loop later revisits."""
+        if "warm" in g:
+            return g["warm"]
         arc = g["arc"] = self.archive_for(g["spec"], g["space"], key=ck)
         g["embedding"] = workload_features(g["spec"].graph)
-        budget = max(q.budget for q in g["queries"])
+        budget = g["budget"] = max(q.budget for q in g["queries"])
         union = g["union"] = tuple(
             k for k in METRIC_KEYS
             if any(k in q.objectives for q in g["queries"]))
@@ -659,57 +696,256 @@ class ExplorationService:
         g.update(warm=warm, n_run=0, trace=None, plateaued=False,
                  banked=0, realloc=0, transferred_from=(), n_seeds=0,
                  interrupted=False, plateau=PlateauState())
-        if warm:
-            if ck not in self.manifest.entries:
-                self._update_manifest(ck, g)     # backfill pre-manifest
-                #                                  caches into the index
+        if warm and ck not in self.manifest.entries:
+            self._update_manifest(ck, g)         # backfill pre-manifest
+            #                                      caches into the index
+        return warm
+
+    def _group_seeds(self, ck: str, g: Dict, key) -> Optional[Dict]:
+        """Transfer seeds for one opened group, when any of its queries
+        asked for them.  Cold starts AND warm refinements take seeds: a
+        half-explored archive profits from neighbor fronts it has never
+        seen, but its own front head keeps at least half the
+        population."""
+        if not any(q.transfer for q in g["queries"]):
+            return None
+        arc = g["arc"]
+        pop_eff = self._effective_pop(g["budget"])
+        cap = pop_eff if len(arc) == 0 else max(pop_eff // 2, 1)
+        with obs.span("explore.transfer_seeds", key=ck):
+            seeds, srcs = self._transfer_seeds(
+                ck, g["space"], g["embedding"],
+                jax.random.fold_in(key, 0x7e5), arc=arc, cap=cap)
+        g["transferred_from"] = srcs
+        g["n_seeds"] = (int(next(iter(seeds.values())).shape[0])
+                        if seeds else 0)
+        return seeds
+
+    def _book_refinement(self, ck: str, g: Dict, sp, n_run: int, trace,
+                         plateaued: bool, banked: int,
+                         interrupted: bool) -> None:
+        """Shared epilogue of one group's refinement: archive accounting,
+        eval/bank counters, trust calibration and manifest/disk sync."""
+        arc, union, budget = g["arc"], g["union"], g["budget"]
+        arc.searched = tuple(k for k in METRIC_KEYS
+                             if k in arc.searched or k in union)
+        if not interrupted:
+            # an interrupted run must NOT mark the budget covered —
+            # the resumed attempt still owes the residual segments
+            arc.budget_covered = max(arc.budget_covered, budget)
+        obs.inc("explore.evals.spent", n_run)
+        if banked:
+            obs.inc("explore.evals.banked", banked)
+            self.ledger[ck] = self.ledger.get(ck, 0) + banked
+        g.update(n_run=n_run, trace=trace, plateaued=plateaued,
+                 banked=banked, interrupted=interrupted)
+        if sp is not None:
+            sp.set(n_run=n_run, plateaued=plateaued, banked=banked,
+                   n_seeds=g["n_seeds"], interrupted=interrupted)
+        if trace is not None:           # a stop before the first segment
+            arc.trace_summary = trace.summary()         # leaves no trace
+        self.save(ck)
+        m = self.manifest               # ONE snapshot: the trust records
+        #                                 land in the same object the
+        #                                 index update saves below
+        self._record_trust(ck, g, trace, m)
+        self._update_manifest(ck, g, m)
+
+    def _refine_group(self, ck: str, g: Dict, key, on_segment=None,
+                      seq=None, resume: bool = False,
+                      control: Optional[RunControl] = None) -> None:
+        """Phase 1: spend (or bank) the group's own budget.  Mutates ``g``
+        with the run's accounting; fronts are projected later, after any
+        cross-group budget reallocation topped the archive up."""
+        t0 = time.perf_counter()
+        if self._open_group(ck, g):
             g["elapsed"] = time.perf_counter() - t0
             return
+        budget, union, arc = g["budget"], g["union"], g["arc"]
         with obs.span("explore.refine_group", key=ck, budget=budget) as sp:
-            seeds = None
-            if any(q.transfer for q in g["queries"]):
-                # cold starts AND warm refinements take seeds: a
-                # half-explored archive profits from neighbor fronts it has
-                # never seen, but its own front head keeps at least half
-                # the population
-                pop_eff = self._effective_pop(budget)
-                cap = pop_eff if len(arc) == 0 else max(pop_eff // 2, 1)
-                with obs.span("explore.transfer_seeds", key=ck):
-                    seeds, srcs = self._transfer_seeds(
-                        ck, g["space"], g["embedding"],
-                        jax.random.fold_in(key, 0x7e5), arc=arc, cap=cap)
-                g["transferred_from"] = srcs
-                g["n_seeds"] = (int(next(iter(seeds.values())).shape[0])
-                                if seeds else 0)
+            seeds = self._group_seeds(ck, g, key)
             n_run, trace, plateaued, banked, interrupted = self._refine(
                 arc, g["spec"], g["space"], union, budget, key, seeds=seeds,
                 on_segment=self._segment_cb(on_segment, ck, "refine",
                                             seq=seq),
                 plateau=g["plateau"], control=control,
                 checkpoint=self._ckpt_path(ck) if resume else None)
-            arc.searched = tuple(k for k in METRIC_KEYS
-                                 if k in arc.searched or k in union)
-            if not interrupted:
-                # an interrupted run must NOT mark the budget covered —
-                # the resumed attempt still owes the residual segments
-                arc.budget_covered = max(arc.budget_covered, budget)
-            obs.inc("explore.evals.spent", n_run)
-            if banked:
-                obs.inc("explore.evals.banked", banked)
-                self.ledger[ck] = self.ledger.get(ck, 0) + banked
-            g.update(n_run=n_run, trace=trace, plateaued=plateaued,
-                     banked=banked, interrupted=interrupted)
-            sp.set(n_run=n_run, plateaued=plateaued, banked=banked,
-                   n_seeds=g["n_seeds"], interrupted=interrupted)
-            if trace is not None:       # a stop before the first segment
-                arc.trace_summary = trace.summary()     # leaves no trace
-            self.save(ck)
-            m = self.manifest           # ONE snapshot: the trust records
-            #                             land in the same object the
-            #                             index update saves below
-            self._record_trust(ck, g, trace, m)
-            self._update_manifest(ck, g, m)
+            self._book_refinement(ck, g, sp, n_run, trace, plateaued,
+                                  banked, interrupted)
         g["elapsed"] = time.perf_counter() - t0
+
+    # ---- cross-problem megabatching ----------------------------------------
+    def _fuse_signature(self, g: Dict):
+        """Everything that must coincide for two problem groups to share
+        one fused compiled dispatch: the NSGA scan statics (padded dims,
+        space bounds, objective columns, variation config, tech) plus the
+        quantized segment schedule.  Spec ARRAY VALUES are free to differ
+        — they ride the lane axis."""
+        spec, space = g["spec"], g["space"]
+        sched = quantize.schedule(g["budget"], self.nsga.pop,
+                                  self.policy.chunk_generations)
+        idx = tuple(METRIC_KEYS.index(o) for o in g["union"])
+        cfg = dataclasses.replace(self.nsga, pop=sched.pop,
+                                  generations=sched.chunk)
+        return _static_key((spec.W, spec.CH, spec.E), idx, cfg,
+                           self.tech or DEFAULT_TECH, space) + (sched,)
+
+    def _megabatch_pass(self, groups: Dict[str, Dict], gkeys, on_segment,
+                        seq, control) -> set:
+        """Bucket this batch's cold, megabatch-willing groups by fused
+        compile signature and answer every bucket of >= 2 problems with
+        one vmapped lockstep refinement.  Returns the keys of the groups
+        fully handled here (warm groups it served count too); the caller
+        runs the rest sequentially."""
+        done: set = set()
+        buckets: Dict[tuple, List[Tuple[str, Dict]]] = {}
+        for ck, g in groups.items():
+            if not all(getattr(q, "megabatch", True)
+                       for q in g["queries"]):
+                continue
+            t0 = time.perf_counter()
+            if self._open_group(ck, g):
+                g["elapsed"] = time.perf_counter() - t0     # warm: served
+                done.add(ck)
+                continue
+            buckets.setdefault(self._fuse_signature(g), []).append((ck, g))
+        cap = max(2, int(self.policy.megabatch_lanes))
+        for bucket in buckets.values():
+            for lo in range(0, len(bucket), cap):
+                part = bucket[lo:lo + cap]
+                if len(part) < 2:       # nothing to fuse with — leave it
+                    continue            # to the sequential loop
+                self._refine_group_fused(part, gkeys, on_segment, seq,
+                                         control)
+                done.update(ck for ck, _ in part)
+        return done
+
+    def _refine_group_fused(self, bucket: List[Tuple[str, Dict]], gkeys,
+                            on_segment, seq, control) -> None:
+        """Run one bucket of distinct-problem groups as fused lanes of a
+        single vmapped NSGA dispatch, then book each group exactly as the
+        sequential path would."""
+        t0 = time.perf_counter()
+        with obs.span("explore.megabatch", lanes=len(bucket),
+                      keys=",".join(ck for ck, _ in bucket)) as sp:
+            lanes = []
+            for ck, g in bucket:
+                lanes.append(dict(
+                    ck=ck, g=g, key=gkeys[ck],
+                    seeds=self._group_seeds(ck, g, gkeys[ck]),
+                    cb=self._segment_cb(on_segment, ck, "refine", seq=seq)))
+            results = self._refine_fused(lanes, control=control)
+            for (ck, g), r in zip(bucket, results):
+                self._book_refinement(ck, g, None, *r)
+            sp.set(n_run=sum(r[0] for r in results))
+        dt = time.perf_counter() - t0
+        for _, g in bucket:     # wall-clock is genuinely shared: every
+            g["elapsed"] = dt   # lane waited on the same dispatches
+
+    def _refine_fused(self, lanes: List[Dict], control=None
+                      ) -> List[Tuple]:
+        """The megabatched ``_refine``: every lane (one problem group)
+        shares a single quantized schedule and one ``make_nsga_fused``
+        runner; per-lane archives, seeding, plateau streaks, traces and
+        banking follow the sequential semantics segment by segment.
+
+        The lane count of each dispatch is pow2-padded
+        (``quantize.bucket_lanes``); padding slots replay the first live
+        lane and their outputs are DISCARDED — masked per-problem lanes,
+        in exchange for a lane-count compile lattice of O(log(batch)).
+        When a lane plateaus it stops booking results but the dispatch
+        width stays fixed (no recompile mid-run).  No checkpoint support:
+        ``run_queries`` only fuses when ``resume`` is off.  Returns one
+        ``(n_run, trace, plateaued, banked, interrupted)`` per lane, in
+        order."""
+        policy = self.policy
+        g0 = lanes[0]["g"]
+        union = g0["union"]
+        sched = quantize.schedule(g0["budget"], self.nsga.pop,
+                                  policy.chunk_generations)
+        pop, chunk, n_seg = sched.pop, sched.chunk, sched.n_seg
+        cfg = dataclasses.replace(self.nsga, pop=pop, generations=chunk)
+        lanes_pad = quantize.bucket_lanes(len(lanes))
+        run = make_nsga_fused(g0["spec"], g0["space"], union, cfg,
+                              tech=self.tech, lanes=lanes_pad)
+        hv_pairs = [(METRIC_KEYS.index(union[i]),
+                     METRIC_KEYS.index(union[j]))
+                    for i, j in objective_pairs(len(union))]
+        for ln in lanes:
+            k_init, k_run = jax.random.split(ln["key"])
+            space = ln["g"]["space"]
+            ln.update(
+                k_run=k_run, trace=None, plateaued=False,
+                interrupted=False, spent_g=0, live=True,
+                st=ln["g"]["plateau"],
+                filler=jax.vmap(lambda k: random_design(k, space))(
+                    jax.random.split(k_init, pop)))
+        for s in range(n_seg):
+            live = [ln for ln in lanes if ln["live"]]
+            if not live:
+                break
+            if control is not None and control.stopped:
+                for ln in live:
+                    ln["interrupted"] = True
+                break
+            t_seg = time.perf_counter()
+            compiled = not run.compile_state["executed"]
+            slots = live + [live[0]] * (lanes_pad - len(live))
+            keys_s = [jax.random.fold_in(ln["k_run"], s) for ln in slots]
+            pops = [_seed_population(ln["g"]["arc"], pop, ln["filler"],
+                                     ln["seeds"] if s == 0 else None)
+                    for ln in slots]
+            pop_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *pops)
+            pop_s, _raw, _sel, ev_d, ev_r, ev_f, tr = run(
+                keys_s, pop_stack,
+                [ln["g"]["spec"].arrays for ln in slots])
+            # per-lane booking: identical to one sequential _refine
+            # segment; padding slots (j >= len(live)) book nothing
+            staged = []
+            for j, ln in enumerate(live):
+                arc = ln["g"]["arc"]
+                arc.insert(
+                    jax.tree.map(
+                        lambda x: x[j].reshape((-1,) + x.shape[3:]), ev_d),
+                    ev_r[j].reshape(-1, ev_r.shape[-1]),
+                    mask=ev_f[j].reshape(-1), count_evals=False)
+                arc.n_evals += pop * chunk
+                ln["spent_g"] += chunk
+                ln["filler"] = jax.tree.map(lambda x: x[j], pop_s)
+                seg_trace = ConvergenceTrace.from_scan(
+                    union, {k: v[j] for k, v in tr.items()}, pop)
+                hv_now = np.asarray([arc.projected_hypervolume(p)
+                                     for p in hv_pairs])
+                seg_trace.archive_hv = hv_now[None, :]
+                ln["trace"] = (seg_trace if ln["trace"] is None
+                               else ln["trace"].extend(seg_trace))
+                staged.append((ln, seg_trace, hv_now))
+            # all host-side archive work has drained the dispatch by
+            # here: dt is the honest wall-clock of the fused segment,
+            # reported to every lane (they genuinely shared it)
+            dt = time.perf_counter() - t_seg
+            obs.inc("explore.segments")
+            obs.observe("explore.segment_compile_s" if compiled
+                        else "explore.segment_s", dt)
+            for ln, seg_trace, hv_now in staged:
+                if ln["cb"] is not None:
+                    ln["cb"](s, seg_trace, dt, compiled)
+                if policy.adaptive and hv_pairs:
+                    streak = ln["st"].observe(
+                        hv_now, policy.plateau_rel,
+                        count=bool(len(ln["g"]["arc"])))
+                    if streak >= policy.patience and s + 1 < n_seg:
+                        ln["plateaued"] = True
+                        ln["live"] = False
+                        obs.inc("explore.plateau_stops")
+        out = []
+        for ln in lanes:
+            n_run = ln["spent_g"] * pop
+            banked = max(0, ln["g"]["budget"] - n_run) \
+                if ln["plateaued"] else 0
+            out.append((n_run, ln["trace"], ln["plateaued"], banked,
+                        ln["interrupted"]))
+        return out
 
     @staticmethod
     def warm_verdict(arc: ParetoArchive, objectives: Sequence[str],
@@ -1031,13 +1267,17 @@ class ExplorationService:
         normally, pow2 floor when the budget is a hard cap; floored at
         8).  Factored out so the seeding path caps transfer seeds at what
         the run can really inject."""
-        pop = self.nsga.pop
-        if budget < pop:
-            p = _pow2(budget)
-            if quantize_down and p > budget:
-                p >>= 1
-            pop = min(pop, max(8, p))
-        return pop
+        return quantize.effective_pop(budget, self.nsga.pop, quantize_down)
+
+    def _mesh_for(self, pop: int):
+        """The service mesh, when a ``pop``-wide population can actually
+        shard over it (every island at least 2 designs); ``None`` (the
+        single-device scan) otherwise — small quantized budgets must not
+        fail, they just don't scale."""
+        if self.mesh is None:
+            return None
+        n = int(self.mesh.shape.get(ISLAND_AXIS, 1))
+        return self.mesh if (pop % n == 0 and pop // n >= 2) else None
 
     def _ckpt_signature(self, objectives: Tuple[str, ...], budget: int,
                         pop: int, generations: int, chunk: int, key,
@@ -1047,9 +1287,14 @@ class ExplorationService:
         written under a different signature answers a DIFFERENT run and
         is ignored — resuming must never splice two unequal runs."""
         h = hashlib.sha256()
+        mesh = self._mesh_for(pop)      # island count changes the PRNG /
+        #                                 migration chain: a sharded run's
+        #                                 checkpoint answers a different
+        #                                 numeric stream than an unsharded
+        islands = int(mesh.shape[ISLAND_AXIS]) if mesh is not None else 1
         h.update(repr((tuple(objectives), int(budget), int(pop),
                        int(generations), int(chunk), int(self.capacity),
-                       repr(self.nsga),
+                       repr(self.nsga), islands,
                        repr(self.tech or DEFAULT_TECH))).encode())
         h.update(np.asarray(key).tobytes())
         if seeds is not None:
@@ -1205,15 +1450,14 @@ class ExplorationService:
         a bad seed is selected out after one generation.
         """
         policy = self.policy
-        pop = self._effective_pop(budget, quantize_down)
-        if quantize_down:       # largest pow2 <= budget/pop, floored at 1
-            generations = 1 << max(0, (budget // pop).bit_length() - 1)
-        else:
-            generations = _pow2(-(-budget // pop))      # ceil, then pow2
-        chunk = min(_pow2(policy.chunk_generations), generations)
-        n_seg = generations // chunk                    # pow2 => divides
+        sched = quantize.schedule(budget, self.nsga.pop,
+                                  policy.chunk_generations, quantize_down)
+        pop, generations = sched.pop, sched.generations
+        chunk, n_seg = sched.chunk, sched.n_seg
         cfg = dataclasses.replace(self.nsga, pop=pop, generations=chunk)
-        run = make_nsga(spec, space, objectives, cfg, tech=self.tech)
+        mesh = self._mesh_for(pop)
+        run = make_nsga(spec, space, objectives, cfg, tech=self.tech,
+                        mesh=mesh)
         # archive-projected hypervolume pairs, in METRIC_KEYS column space
         hv_pairs = [(METRIC_KEYS.index(objectives[i]),
                      METRIC_KEYS.index(objectives[j]))
@@ -1221,35 +1465,7 @@ class ExplorationService:
         k_init, k_run = jax.random.split(key)
 
         def seed(filler, extra=None):
-            """Population for the next segment: archive front head (the
-            all-time best designs), then any transfer ``extra`` seeds,
-            ``filler`` tail (fresh random samples for segment 0, then the
-            carried evolving population).  Transfer seeds reserve their
-            slots FIRST (the caller caps them at half the population when
-            the archive is non-empty), so a warm refinement's large front
-            head cannot crowd out the migrated neighbors it asked for."""
-            fr_designs, _ = arc.front()
-            n_ext = 0
-            if extra is not None:
-                # the CALLER caps the seed count (at most half the
-                # effective population when the archive is non-empty, see
-                # _refine_group) — re-deriving the cap here would just be
-                # a second copy of that logic waiting to drift
-                n_ext = min(int(next(iter(extra.values())).shape[0]), pop)
-            n_warm = min(len(arc), pop - n_ext)
-            if n_warm + n_ext == 0:
-                return filler
-
-            def leaf(k, v):
-                parts = []
-                if n_warm:
-                    parts.append(jnp.asarray(fr_designs[k][:n_warm]))
-                if n_ext:
-                    parts.append(jnp.asarray(extra[k][:n_ext]))
-                parts.append(jnp.asarray(v)[n_warm + n_ext:])
-                return jnp.concatenate(parts)
-
-            return {k: leaf(k, v) for k, v in filler.items()}
+            return _seed_population(arc, pop, filler, extra)
 
         filler = jax.vmap(lambda k: random_design(k, space))(
             jax.random.split(k_init, pop))
@@ -1331,6 +1547,40 @@ class ExplorationService:
             Path(checkpoint).unlink(missing_ok=True)    # run complete:
             #                                 nothing left to resume
         return n_run, trace, plateaued, banked, interrupted
+
+
+def _seed_population(arc: ParetoArchive, pop: int, filler: Dict,
+                     extra: Optional[Dict] = None) -> Dict:
+    """Population for the next segment: archive front head (the all-time
+    best designs), then any transfer ``extra`` seeds, ``filler`` tail
+    (fresh random samples for segment 0, then the carried evolving
+    population).  Transfer seeds reserve their slots FIRST (the caller
+    caps them at half the population when the archive is non-empty, see
+    ``_group_seeds``), so a warm refinement's large front head cannot
+    crowd out the migrated neighbors it asked for.  Shared by the
+    sequential ``_refine`` loop and the megabatched lanes — one seeding
+    rule, wherever a population is assembled."""
+    fr_designs, _ = arc.front()
+    n_ext = 0
+    if extra is not None:
+        # the CALLER caps the seed count (at most half the effective
+        # population when the archive is non-empty) — re-deriving the cap
+        # here would just be a second copy of that logic waiting to drift
+        n_ext = min(int(next(iter(extra.values())).shape[0]), pop)
+    n_warm = min(len(arc), pop - n_ext)
+    if n_warm + n_ext == 0:
+        return filler
+
+    def leaf(k, v):
+        parts = []
+        if n_warm:
+            parts.append(jnp.asarray(fr_designs[k][:n_warm]))
+        if n_ext:
+            parts.append(jnp.asarray(extra[k][:n_ext]))
+        parts.append(jnp.asarray(v)[n_warm + n_ext:])
+        return jnp.concatenate(parts)
+
+    return {k: leaf(k, v) for k, v in filler.items()}
 
 
 # ---------------------------------------------------------------------------

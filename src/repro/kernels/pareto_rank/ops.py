@@ -1,0 +1,32 @@
+"""Dispatching wrapper for the dominance-count kernel: Pallas on TPU
+(padding the pool to the tile grid; padded rows are invalid dominators
+and their counts are sliced off), jnp reference elsewhere;
+REPRO_PALLAS_INTERPRET=1 forces the kernel in interpret mode — how the
+CPU CI exercises the Pallas path."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .pareto_rank import dominance_counts_pallas
+from .ref import dominance_counts_ref
+
+
+def dominance_counts(objs, valid, block: int = 128):
+    use_pallas = (jax.default_backend() == "tpu"
+                  or os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1")
+    if not use_pallas:
+        return dominance_counts_ref(objs, valid)
+    n = objs.shape[0]
+    b = min(block, n)
+    pn = (-n) % b
+    objs_p = jnp.pad(objs, ((0, pn), (0, 0)))
+    valid_p = jnp.pad(valid.astype(bool), (0, pn))      # padding rows can
+    #                                                     never dominate
+    counts = dominance_counts_pallas(
+        objs_p, valid_p, block=b,
+        interpret=os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1")
+    return counts[:n]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: tiled Pareto dominance counts.
+
+NSGA environmental selection and every archive insertion rank a pool by
+its dominance counts — the only O(n^2) step on the search path.  The jnp
+reference materializes the fused (n, n, k) comparison tensor; this kernel
+tiles it into (bi, bj) VMEM blocks and accumulates the dominator count
+over the ``i`` (candidate-dominator) grid dimension, so peak memory is
+O(block^2 * k) however large the pool grows.
+
+Grid layout: ``(n/bj, n/bi)`` with the reduction dimension LAST, so every
+revisit of one output block is contiguous and the accumulator never
+leaves VMEM between visits (init on ``i == 0`` via ``pl.when``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+
+
+def _rank_kernel(oj_ref, oi_ref, vi_ref, c_ref):
+    i = pl.program_id(1)                          # reduction position
+    oj = oj_ref[...].astype(jnp.float32)          # (bj, k) the dominated
+    oi = oi_ref[...].astype(jnp.float32)          # (bi, k) the dominators
+    vi = vi_ref[...]                              # (bi, 1) f32 mask
+    le = jnp.all(oi[:, None, :] <= oj[None, :, :], axis=-1)   # (bi, bj)
+    lt = jnp.any(oi[:, None, :] < oj[None, :, :], axis=-1)
+    dom = jnp.where(le & lt, vi, 0.0)             # mask broadcasts (bi, 1)
+    acc = jnp.sum(dom, axis=0)[:, None]           # (bj, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += acc
+
+
+def dominance_counts_pallas(objs, valid, block: int = BLOCK,
+                            interpret: bool = False):
+    """``objs``: (n, k) float32; ``valid``: (n,) — n must divide by
+    ``block`` (the ops wrapper pads).  Returns (n,) int32 dominance
+    counts, matching ``ref.dominance_counts_ref``."""
+    n, k = objs.shape
+    b = min(block, n)
+    assert n % b == 0
+    vf = valid.astype(jnp.float32).reshape(n, 1)
+    counts = pl.pallas_call(
+        _rank_kernel,
+        grid=(n // b, n // b),
+        in_specs=[
+            pl.BlockSpec((b, k), lambda j, i: (j, 0)),
+            pl.BlockSpec((b, k), lambda j, i: (i, 0)),
+            pl.BlockSpec((b, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 1), lambda j, i: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(objs.astype(jnp.float32), objs.astype(jnp.float32), vf)
+    return counts[:, 0].astype(jnp.int32)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the dominance-count kernel (NSGA selection /
+archive insertion).  Must stay in lockstep with the historical
+``repro.explore.archive.dominance_counts`` math — the archive routes
+through this module, so this IS the canonical implementation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dominance_counts_ref(objs, valid):
+    """``objs``: (n, k) objective rows (all minimized); ``valid``: (n,)
+    bool rows allowed to dominate.  Returns (n,) int32: for each row, how
+    many valid rows dominate it (<= on every objective, < on at least
+    one).  Materializes the fused (n, n, k) comparison — the tiled Pallas
+    kernel exists precisely to avoid this above a size threshold."""
+    le = jnp.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
+    lt = jnp.any(objs[:, None, :] < objs[None, :, :], axis=-1)
+    dom = le & lt & valid[:, None]
+    return jnp.sum(dom, axis=0).astype(jnp.int32)

@@ -143,6 +143,14 @@ class MetricsRegistry:
     def histogram(self, name: str, capacity: int = 1024) -> Histogram:
         return self._get(name, Histogram, capacity=capacity)
 
+    def peek(self, name: str) -> Optional[object]:
+        """The metric registered under ``name``, WITHOUT creating it —
+        for read-only consumers (e.g. ``Plan`` wall-clock prediction off
+        the segment-time histograms) that must not pollute the namespace
+        with empty metrics just by asking."""
+        with self._lock:
+            return self._metrics.get(name)
+
     def snapshot(self) -> Dict[str, Dict]:
         """JSON-serializable dump of every metric: counters/gauges carry
         ``value``; histograms carry count/mean/min/max and exact(-ish)

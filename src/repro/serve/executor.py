@@ -90,19 +90,36 @@ def query_from_payload(d: Dict) -> Query:
                  is not None else None)
 
 
-def stale_result(session, query: Query, cache_key: str) -> Optional[Result]:
+def stale_result(session, query: Query, cache_key: str,
+                 max_age_s: Optional[float] = None) -> Optional[Result]:
     """The degradation answer: the freshest cached front for the query's
     problem, straight off the shared archive (disk state merged in
     first — another service may have refined it since we last looked),
     re-projected to the query's objectives.  ``None`` when the archive
     is empty — a cold problem has nothing to degrade to.  Costs zero
     evaluations; ``provenance.stale=True`` and the query's whole budget
-    shows as banked (the refinement debt the job store still owes)."""
+    shows as banked (the refinement debt the job store still owes).
+
+    ``max_age_s`` bounds how old a served front may be: when the
+    archive npz on disk was last refined more than ``max_age_s`` seconds
+    ago, the front is TOO stale to degrade to and ``None`` is returned
+    (the caller queues the refinement instead).  An archive that exists
+    only in this process's memory (no npz yet) is by construction
+    current and always serves."""
     p = query.problem
     t0 = time.perf_counter()
     arc = session.service.refresh_archive(p.spec, p.space, key=cache_key)
     if len(arc) == 0:
         return None
+    if max_age_s is not None:
+        try:
+            age = time.time() - session.service._path(cache_key) \
+                .stat().st_mtime
+        except OSError:
+            age = 0.0       # in-memory only: refined by THIS process
+        if age > max_age_s:
+            obs.inc("serve.stale_expired")
+            return None
     designs, metrics = arc.front()
     idx = [METRIC_KEYS.index(o) for o in p.objectives]
     cols = np.asarray(metrics[:, idx], np.float64)
@@ -241,16 +258,25 @@ class Executor:
     ``session`` is the configuration template: each worker thread lazily
     takes a ``session.clone()`` of its own.  ``store`` defaults to
     ``<cache_dir>/jobs`` — co-located with the archives so one directory
-    is the whole recoverable state of a serving fleet."""
+    is the whole recoverable state of a serving fleet.
+
+    ``stale_ttl_s`` bounds the staleness of overload-served fronts: a
+    cached front whose archive was last refined more than ``stale_ttl_s``
+    seconds ago is not served as a degradation answer — the query queues
+    for fresh refinement instead (``None`` = any cached front serves,
+    however old; the historic behavior)."""
 
     def __init__(self, session, store=None, max_workers: int = 2,
-                 max_pending: int = 8):
+                 max_pending: int = 8,
+                 stale_ttl_s: Optional[float] = None):
         self._session = session
         cfg = session._service_config()
         root = store if store is not None \
             else Path(cfg["cache_dir"]) / "jobs"
         self.store = root if isinstance(root, JobStore) else JobStore(root)
         self.max_pending = int(max_pending)
+        self.stale_ttl_s = None if stale_ttl_s is None \
+            else float(stale_ttl_s)
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=int(max_workers),
             thread_name_prefix="repro-serve")
@@ -297,7 +323,8 @@ class Executor:
         self._handles[rec.job_id] = handle
         obs.inc("serve.submitted")
         if not self._admit(deadline_s):
-            stale = stale_result(self._session, query, ck)
+            stale = stale_result(self._session, query, ck,
+                                 max_age_s=self.stale_ttl_s)
             if stale is not None:
                 # overload + warm archive: answer now, bank the job
                 handle._stale = stale

@@ -1,0 +1,281 @@
+"""Device-saturating search: the island-sharded NSGA scan (1-device mesh
+bit-identity, multi-island subprocess execution), cross-problem
+megabatching (fused fronts identical to sequential runs), the shared
+pow2 quantization lattice, and the tiled dominance-count kernel routing
+(`repro.kernels.pareto_rank`) that NSGA selection and archive insertion
+funnel through.  Runs in tier-1 — the kernel tests here use interpret
+mode, no TPU required."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as C
+from repro.api import Problem, Query, Session
+from repro.explore import archive as archive_mod
+from repro.explore import quantize
+from repro.explore.nsga import (ISLAND_AXIS, NSGAConfig, make_nsga,
+                                make_nsga_fused)
+from repro.explore.service import BudgetPolicy, ExplorationService
+from repro.core.encoding import random_design
+
+TINY_SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
+OBJ = ("latency_ns", "cost_usd")
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _tiny(graph_name="att2", ch_max=2):
+    g = C.presets.bert_mms()[graph_name]
+    spec = C.SystemSpec.build(g, ch_max=ch_max)
+    return g, spec, C.DesignSpace(spec, **TINY_SPACE_KW)
+
+
+def _pop0(space, pop, key):
+    return jax.vmap(lambda k: random_design(k, space))(
+        jax.random.split(key, pop))
+
+
+def _mesh1():
+    return jax.sharding.Mesh(np.array(jax.devices()[:1]), (ISLAND_AXIS,))
+
+
+# ---------------------------------------------------------------------------
+# pow2 quantization lattice (repro.explore.quantize)
+# ---------------------------------------------------------------------------
+def test_pow2_helpers():
+    assert [quantize.pow2_ceil(n) for n in (1, 2, 3, 8, 9, 1000)] == \
+        [1, 2, 4, 8, 16, 1024]
+    assert [quantize.pow2_floor(n) for n in (1, 2, 3, 8, 9, 1000)] == \
+        [1, 2, 2, 8, 8, 512]
+
+
+def test_effective_pop_floor_and_ceiling():
+    assert quantize.effective_pop(2048, 64) == 64       # ceiling binds
+    assert quantize.effective_pop(24, 64) == 32         # pow2 ceil
+    assert quantize.effective_pop(24, 64, quantize_down=True) == 16
+    assert quantize.effective_pop(3, 64) == quantize.MIN_POP
+    assert quantize.effective_pop(3, 64, True) == quantize.MIN_POP
+
+
+@pytest.mark.parametrize("budget", [8, 24, 64, 100, 2048])
+def test_schedule_invariants(budget):
+    for down in (False, True):
+        s = quantize.schedule(budget, 64, 4, quantize_down=down)
+        # everything on the pow2 lattice, and segments tile generations
+        for v in (s.pop, s.generations, s.chunk):
+            assert v & (v - 1) == 0
+        assert s.n_seg * s.chunk == s.generations
+        assert s.chunk <= s.generations
+    # ceil covers the budget; floor never exceeds it (>= MIN_POP budgets)
+    up = quantize.schedule(budget, 64, 4)
+    assert up.evals >= budget
+    if budget >= quantize.MIN_POP:
+        dn = quantize.schedule(budget, 64, 4, quantize_down=True)
+        assert dn.evals <= budget
+
+
+def test_bucket_lanes():
+    assert [quantize.bucket_lanes(n) for n in (1, 2, 3, 5, 8)] == \
+        [1, 2, 4, 8, 8]
+    assert quantize.bucket_lanes(9, max_lanes=8) == 8
+
+
+# ---------------------------------------------------------------------------
+# island-sharded NSGA: a 1-device mesh is bit-identical to the plain scan
+# ---------------------------------------------------------------------------
+def test_island_one_device_mesh_bit_identical():
+    _, spec, space = _tiny()
+    cfg = NSGAConfig(pop=8, generations=4)
+    key = jax.random.PRNGKey(0)
+    pop0 = _pop0(space, cfg.pop, jax.random.PRNGKey(1))
+    plain = make_nsga(spec, space, OBJ, cfg)(key, pop0)
+    isl = make_nsga(spec, space, OBJ, cfg, mesh=_mesh1())(key, pop0)
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(isl)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_island_mesh_validation():
+    _, spec, space = _tiny()
+    with pytest.raises(ValueError, match=ISLAND_AXIS):
+        make_nsga(spec, space, OBJ, NSGAConfig(pop=8, generations=2),
+                  mesh=jax.sharding.Mesh(
+                      np.array(jax.devices()[:1]), ("wrong",)))
+
+
+class _FakeMesh:
+    """Stands in for a 4-device mesh on this 1-device host: ``_mesh_for``
+    only reads ``mesh.shape``."""
+    shape = {ISLAND_AXIS: 4}
+
+
+def test_service_mesh_for_degrades_unshardable_pops(tmp_path):
+    svc = ExplorationService(cache_dir=tmp_path, mesh=_mesh1())
+    assert svc._mesh_for(8) is svc.mesh     # 1 island always fits
+    svc.mesh = _FakeMesh()
+    assert svc._mesh_for(8) is svc.mesh     # 4 islands of 2
+    assert svc._mesh_for(9) is None         # not divisible
+    assert svc._mesh_for(4) is None         # islands of 1 degenerate
+    svc.mesh = None
+    assert svc._mesh_for(8) is None
+
+
+@pytest.mark.slow
+def test_multi_island_subprocess_migrates():
+    """4 forced host devices: the sharded scan runs, migrates, and
+    produces global telemetry with the unsharded shapes."""
+    prog = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        import repro.core as C
+        from repro.explore.nsga import ISLAND_AXIS, NSGAConfig, make_nsga
+        from repro.core.encoding import random_design
+        g = C.presets.bert_mms()["att2"]
+        spec = C.SystemSpec.build(g, ch_max=2)
+        space = C.DesignSpace(spec, max_shape=(16, 16, 4, 4, 1, 2))
+        assert len(jax.devices()) == 4
+        mesh = jax.sharding.Mesh(np.array(jax.devices()), (ISLAND_AXIS,))
+        cfg = NSGAConfig(pop=16, generations=4, migration_interval=2)
+        pop0 = jax.vmap(lambda k: random_design(k, space))(
+            jax.random.split(jax.random.PRNGKey(1), cfg.pop))
+        out = make_nsga(spec, space, ("latency_ns", "cost_usd"), cfg,
+                        mesh=mesh)(jax.random.PRNGKey(0), pop0)
+        pop, raw, sel, ev_d, ev_r, ev_f, tr = out
+        assert raw.shape == (cfg.pop, 4) and sel.shape[0] == cfg.pop
+        assert ev_r.shape == (cfg.generations, cfg.pop, 4)
+        assert tr["front_size"].shape == (cfg.generations,)
+        assert bool(jnp.all(jnp.isfinite(raw)))
+        print("ISLANDS-OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", prog], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "ISLANDS-OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# fused multi-problem runner: lane i == unbatched run i
+# ---------------------------------------------------------------------------
+def test_fused_lanes_match_unbatched_runs():
+    """Each lane of ``make_nsga_fused`` evolves the same designs as its
+    unbatched ``make_nsga`` twin (bit-identical design pytrees; raw
+    metrics agree to f32 batched-reduction tolerance)."""
+    cfg = NSGAConfig(pop=8, generations=2)
+    probs = [_tiny(n) for n in ("att1", "att2", "att3")]
+    _, spec0, space0 = probs[0]
+    keys = [jax.random.PRNGKey(i) for i in range(3)]
+    pops = [_pop0(p[2], cfg.pop, jax.random.fold_in(k, 9))
+            for p, k in zip(probs, keys)]
+    run_f = make_nsga_fused(spec0, space0, OBJ, cfg, lanes=3)
+    fused = run_f(keys, jax.tree.map(lambda *xs: jnp.stack(xs), *pops),
+                  [p[1].arrays for p in probs])
+    for j, ((_, spec, space), key, pop0) in enumerate(
+            zip(probs, keys, pops)):
+        single = make_nsga(spec0, space0, OBJ, cfg)(
+            key, pop0, arrays=spec.arrays)
+        s_pop, s_raw = single[0], single[1]
+        f_pop = jax.tree.map(lambda x: x[j], fused[0])
+        for a, b in zip(jax.tree.leaves(s_pop), jax.tree.leaves(f_pop)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(np.asarray(fused[1][j]),
+                                   np.asarray(s_raw), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# cross-problem megabatching through the service: fronts identical
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_megabatch_fronts_match_sequential(tmp_path):
+    """Three distinct problems with one padded shape: the fused
+    megabatch answers with the same fronts as three sequential
+    refinements — design pytrees bit-identical, metrics to f32
+    batched-reduction tolerance."""
+    def _queries():
+        return [Query(Problem(C.presets.bert_mms()[n], objectives=OBJ,
+                              ch_max=2, space_kwargs=TINY_SPACE_KW),
+                      budget=32, engine="nsga")
+                for n in ("att1", "att2", "att3")]
+
+    def _run(sub, megabatch):
+        s = Session(cache_dir=tmp_path / sub,
+                    nsga=NSGAConfig(pop=8, generations=2),
+                    policy=BudgetPolicy(adaptive=False,
+                                        chunk_generations=1,
+                                        megabatch=megabatch))
+        return s.submit(_queries(), key=jax.random.PRNGKey(5))
+
+    fused = _run("fused", True)
+    seq = _run("seq", False)
+    for rf, rs in zip(fused, seq):
+        np.testing.assert_allclose(rf.front_metrics, rs.front_metrics,
+                                   rtol=1e-6)
+        assert len(rf.front_designs) == len(rs.front_designs)
+        for df, ds in zip(rf.front_designs, rs.front_designs):
+            assert sorted(df) == sorted(ds)
+            for k in df:
+                np.testing.assert_array_equal(df[k], ds[k])
+        assert rf.provenance.n_evals_run == rs.provenance.n_evals_run
+
+
+@pytest.mark.slow
+def test_megabatch_query_optout_stays_sequential(tmp_path):
+    """A ``Query(megabatch=False)`` group never fuses — and the batch
+    still answers every query correctly."""
+    probs = [Problem(C.presets.bert_mms()[n], objectives=OBJ, ch_max=2,
+                     space_kwargs=TINY_SPACE_KW)
+             for n in ("att1", "att2")]
+    s = Session(cache_dir=tmp_path, nsga=NSGAConfig(pop=8, generations=2),
+                policy=BudgetPolicy(adaptive=False, chunk_generations=1))
+    qs = [Query(probs[0], budget=16, engine="nsga", megabatch=False),
+          Query(probs[1], budget=16, engine="nsga")]
+    out = s.submit(qs, key=jax.random.PRNGKey(3))
+    for r in out:
+        assert r.provenance.n_evals_run == 16
+        assert len(r.front_objs) >= 1
+
+
+# ---------------------------------------------------------------------------
+# dominance-count kernel routing (interpret mode — no TPU needed)
+# ---------------------------------------------------------------------------
+def test_dominance_counts_kernel_parity(monkeypatch):
+    """Above the size threshold ``archive.dominance_counts`` routes
+    through the tiled pareto_rank kernel; in interpret mode its counts
+    equal the fused-jnp small-pool path exactly."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    objs = jax.random.normal(ks[0], (160, 3))
+    objs = objs.at[80:88].set(objs[:8])     # exact ties
+    valid = jax.random.bernoulli(ks[1], 0.7, (160,))
+    le = jnp.all(objs[:, None, :] <= objs[None, :, :], axis=-1)
+    lt = jnp.any(objs[:, None, :] < objs[None, :, :], axis=-1)
+    want = jnp.sum(le & lt & valid[:, None], axis=0)
+    monkeypatch.setattr(archive_mod, "_PARETO_RANK_MIN_N", 16)
+    got = archive_mod.dominance_counts(objs, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dominance_counts_threshold_routes_small_pools(monkeypatch):
+    """Below the threshold the fused-jnp path answers — the kernel module
+    is never imported (cheap small-pool inserts stay cheap)."""
+    import builtins
+    monkeypatch.setattr(archive_mod, "_PARETO_RANK_MIN_N", 1 << 30)
+    real_import = builtins.__import__
+
+    def guard(name, *a, **kw):
+        assert "pareto_rank" not in name
+        return real_import(name, *a, **kw)
+
+    monkeypatch.setattr(builtins, "__import__", guard)
+    objs = jax.random.normal(jax.random.PRNGKey(2), (32, 2))
+    out = archive_mod.dominance_counts(objs, jnp.ones((32,), bool))
+    assert out.shape == (32,)

@@ -475,6 +475,35 @@ def test_overload_serves_stale_front_and_banks_refinement(tmp_path):
 
 
 @pytest.mark.slow
+def test_stale_ttl_bounds_overload_serving(tmp_path):
+    """``Executor(stale_ttl_s=...)``: under overload, a cached front
+    younger than the TTL serves as the degradation answer; one older
+    than the TTL is TOO stale — the query queues for fresh refinement
+    instead of being answered with ancient data."""
+    sess = _session(tmp_path)
+    q = Query(_problem(), budget=64, engine="nsga")
+    sess.submit(q)                          # warm the archive
+    npz = sess.service._path(sess._cache_key(q.problem))
+    assert npz.exists()
+    # within the TTL: the cached front serves (historic degradation)
+    ex = Executor(sess, store=tmp_path / "jobs", max_workers=1,
+                  max_pending=0, stale_ttl_s=3600.0)
+    h = ex.submit(q, deadline_s=0.0)
+    assert h.stale is not None and h.stale.provenance.stale
+    ex.shutdown()
+    # age the archive past the TTL: nothing serves, the job queues
+    old = time.time() - 7200.0
+    os.utime(npz, (old, old))
+    ex2 = Executor(sess, store=tmp_path / "jobs2", max_workers=1,
+                   max_pending=0, stale_ttl_s=3600.0)
+    h2 = ex2.submit(q, deadline_s=0.0)
+    assert h2.stale is None
+    r = h2.result(timeout=300)              # ran fresh instead
+    assert h2.state() == DONE and not r.provenance.stale
+    ex2.shutdown()
+
+
+@pytest.mark.slow
 def test_overload_cold_problem_queues_anyway(tmp_path):
     """Degradation needs something to serve: a cold problem (empty
     archive) is queued past the admission bound rather than answered
