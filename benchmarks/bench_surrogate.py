@@ -1,0 +1,146 @@
+"""Surrogate-gated search benchmark: on a *held-out* library graph, the
+fleet-cache surrogate must buy its evaluation savings without giving up
+front quality — and ``surrogate=off`` must stay bit-identical to the
+historical exact path.
+
+Scenario (``repro.core.presets.workload_library``): the service first
+explores two attention-block graphs exactly (qwen2-72b, internlm2-1.8b),
+accumulating archived (design encoding, workload embedding) -> metric
+rows in the fleet cache.  The held-out qwen2.5-32b attention block —
+never explored, and explicitly listed on the query's ``exclude`` so its
+own key could never leak into training even if cached — is then searched
+twice from a cold archive with the same PRNG key and pow2 segmenting
+(``BudgetPolicy(adaptive=False)`` — every arm spends exactly its
+schedule):
+
+* ``exact`` — plain NSGA, fresh cache directory: the full budget ``B``.
+* ``gated`` — surrogate-gated NSGA against the populated cache at
+  budget ``2B`` with ``exact_frac=0.25``: the surrogate ranks each
+  generation's candidate children and only a quarter get exact
+  evaluations, so the run evolves TWICE the generations for half the
+  exact spend — the savings are reinvested as search depth, which is
+  where gating actually pays.
+
+Gates (ASSERTED, not just printed):
+
+* quality:  gated final archive-projected hypervolume >= 99% of exact's;
+* savings:  gated exact-evaluation spend <= 50% of the exact arm's, with
+  ``surrogate_hits`` accounting for every skipped candidate;
+* identity: ``surrogate`` requested against an EMPTY cache falls back to
+  the exact path bit-identically (same fronts, same spend, no fit).
+"""
+
+from __future__ import annotations
+
+import shutil
+import time
+
+import jax
+import numpy as np
+
+import repro.core as C
+from repro.explore.nsga import NSGAConfig
+from repro.explore.service import (BudgetPolicy, ExplorationService,
+                                   ExploreQuery)
+
+from .common import ARTIFACTS, QUICK
+
+OBJECTIVES = ("latency_ns", "cost_usd")
+# bounded space (<= 2x2 core / 1x2 chiplet arrays): the budgets below can
+# actually converge the front, the regime where skipped evaluations could
+# plausibly cost hypervolume — the honest setting for the 99% gate
+SPACE_KW = dict(max_shape=(8, 8, 2, 2, 1, 2))
+CH_MAX = 2
+NSGA = NSGAConfig(pop=32, immigrants=0.0, mutations=1)
+POLICY = BudgetPolicy(adaptive=False, reallocate=False)
+KEY = 42
+
+TRAIN = ("attn_qwen2_72b", "attn_internlm2")
+HELD_OUT = "attn_qwen2_5_32b"
+SUR_OPTS = dict(exact_frac=0.25, min_rows=16, epochs=300,
+                beta=1.5, tau=0.5)
+
+
+def _service(tag: str, wipe: bool = True, **kw) -> ExplorationService:
+    d = ARTIFACTS / f"surrogate_cache_{tag}"
+    if wipe and d.exists():
+        shutil.rmtree(d)                     # every arm starts cold on disk
+    kw.setdefault("policy", POLICY)
+    return ExplorationService(cache_dir=d, nsga=NSGA, **kw)
+
+
+def _explore(svc, graph, budget, surrogate=None):
+    q = ExploreQuery(graph, OBJECTIVES, budget=budget, ch_max=CH_MAX,
+                     space_kwargs=SPACE_KW, surrogate=surrogate)
+    t0 = time.perf_counter()
+    res, = svc.run_queries([q], key=jax.random.PRNGKey(KEY))
+    return res, time.perf_counter() - t0
+
+
+def run(quick: bool = True):
+    lib = C.presets.workload_library()
+    budget = 1024 if QUICK else 4096         # pow2 x pop => exact spends
+    held = lib[HELD_OUT]
+
+    # --- exact arm: plain NSGA, fresh cache, full budget ------------------
+    svc_exact = _service("exact")
+    exact, t_exact = _explore(svc_exact, held, budget)
+    assert not exact.from_cache and not exact.surrogate_used
+    hv_exact = float(exact.trace.archive_hv[-1, 0])
+
+    # --- gated arm: cache populated from the training graphs first -------
+    svc = _service("gated")
+    t_pop = 0.0
+    for name in TRAIN:
+        _, dt = _explore(svc, lib[name], budget)
+        t_pop += dt
+    spec = C.SystemSpec.build(held, ch_max=CH_MAX)
+    held_key = svc.problem_key(spec, C.DesignSpace(spec, **SPACE_KW))
+    gated, t_gated = _explore(
+        svc, held, 2 * budget,
+        surrogate=dict(SUR_OPTS, exclude=[held_key]))
+    assert not gated.from_cache
+    assert gated.surrogate_used, "fleet cache failed to yield a fit"
+    hv_gated = float(gated.trace.archive_hv[-1, 0])
+
+    hv_ratio = hv_gated / max(hv_exact, 1e-12)
+    ev_frac = gated.n_evals_run / max(exact.n_evals_run, 1)
+    # spent + skipped must reconstruct the gated arm's OWN 2B schedule
+    from repro.explore import quantize
+    sched = quantize.schedule(2 * budget, NSGA.pop, POLICY.chunk_generations)
+    total = sched.pop * sched.chunk * sched.n_seg
+    accounted = gated.n_evals_run + gated.surrogate_hits
+    ok = (hv_ratio >= 0.99 and ev_frac <= 0.50 and accounted == total)
+    assert ok, (f"surrogate gate failed: hv_ratio={hv_ratio:.4f} "
+                f"(>=0.99), evals_frac={ev_frac:.2f} (<=0.50), "
+                f"accounted={accounted} vs schedule={total}")
+
+    # --- off-identity: surrogate on an EMPTY cache == surrogate=None ------
+    svc_a = _service("ident_a")
+    svc_b = _service("ident_b")
+    small = budget // 4
+    ra, t_ra = _explore(svc_a, held, small, surrogate=dict(SUR_OPTS))
+    rb, _ = _explore(svc_b, held, small)
+    ident = (not ra.surrogate_used
+             and ra.n_evals_run == rb.n_evals_run
+             and np.array_equal(ra.front_objs, rb.front_objs)
+             and np.array_equal(ra.front_metrics, rb.front_metrics))
+    assert ident, "cold-cache surrogate run diverged from the exact path"
+
+    return [
+        {"name": "surrogate/train_populate", "us_per_call": t_pop * 1e6,
+         "derived": f"graphs={len(TRAIN)} budget={budget}"},
+        {"name": "surrogate/exact_arm", "us_per_call": t_exact * 1e6,
+         "derived": f"evals={exact.n_evals_run} hv={hv_exact:.6g}"},
+        {"name": "surrogate/gated_arm", "us_per_call": t_gated * 1e6,
+         "derived": (f"evals={gated.n_evals_run} hv={hv_gated:.6g} "
+                     f"hits={gated.surrogate_hits} "
+                     f"fallbacks={gated.surrogate_fallbacks}")},
+        {"name": "surrogate/gate", "us_per_call": 0,
+         "derived": (f"hv_ratio={hv_ratio:.4f} evals_frac={ev_frac:.2f} "
+                     f"({'PASS' if ok else 'FAIL'} hv>=0.99 & <=0.50 "
+                     f"& accounted)")},
+        {"name": "surrogate/off_identity", "us_per_call": t_ra * 1e6,
+         "derived": (f"bit_identical={'PASS' if ident else 'FAIL'} "
+                     f"evals={ra.n_evals_run}")},
+    ]

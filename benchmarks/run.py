@@ -12,7 +12,8 @@ import sys
 from . import (bench_validation, bench_cost_fig3, bench_comparison,
                bench_codesign, bench_pareto, bench_explore, bench_transfer,
                bench_obs, bench_serve, bench_tt, bench_roofline,
-               bench_autoshard, bench_kernels, bench_scale)
+               bench_autoshard, bench_kernels, bench_scale,
+               bench_surrogate)
 from .common import QUICK, emit
 
 MODULES = {
@@ -30,6 +31,7 @@ MODULES = {
     "autoshard": bench_autoshard,      # Level-B advisor
     "kernels": bench_kernels,          # kernel micro-table
     "scale": bench_scale,              # islands, megabatch, dominance kernel
+    "surrogate": bench_surrogate,      # surrogate-gated eval savings
 }
 
 

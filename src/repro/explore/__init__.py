@@ -27,12 +27,19 @@ import importlib
 from .archive import (BIG, HV_LOG_REF, MANIFEST_NAME,  # noqa: F401
                       ArchiveManifest, ConvergenceTrace, ManifestPolicy,
                       ParetoArchive, TrustModel, atomic_savez,
-                      crowding_distance, dominance_counts, dominates,
-                      fit_trust_model, hypervolume_2d, hypervolume_2d_jit,
+                      crowding_distance, design_encoding_dim,
+                      dominance_counts, dominates, fit_trust_model,
+                      flatten_design, hypervolume_2d, hypervolume_2d_jit,
                       objective_pairs, pareto_front, spec_space_key)
 
 _LAZY = {
     "NSGAConfig": ".nsga", "make_nsga": ".nsga",
+    "make_nsga_gated": ".nsga",
+    "Surrogate": ".surrogate", "SurrogateConfig": ".surrogate",
+    "fit_surrogate": ".surrogate", "harvest_rows": ".surrogate",
+    "NonlinearTrustModel": ".surrogate",
+    "fit_nonlinear_trust": ".surrogate",
+    "surrogate": ".surrogate",
     "BudgetPolicy": ".service",
     "ExplorationService": ".service", "ExploreQuery": ".service",
     "ExploreResult": ".service", "SegmentEvent": ".service",
@@ -51,13 +58,15 @@ __all__ = ["ParetoArchive", "pareto_front", "dominates", "dominance_counts",
            "objective_pairs", "spec_space_key", "ConvergenceTrace",
            "HV_LOG_REF", "ArchiveManifest", "ManifestPolicy", "TrustModel",
            "fit_trust_model", "MANIFEST_NAME", "atomic_savez",
-           *sorted(k for k in _LAZY if k not in ("api", "nsga", "service"))]
+           "flatten_design", "design_encoding_dim",
+           *sorted(k for k in _LAZY
+                   if k not in ("api", "nsga", "service", "surrogate"))]
 
 
 def __getattr__(name):
     if name in _LAZY:
         mod = importlib.import_module(_LAZY[name], __name__)
-        if name in ("api", "nsga", "service"):
+        if name in ("api", "nsga", "service", "surrogate"):
             return mod
         return getattr(mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

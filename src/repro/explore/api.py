@@ -236,6 +236,13 @@ class Plan:
     seed_cap: int = 0
     islands: int = 1
     predicted_s: Optional[float] = None
+    surrogate: bool = False         # the query asked for surrogate-gated
+    #                                 evaluation (engine_opts)
+    predicted_eval_savings: int = 0     # evaluations the gate WOULD skip
+    #                                 if the fleet cache yields a fit —
+    #                                 advisory like the rest of the plan:
+    #                                 a cold cache (or mid-run fallback)
+    #                                 spends up to the full schedule
 
     @property
     def n_evals_planned(self) -> int:
@@ -264,6 +271,13 @@ class Provenance:
     #                                 budget being covered — the overload
     #                                 degradation path (freshest cached
     #                                 front now, refinement banked)
+    surrogate_used: bool = False    # a fleet surrogate gated this run's
+    #                                 evaluations (False when not asked
+    #                                 for OR the cache was too cold)
+    surrogate_hits: int = 0         # evaluations skipped on the
+    #                                 surrogate's say-so
+    surrogate_fallbacks: int = 0    # ensemble disagreement abandoned the
+    #                                 surrogate mid-run
 
 
 @dataclasses.dataclass
@@ -424,10 +438,20 @@ class Session:
                 NeighborPlan(nk, float(dist), int(quotas.get(nk, 1)))
                 for nk, dist in neigh
                 if m.entries[nk].get("digest") is not None)
+        sur_req = dict(query.engine_opts or {}).get("surrogate", None)
+        savings = 0
+        if sur_req is not None:
+            from .surrogate import SurrogateConfig
+            s_opts = {} if sur_req is True else dict(sur_req)
+            s_opts.pop("exclude", None)
+            scfg = SurrogateConfig(**s_opts)
+            savings = (pop - scfg.n_exact(pop)) * chunk * sched.n_seg
         return Plan(engine=engine, cache_key=ck, cache_hit=False,
                     budget=budget, objectives=p.objectives,
                     segments=segments, neighbors=neighbors, seed_cap=cap,
-                    islands=islands, predicted_s=predicted)
+                    islands=islands, predicted_s=predicted,
+                    surrogate=sur_req is not None,
+                    predicted_eval_savings=savings)
 
     def _predict_s(self, p: Problem, sched: "quantize.Schedule",
                    mesh) -> Optional[float]:
@@ -633,16 +657,21 @@ class Session:
     @staticmethod
     def _to_explore_query(q: Query) -> ExploreQuery:
         p = q.problem
-        if q.weights is not None or q.seed_designs or q.archive \
-                or q.engine_opts:
+        opts = dict(q.engine_opts or {})
+        # the one engine_opts key the nsga engine owns: surrogate-gated
+        # evaluation (True or a SurrogateConfig-override dict; see
+        # ExploreQuery.surrogate).  Everything else is scalarized-only.
+        surrogate = opts.pop("surrogate", None)
+        if q.weights is not None or q.seed_designs or q.archive or opts:
             raise ValueError(
                 "weights / seed_designs / archive / engine_opts apply to "
                 "the scalarized engines; the nsga engine takes budget / "
-                "transfer / policy")
+                "transfer / policy / engine_opts={'surrogate': ...}")
         return ExploreQuery(p.graph, p.objectives, int(q.budget),
                             p.ch_max, p.space_kwargs, q.transfer,
                             spec=p.spec, space=p.space,
-                            megabatch=q.megabatch)
+                            megabatch=q.megabatch,
+                            surrogate=surrogate)
 
     def _wrap_explore(self, q: Query, er: ExploreResult) -> Result:
         return Result(
@@ -657,7 +686,10 @@ class Session:
                 transferred_from=er.transferred_from,
                 n_transfer_seeds=er.n_transfer_seeds,
                 plateaued=er.plateaued, elapsed_s=er.elapsed_s,
-                interrupted=er.interrupted),
+                interrupted=er.interrupted,
+                surrogate_used=er.surrogate_used,
+                surrogate_hits=er.surrogate_hits,
+                surrogate_fallbacks=er.surrogate_fallbacks),
             raw=er)
 
     def _run_scalarized(self, q: Query, engine: str, key,

@@ -352,6 +352,22 @@ def _archive_update(objs, valid, designs, new_objs, new_valid, new_designs):
             jax.tree.map(lambda x: x[order], a_designs))
 
 
+def flatten_design(design: Dict) -> jnp.ndarray:
+    """One design pytree -> a flat float32 feature vector, leaves raveled
+    in CANONICAL sorted-key order.  jit/vmap-safe (shape is static per
+    design template).  This layout IS the surrogate dataset contract:
+    ``ParetoArchive.export_rows`` emits training rows in exactly this
+    order, and the gated NSGA scan encodes candidates with this function
+    — the two must never diverge."""
+    return jnp.concatenate([jnp.ravel(jnp.asarray(design[k])).astype(F)
+                            for k in sorted(design)])
+
+
+def design_encoding_dim(template: Dict) -> int:
+    """Length of ``flatten_design`` output for one design template."""
+    return int(sum(np.asarray(v).size for v in template.values()))
+
+
 class ParetoArchive:
     """Fixed-capacity nondominated archive over stacked design pytrees.
 
@@ -445,6 +461,25 @@ class ParetoArchive:
         sel = np.flatnonzero(self.valid)
         return ({k: v[sel] for k, v in self.designs.items()},
                 self.objs[sel].astype(np.float64))
+
+    def export_rows(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Surrogate training rows from this archive: ``(X, Y)`` where
+        ``X`` is the (n, D) float32 matrix of flattened design encodings
+        (``flatten_design`` layout — canonical sorted-key order) of every
+        valid row and ``Y`` the matching (n, n_obj) float64 raw-metric
+        matrix.  Every evaluation the fleet ever archived is a free
+        labelled example; cold archives export ``(0, D)``/``(0, n_obj)``
+        so callers can concatenate unconditionally."""
+        D = design_encoding_dim({k: v[0] for k, v in self.designs.items()})
+        sel = np.flatnonzero(self.valid)
+        if not sel.size:
+            return (np.zeros((0, D), np.float32),
+                    np.zeros((0, self.n_obj), np.float64))
+        X = np.stack([
+            np.concatenate([np.ravel(self.designs[k][i]).astype(np.float32)
+                            for k in sorted(self.designs)])
+            for i in sel])
+        return X, self.objs[sel].astype(np.float64)
 
     def projected_hypervolume(self, pair: Tuple[int, int],
                               ref: float = HV_LOG_REF) -> float:
@@ -567,7 +602,11 @@ class TrustModel:
         d = np.abs(np.asarray(delta, np.float64).ravel())
         if d.shape[0] + 1 != self.weights.shape[0]:
             return 0.0                 # embedding layout drifted: neutral
-        return float(self.weights[0] + self.weights[1:] @ d)
+        # clamp at 0, as promised: a linear extrapolation far outside the
+        # fitted delta range can go arbitrarily negative, and consumers
+        # divide distances by (1 + lift) — a lift <= -1 would flip or
+        # explode the ranking instead of merely zeroing the reweighting
+        return float(max(self.weights[0] + self.weights[1:] @ d, 0.0))
 
 
 def fit_trust_model(records: Sequence[Dict], dim: Optional[int] = None,
@@ -575,18 +614,33 @@ def fit_trust_model(records: Sequence[Dict], dim: Optional[int] = None,
                     min_records: int = 3) -> Optional[TrustModel]:
     """Fit a ``TrustModel`` over transfer-outcome records (dicts with
     ``delta`` (D,) and ``lift`` float).  Records whose delta dimension
-    disagrees with ``dim`` (default: the most recent record's) are
-    skipped; fewer than ``min_records`` usable records yields ``None`` —
-    callers fall back to unweighted Euclidean ranking."""
+    disagrees with ``dim`` (default: the *modal* dimension across the
+    records — one drifted-layout straggler must not silently disqualify
+    the whole majority-dim history) are skipped and counted on the
+    ``explore.trust.skipped_records`` counter; fewer than
+    ``min_records`` usable records yields ``None`` — callers fall back
+    to unweighted Euclidean ranking."""
     usable = [r for r in records
               if np.all(np.isfinite(np.asarray(r["delta"], np.float64)))
               and np.isfinite(r["lift"])]
     if not usable:
         return None
     if dim is None:
-        dim = np.asarray(usable[-1]["delta"]).size
-    usable = [r for r in usable
-              if np.asarray(r["delta"]).size == dim]
+        sizes = [np.asarray(r["delta"]).size for r in usable]
+        # modal dim, newest-layout wins ties: count per dim, then prefer
+        # the dim seen most; among equally-common dims the one appearing
+        # latest in the record stream (the freshest layout)
+        counts: Dict[int, int] = {}
+        for s in sizes:
+            counts[s] = counts.get(s, 0) + 1
+        dim = max(counts, key=lambda s: (counts[s],
+                                         max(i for i, sz in enumerate(sizes)
+                                             if sz == s)))
+    kept = [r for r in usable
+            if np.asarray(r["delta"]).size == dim]
+    if len(kept) < len(usable):
+        obs.inc("explore.trust.skipped_records", len(usable) - len(kept))
+    usable = kept
     if len(usable) < max(int(min_records), 1):
         return None
     X = np.stack([np.concatenate(
@@ -842,9 +896,31 @@ class ArchiveManifest:
             self.trust = self.trust[-keep:]
         return self
 
-    def trust_model(self, dim: Optional[int] = None) -> Optional[TrustModel]:
+    def export_index(self, exclude: Sequence[str] = ()
+                     ) -> List[Tuple[str, np.ndarray]]:
+        """The surrogate-dataset half of the manifest: ``(key,
+        embedding)`` for every indexed problem whose archive holds paid
+        evaluations on disk, sorted by key (deterministic harvest order),
+        minus ``exclude`` — the target problem itself, or holdout graphs
+        a benchmark keeps out of training."""
+        skip = set(exclude)
+        return [(k, e["embedding"]) for k, e in sorted(self.entries.items())
+                if k not in skip and e["n_evals"] > 0
+                and e.get("digest") is not None]
+
+    def trust_model(self, dim: Optional[int] = None):
         """The fitted trust model over this manifest's recorded outcomes
-        (``None`` until enough records accumulate)."""
+        (``None`` until enough records accumulate).  With a deep record
+        table (>= ``surrogate.NONLINEAR_TRUST_MIN``) the non-linear
+        MLP head takes over from the ridge ``TrustModel`` — same
+        ``predict(delta) -> lift >= 0`` contract, but it can learn that
+        e.g. only SOME embedding axes predict transfer failure.  Falls
+        back to the ridge fit whenever the MLP cannot be fit."""
+        from .surrogate import NONLINEAR_TRUST_MIN, fit_nonlinear_trust
+        if len(self.trust) >= NONLINEAR_TRUST_MIN:
+            tm = fit_nonlinear_trust(self.trust, dim=dim)
+            if tm is not None:
+                return tm
         return fit_trust_model(self.trust, dim=dim)
 
     def nearest(self, embedding, k: int = 3,

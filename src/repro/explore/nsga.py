@@ -46,7 +46,7 @@ from ..core.encoding import (ALL_FIELDS, DesignSpace, feasibility_penalty,
 from ..core.evaluate import SystemSpec, evaluate_arrays
 from ..core.optimizer import METRIC_KEYS, log_metric_stack, metric_stack
 from .archive import (BIG, HV_LOG_REF, crowding_distance, dominance_counts,
-                      hypervolume_2d_jit, objective_pairs)
+                      flatten_design, hypervolume_2d_jit, objective_pairs)
 
 F = jnp.float32
 
@@ -307,6 +307,228 @@ def make_nsga_fused(spec: SystemSpec, space: DesignSpace,
 
     runner.compile_state = state
     return runner
+
+
+def make_nsga_gated(spec: SystemSpec, space: DesignSpace,
+                    objectives: Tuple[str, ...] = METRIC_KEYS,
+                    cfg: NSGAConfig = NSGAConfig(), tech=None,
+                    n_exact: int = 1, beta: float = 1.0,
+                    tau: float = 1.0):
+    """Build a SURROGATE-GATED front explorer: each generation produces
+    the same ``cfg.pop`` candidate children as the plain scan (identical
+    variation PRNG chain), but only the ``n_exact`` most promising —
+    ranked by predicted-Pareto optimism over the surrogate ensemble's
+    lower-confidence-bound objectives (mean − ``beta``·ensemble std,
+    dominance-counted + crowding tie-broken) — get exact evaluations.
+    Candidates whose normalized ensemble disagreement exceeds ``tau``
+    are FORCED into the exact slots whatever their rank: the surrogate
+    never silently decides where it is least sure.
+
+    Returns ``run(key, pop0, sur, arrays=None)`` shaped like the
+    ``make_nsga`` runner except ``ev_designs``/``ev_raw``/``ev_feas``
+    stack (generations, n_exact, ...) — only exact evaluations are
+    archive fodder — and ``trace`` gains ``forced_exact`` (G,) and
+    ``disagreement`` (G,) gate telemetry.  ``sur`` is
+    ``Surrogate.scan_arrays(embedding)``: ensemble weights ride as
+    RUNTIME operands, so refitting the surrogate reuses the compiled
+    scan (a new static_shape merely retraces).  Ranking happens in the
+    surrogate's normalized output space (dominance is invariant under
+    per-column positive affine maps) and knows nothing of feasibility
+    penalties — infeasible optimists cost one exact evaluation and are
+    then selected out exactly as in the plain scan.  Mutually exclusive
+    with island sharding and megabatch fusion; ``surrogate=off`` paths
+    never construct this runner."""
+    from ..core.constants import DEFAULT_TECH
+    tech = tech or DEFAULT_TECH
+    dims = (spec.W, spec.CH, spec.E)
+    idx = tuple(METRIC_KEYS.index(o) for o in objectives)
+    if not idx:
+        raise ValueError("objectives must name at least one metric")
+    n_exact = min(max(int(n_exact), 1), cfg.pop)
+
+    cache_key = _static_key(dims, idx, cfg, tech, space) + (
+        "gate", n_exact, float(beta), float(tau))
+    if cache_key not in _NSGA_CACHE:
+        n_imm = int(round(cfg.pop * cfg.immigrants))
+        imm_fn = jax.jit(jax.vmap(jax.vmap(
+            lambda k, nl, b: random_design(k, space, nl=nl, bounds=b),
+            in_axes=(0, None, None)),
+            in_axes=(0, None, None))) if n_imm else None
+        body = _build_run_gated(space, dims, idx, cfg, tech, n_exact,
+                                float(beta), float(tau))
+        _NSGA_CACHE[cache_key] = (
+            jax.jit(body), imm_fn, n_imm, dict(executed=False))
+    jitted, imm_fn, n_imm, state = _NSGA_CACHE[cache_key]
+
+    def runner(key, pop0, sur, arrays=None):
+        # the exact make_nsga key chain: gating changes WHICH children
+        # get exact evaluations, never which children are generated
+        arr = {k: jnp.asarray(v) for k, v in (arrays or spec.arrays).items()}
+        k_run, k_imm = jax.random.split(jnp.asarray(key))
+        imm = None
+        if n_imm:
+            kk = jax.random.split(k_imm, cfg.generations * n_imm)
+            nl = jnp.sum(arr["loopmask"], axis=1).astype(jnp.int32)
+            imm = imm_fn(kk.reshape(cfg.generations, n_imm, *kk.shape[1:]),
+                         nl, arr["bounds"])
+        out = jitted(k_run, pop0, arr, imm,
+                     {k: jnp.asarray(v) for k, v in sur.items()})
+        state["executed"] = True
+        return out
+
+    runner.compile_state = state
+    runner.n_exact = n_exact
+    return runner
+
+
+_SUR_WEIGHT_KEYS = ("W1", "b1", "W2", "b2", "W3", "b3")
+
+
+def _build_run_gated(space, dims, idx, cfg, tech, n_exact: int,
+                     beta: float, tau: float):
+    """The gated twin of ``_build_run`` (no islands, no migration): same
+    variation and environmental-selection math, with the surrogate
+    pre-filter between them."""
+    N = cfg.pop
+    obj_idx = jnp.asarray(idx, jnp.int32)
+    pairs = objective_pairs(len(idx))
+    hv_ref = jnp.asarray([HV_LOG_REF, HV_LOG_REF], F)
+
+    def eval_one(d, arr):
+        m = evaluate_arrays(arr, d, dims, tech)
+        raw = metric_stack(m)
+        p = feasibility_penalty(space, d, m)
+        sel = log_metric_stack(m)[obj_idx] + 8.0 * jnp.log(p)
+        return raw, sel, p <= 1.0 + 1e-6
+
+    def eval_pop(pop, arr):
+        return jax.vmap(lambda d: eval_one(d, arr))(pop)
+
+    def crossover(key, a, b):
+        ks = jax.random.split(key, len(_DESIGN_KEYS) + 1)
+        out = {}
+        for i, f in enumerate(_DESIGN_KEYS):
+            take = jax.random.uniform(ks[i]) < cfg.crossover_rate
+            if f == "placement" and cfg.pmx_placement:
+                out[f] = jnp.where(take, pmx(ks[-1], a[f], b[f]), a[f])
+            else:
+                out[f] = jnp.where(take, b[f], a[f])
+        return out
+
+    n_imm = int(round(N * cfg.immigrants))
+
+    def gate(sur, children):
+        """Rank all N candidates on the surrogate, pick the ``n_exact``
+        exact-evaluation slots: forced-by-disagreement first, then
+        predicted-Pareto optimists."""
+        X = jax.vmap(flatten_design)(children)              # (N, Dd)
+        X = jnp.concatenate(
+            [X, jnp.broadcast_to(sur["emb"], (N,) + sur["emb"].shape)],
+            axis=1)
+        Xn = (X - sur["x_mean"]) / sur["x_std"]
+
+        def member(p):
+            h = jnp.tanh(Xn @ p["W1"] + p["b1"])
+            h = jnp.tanh(h @ p["W2"] + p["b2"])
+            return h @ p["W3"] + p["b3"]
+
+        out = jax.vmap(member)(
+            {k: sur[k] for k in _SUR_WEIGHT_KEYS})          # (M, N, 4)
+        mean_n = jnp.mean(out, 0)
+        std_n = jnp.std(out, 0)
+        dis = jnp.mean(std_n, axis=1)                       # (N,)
+        # optimism: LCB dominance rank in normalized output space
+        # (dominance is invariant under per-column positive affine maps)
+        lcb = (mean_n - F(beta) * std_n)[:, obj_idx]
+        ones = jnp.ones((N,), bool)
+        nd = dominance_counts(lcb, ones)
+        crowd = crowding_distance(lcb, ones)
+        score = nd.astype(F) * F(1e6) - jnp.minimum(crowd, F(1e5))
+        forced = dis > F(tau)
+        score = jnp.where(forced, -F(BIG), score)
+        order = jnp.argsort(score)[:n_exact]
+        return order, jnp.sum(forced).astype(jnp.int32), jnp.mean(dis)
+
+    def telemetry(sel_n, feas_n, cfeas, hv_run, best_run):
+        finite = jnp.all(jnp.isfinite(sel_n), axis=-1)
+        ok = finite & feas_n
+        sane = jnp.where(jnp.isfinite(sel_n), sel_n, F(BIG))
+        nd = dominance_counts(sane, ok)
+        front_size = jnp.sum((nd == 0) & ok).astype(jnp.int32)
+        hv_now = hv_run
+        if pairs:
+            hv_now = jnp.stack([
+                hypervolume_2d_jit(sel_n[:, [i, j]], hv_ref, valid=ok)
+                for i, j in pairs])
+            hv_run = jnp.maximum(hv_run, hv_now)
+        scal = jnp.where(finite, jnp.sum(sane, axis=-1), F(BIG))
+        best_run = jnp.minimum(best_run, jnp.min(scal))
+        tr = dict(front_size=front_size, hypervolume=hv_run, hv_now=hv_now,
+                  best=best_run, feasible_frac=jnp.mean(cfeas.astype(F)))
+        return hv_run, best_run, tr
+
+    def step(arr, sur, carry, k, imm_g):
+        pop, raw, sel, feas, hv_run, best_run = carry
+        k_mate, k_cx, k_mut = jax.random.split(k, 3)
+        nl = jnp.sum(arr["loopmask"], axis=1).astype(jnp.int32)
+
+        # --- variation: IDENTICAL to the ungated scan (same PRNG uses)
+        partners = jax.random.randint(k_mate, (N,), 0, N)
+        mates = jax.tree.map(lambda x: x[partners], pop)
+        children = jax.vmap(crossover)(jax.random.split(k_cx, N), pop, mates)
+        for r in range(cfg.mutations):
+            kr = jax.random.split(jax.random.fold_in(k_mut, r), N)
+            children = jax.vmap(
+                lambda kk, d: mutate(kk, d, space, cfg.fields,
+                                     nl=nl, bounds=arr["bounds"]))(
+                kr, children)
+        if n_imm:
+            children = jax.tree.map(
+                lambda c, f: c.at[:n_imm].set(f), children, imm_g)
+
+        # --- surrogate pre-filter: exact-evaluate only the chosen slots
+        order, n_forced, dis_mean = gate(sur, children)
+        picked = jax.tree.map(lambda x: x[order], children)
+        craw, csel, cfeas = eval_pop(picked, arr)
+
+        # --- environmental selection over the N + n_exact pool
+        a_pop = jax.tree.map(lambda x, y: jnp.concatenate([x, y]),
+                             pop, picked)
+        a_raw = jnp.concatenate([raw, craw])
+        a_sel = jnp.concatenate([sel, csel])
+        a_feas = jnp.concatenate([feas, cfeas])
+        finite = jnp.all(jnp.isfinite(a_sel), axis=-1)
+        a_sane = jnp.where(jnp.isfinite(a_sel), a_sel, F(BIG))
+        nd = dominance_counts(a_sane, finite)
+        crowd = crowding_distance(a_sane, finite)
+        keyv = jnp.where(finite,
+                         nd.astype(F) * F(1e6) - jnp.minimum(crowd, F(1e5)),
+                         F(BIG))
+        order_s = jnp.argsort(keyv)[:N]
+        pop_n = jax.tree.map(lambda x: x[order_s], a_pop)
+        raw_n = a_raw[order_s]
+        sel_n, feas_n = a_sel[order_s], a_feas[order_s]
+        hv_run, best_run, tr = telemetry(sel_n, feas_n, cfeas,
+                                         hv_run, best_run)
+        tr["forced_exact"] = n_forced
+        tr["disagreement"] = dis_mean
+        return ((pop_n, raw_n, sel_n, feas_n, hv_run, best_run),
+                (picked, craw, cfeas, tr))
+
+    def run(key, pop0, arr, imm, sur):
+        raw0 = jnp.full((N, len(METRIC_KEYS)), jnp.inf, F)
+        sel0 = jnp.full((N, len(idx)), jnp.inf, F)
+        feas0 = jnp.zeros((N,), bool)
+        hv0 = jnp.zeros((len(pairs),), F)
+        best0 = jnp.asarray(jnp.inf, F)
+        keys = jax.random.split(key, cfg.generations)
+        carry0 = (pop0, raw0, sel0, feas0, hv0, best0)
+        ((pop, raw, sel, _feas, _hv, _best),
+         (ev_designs, ev_raw, ev_feas, trace)) = jax.lax.scan(
+            lambda c, xs: step(arr, sur, c, *xs), carry0, (keys, imm))
+        return pop, raw, sel, ev_designs, ev_raw, ev_feas, trace
+
+    return run
 
 
 def _build_run(space, dims, idx, cfg, tech, n_isl: int = 1):

@@ -73,11 +73,13 @@ from ..core.workload import (WorkloadGraph, embedding_delta,
                              workload_features)
 from .archive import (MANIFEST_NAME, ArchiveManifest, ConvergenceTrace,
                       ManifestPolicy, ParetoArchive, atomic_savez,
-                      objective_pairs, pareto_front, spec_space_key)
+                      design_encoding_dim, objective_pairs, pareto_front,
+                      spec_space_key)
 from . import quantize
 from .locks import LockTimeout, file_lock, lock_path
 from .nsga import (ISLAND_AXIS, NSGAConfig, _static_key, make_nsga,
-                   make_nsga_fused)
+                   make_nsga_fused, make_nsga_gated)
+from .surrogate import Surrogate, SurrogateConfig, fit_surrogate, harvest_rows
 
 # the default archive cache is anchored to the repo root (four levels above
 # this file: src/repro/explore/service.py), NOT the process CWD — otherwise
@@ -262,6 +264,18 @@ class ExploreQuery:
     megabatch: bool = True          # allow this query's group to fuse with
     #                                 other problems into one compiled
     #                                 dispatch (see BudgetPolicy.megabatch)
+    surrogate: Optional[Dict] = None    # surrogate-gated evaluation: None
+    #                                 (off — the exact path, byte-for-byte
+    #                                 historical), or a dict of
+    #                                 ``SurrogateConfig`` overrides (``{}``
+    #                                 for defaults; ``True`` normalizes to
+    #                                 ``{}``).  An extra ``"exclude"`` key
+    #                                 lists archive keys held out of
+    #                                 surrogate training (benchmark
+    #                                 holdouts).  With no usable training
+    #                                 rows in the fleet cache the query
+    #                                 silently runs exact — bit-identical
+    #                                 to surrogate=None.
 
     def __post_init__(self):
         self.objectives = tuple(self.objectives)
@@ -271,6 +285,12 @@ class ExploreQuery:
         if bad:
             raise ValueError(f"unknown objectives {bad}; pick from "
                              f"{METRIC_KEYS}")
+        if self.surrogate is True:
+            self.surrogate = {}
+        if self.surrogate is not None and not isinstance(self.surrogate,
+                                                         dict):
+            raise ValueError("surrogate must be None, True or a dict of "
+                             "SurrogateConfig overrides")
 
     def build(self) -> Tuple[SystemSpec, DesignSpace]:
         """This query's (spec, space), built on demand and memoized."""
@@ -336,6 +356,26 @@ class ExploreResult:
     #                                 kill) ended the run before its budget:
     #                                 the front reflects partial progress
     #                                 and budget_covered was NOT bumped
+    surrogate_used: bool = False    # a fleet surrogate gated this group's
+    #                                 evaluations (False when not requested
+    #                                 OR the cache was too cold to fit one
+    #                                 — the latter runs the exact path,
+    #                                 bit-identical to surrogate=None)
+    surrogate_hits: int = 0         # candidate evaluations skipped on the
+    #                                 surrogate's say-so (the realized eval
+    #                                 savings)
+    surrogate_fallbacks: int = 0    # 1 when segment-mean ensemble
+    #                                 disagreement abandoned the surrogate
+    #                                 mid-run (exact for the remainder)
+
+
+@dataclasses.dataclass
+class SurrogateGate:
+    """A fitted fleet surrogate bound to one group's workload embedding —
+    everything ``_refine`` needs to gate a refinement's evaluations."""
+    model: Surrogate
+    embedding: np.ndarray
+    cfg: SurrogateConfig
 
 
 class ExplorationService:
@@ -551,7 +591,9 @@ class ExplorationService:
         from .api import Problem, Query, Session
         qs = [Query(Problem(q.graph, objectives=q.objectives,
                             ch_max=q.ch_max, space_kwargs=q.space_kwargs),
-                    budget=q.budget, engine="nsga", transfer=q.transfer)
+                    budget=q.budget, engine="nsga", transfer=q.transfer,
+                    engine_opts=({"surrogate": q.surrogate}
+                                 if q.surrogate is not None else None))
               for q in queries]
         return [r.raw for r in Session(service=self).submit(qs, key=key)]
 
@@ -695,7 +737,12 @@ class ExplorationService:
         obs.inc("explore.cache.hit" if warm else "explore.cache.miss")
         g.update(warm=warm, n_run=0, trace=None, plateaued=False,
                  banked=0, realloc=0, transferred_from=(), n_seeds=0,
-                 interrupted=False, plateau=PlateauState())
+                 interrupted=False, plateau=PlateauState(),
+                 # any group member asking for surrogate gating turns it
+                 # on for the shared run (like budget: max wins)
+                 surrogate=next((q.surrogate for q in g["queries"]
+                                 if q.surrogate is not None), None),
+                 sur_used=False, sur_hits=0, sur_fallbacks=0)
         if warm and ck not in self.manifest.entries:
             self._update_manifest(ck, g)         # backfill pre-manifest
             #                                      caches into the index
@@ -764,15 +811,56 @@ class ExplorationService:
         budget, union, arc = g["budget"], g["union"], g["arc"]
         with obs.span("explore.refine_group", key=ck, budget=budget) as sp:
             seeds = self._group_seeds(ck, g, key)
-            n_run, trace, plateaued, banked, interrupted = self._refine(
-                arc, g["spec"], g["space"], union, budget, key, seeds=seeds,
-                on_segment=self._segment_cb(on_segment, ck, "refine",
-                                            seq=seq),
-                plateau=g["plateau"], control=control,
-                checkpoint=self._ckpt_path(ck) if resume else None)
+            gate = (self._fit_gate(ck, g)
+                    if g["surrogate"] is not None else None)
+            n_run, trace, plateaued, banked, interrupted, sstats = \
+                self._refine(
+                    arc, g["spec"], g["space"], union, budget, key,
+                    seeds=seeds,
+                    on_segment=self._segment_cb(on_segment, ck, "refine",
+                                                seq=seq),
+                    plateau=g["plateau"], control=control,
+                    checkpoint=self._ckpt_path(ck) if resume else None,
+                    gate=gate)
+            g.update(sur_used=sstats["used"], sur_hits=sstats["hits"],
+                     sur_fallbacks=sstats["fallbacks"])
             self._book_refinement(ck, g, sp, n_run, trace, plateaued,
                                   banked, interrupted)
         g["elapsed"] = time.perf_counter() - t0
+
+    def _fit_gate(self, ck: str, g: Dict) -> Optional[SurrogateGate]:
+        """Fit the evaluation-gating surrogate for one opened group from
+        every OTHER cached archive the fleet manifest indexes (plus the
+        group's own archived rows, when it is a warm refinement).
+        Returns ``None`` when the harvest is too cold to fit
+        (``SurrogateConfig.min_rows``) — the caller then runs the exact
+        path, bit-identical to ``surrogate=None``."""
+        opts = dict(g["surrogate"])
+        exclude = tuple(opts.pop("exclude", ()))
+        try:
+            cfg = SurrogateConfig(**opts)
+        except TypeError as e:
+            raise ValueError(f"bad surrogate options "
+                             f"{sorted(opts)}: {e}") from None
+        arc = g["arc"]
+        emb = np.asarray(g["embedding"], np.float32).ravel()
+        design_dim = design_encoding_dim(
+            {k: v[0] for k, v in arc.designs.items()})
+        with obs.span("explore.surrogate_fit", key=ck):
+            index = self.manifest.export_index(exclude=(ck,) + exclude)
+            X, Y = harvest_rows(index, self._load_neighbor, design_dim,
+                                emb.size)
+            own_X, own_Y = arc.export_rows()
+            if len(own_X):
+                own = np.concatenate(
+                    [own_X, np.tile(emb, (len(own_X), 1))], axis=1)
+                X = np.concatenate([X, own]) if len(X) else own
+                Y = np.concatenate([Y, own_Y]) if len(Y) else own_Y
+            sur = fit_surrogate(X, Y, cfg)
+        if sur is None:
+            obs.inc("explore.surrogate.cold")
+            return None
+        return SurrogateGate(model=sur, embedding=emb, cfg=cfg)
 
     # ---- cross-problem megabatching ----------------------------------------
     def _fuse_signature(self, g: Dict):
@@ -803,6 +891,10 @@ class ExplorationService:
             if not all(getattr(q, "megabatch", True)
                        for q in g["queries"]):
                 continue
+            if any(getattr(q, "surrogate", None) is not None
+                   for q in g["queries"]):
+                continue    # surrogate gating runs the sequential loop —
+                #             fusing gated lanes is a follow-on
             t0 = time.perf_counter()
             if self._open_group(ck, g):
                 g["elapsed"] = time.perf_counter() - t0     # warm: served
@@ -1201,7 +1293,7 @@ class ExplorationService:
             # quantize_down caps the spend at the available credit — the
             # ledger must never be overdrawn by pow2 rounding
             with obs.span("explore.reallocate", key=ck, pool=pool) as sp:
-                n_run, trace, plateaued, _, interrupted = self._refine(
+                n_run, trace, plateaued, _, interrupted, _ = self._refine(
                     arc, g["spec"], g["space"], g["union"], pool,
                     jax.random.fold_in(key, i), quantize_down=True,
                     on_segment=self._segment_cb(on_segment, ck, "realloc",
@@ -1257,7 +1349,10 @@ class ExplorationService:
                 n_evals_banked=g["banked"], n_evals_realloc=g["realloc"],
                 transferred_from=g["transferred_from"],
                 n_transfer_seeds=g["n_seeds"],
-                interrupted=g["interrupted"]))
+                interrupted=g["interrupted"],
+                surrogate_used=g["sur_used"],
+                surrogate_hits=g["sur_hits"],
+                surrogate_fallbacks=g["sur_fallbacks"]))
         return results
 
     def _effective_pop(self, budget: int, quantize_down: bool = False
@@ -1281,7 +1376,8 @@ class ExplorationService:
 
     def _ckpt_signature(self, objectives: Tuple[str, ...], budget: int,
                         pop: int, generations: int, chunk: int, key,
-                        seeds: Optional[Dict]) -> str:
+                        seeds: Optional[Dict],
+                        gate_digest: Optional[str] = None) -> str:
         """Identity of one deterministic refinement: everything that
         fixes the segment-by-segment PRNG/compute chain.  A checkpoint
         written under a different signature answers a DIFFERENT run and
@@ -1295,7 +1391,11 @@ class ExplorationService:
         h.update(repr((tuple(objectives), int(budget), int(pop),
                        int(generations), int(chunk), int(self.capacity),
                        repr(self.nsga), islands,
-                       repr(self.tech or DEFAULT_TECH))).encode())
+                       repr(self.tech or DEFAULT_TECH),
+                       gate_digest)).encode())
+        #             gate_digest: a surrogate-gated run's numeric stream
+        #             depends on the fitted model — a checkpoint written
+        #             under a different (or no) surrogate must not splice
         h.update(np.asarray(key).tobytes())
         if seeds is not None:
             for k in sorted(seeds):
@@ -1305,8 +1405,9 @@ class ExplorationService:
 
     @staticmethod
     def _save_ckpt(path, sig: str, s_next: int, spent_g: int,
-                   arc: ParetoArchive, filler: Dict,
-                   trace: ConvergenceTrace, st: PlateauState) -> None:
+                   spent_e: int, fell_back: bool, arc: ParetoArchive,
+                   filler: Dict, trace: ConvergenceTrace,
+                   st: PlateauState) -> None:
         """One atomic npz holding a CONSISTENT mid-run snapshot: the
         archive state after segment ``s_next - 1``'s insert, the evolving
         population that segment produced, the accumulated trace, and the
@@ -1318,6 +1419,11 @@ class ExplorationService:
         try:
             meta = dict(
                 sig=sig, s_next=int(s_next), spent_g=int(spent_g),
+                spent_e=int(spent_e),   # exact evaluations (differs from
+                #                         spent_g * pop under gating)
+                fell_back=bool(fell_back),  # disagreement abandoned the
+                #                         surrogate: a resume must stay
+                #                         exact, not re-enable the gate
                 streak=int(st.streak),
                 last_hv=([float(v) for v in st.last_hv]
                          if st.last_hv is not None else None),
@@ -1351,12 +1457,15 @@ class ExplorationService:
 
     @staticmethod
     def _load_ckpt(path, sig: str, arc: ParetoArchive, st: PlateauState
-                   ) -> Optional[Tuple[int, int, Dict, ConvergenceTrace]]:
+                   ) -> Optional[Tuple[int, int, Optional[int], bool,
+                                       Dict, ConvergenceTrace]]:
         """Restore a mid-run snapshot into ``arc``/``st`` if ``path``
         holds a checkpoint of THIS run (signature match, compatible
-        shapes).  Returns ``(s_next, spent_g, filler, trace)`` or
-        ``None`` (no/foreign/damaged checkpoint → start from scratch,
-        never fatal)."""
+        shapes).  Returns ``(s_next, spent_g, spent_e, fell_back,
+        filler, trace)`` — ``spent_e`` is ``None`` for pre-surrogate
+        checkpoints (the caller derives ``spent_g * pop``) — or ``None``
+        (no/foreign/damaged checkpoint → start from scratch, never
+        fatal)."""
         path = Path(path)
         if not path.exists():
             return None
@@ -1396,7 +1505,10 @@ class ExplorationService:
             st.last_hv = (np.asarray(meta["last_hv"], np.float64)
                           if meta["last_hv"] is not None else None)
             obs.inc("explore.resume.restored")
-            return int(meta["s_next"]), int(meta["spent_g"]), filler, trace
+            spent_e = meta.get("spent_e")
+            return (int(meta["s_next"]), int(meta["spent_g"]),
+                    int(spent_e) if spent_e is not None else None,
+                    bool(meta.get("fell_back", False)), filler, trace)
         except Exception as e:
             warnings.warn(f"discarding unreadable resume checkpoint "
                           f"{path}: {e}")
@@ -1408,9 +1520,9 @@ class ExplorationService:
                 seeds: Optional[Dict] = None, on_segment=None,
                 plateau: Optional[PlateauState] = None,
                 control: Optional[RunControl] = None,
-                checkpoint=None
+                checkpoint=None, gate: Optional[SurrogateGate] = None
                 ) -> Tuple[int, Optional[ConvergenceTrace], bool, int,
-                           bool]:
+                           bool, Dict[str, int]]:
         """Spend up to ~``budget`` evaluations improving the archive:
         warm-start the population from the cached front, evolve in scan
         segments, re-insert every evaluation, stop early on plateau.
@@ -1423,9 +1535,10 @@ class ExplorationService:
         budget; the service's ``nsga`` config supplies the population
         ceiling and variation knobs.
 
-        Returns ``(n_run, trace, plateaued, banked, interrupted)``:
-        evaluations spent by THIS attempt (a resumed run reports only
-        its residual spend; the archive's counters carry the total), the
+        Returns ``(n_run, trace, plateaued, banked, interrupted,
+        sur_stats)``: evaluations spent by THIS attempt (a resumed run
+        reports only its residual spend; the archive's counters carry
+        the total), the
         concatenated per-generation ``ConvergenceTrace`` spanning every
         attempt (with one archive-projected hypervolume row per
         segment; ``None`` if stopped before any segment ran), whether
@@ -1448,6 +1561,16 @@ class ExplorationService:
         0's population right behind the archive-front head — the transfer
         warm-start path.  Later segments carry the evolving population, so
         a bad seed is selected out after one generation.
+
+        ``gate`` (a ``SurrogateGate``) switches each segment to the
+        surrogate-gated scan: only ``cfg.n_exact(pop)`` of every
+        generation's candidates get exact evaluations (the rest are
+        skipped on the surrogate's ranking and counted as hits), and a
+        segment whose mean ensemble disagreement exceeds
+        ``gate.cfg.fallback_tau`` abandons the surrogate for the rest of
+        the run.  ``gate=None`` is byte-for-byte the historical exact
+        path.  The final ``sur_stats`` dict reports ``used`` / ``hits``
+        / ``fallbacks``.
         """
         policy = self.policy
         sched = quantize.schedule(budget, self.nsga.pop,
@@ -1458,6 +1581,21 @@ class ExplorationService:
         mesh = self._mesh_for(pop)
         run = make_nsga(spec, space, objectives, cfg, tech=self.tech,
                         mesh=mesh)
+        sur_stats = dict(used=False, hits=0, fallbacks=0)
+        run_g, sur, n_exact = None, None, pop
+        if gate is not None:
+            n_exact = gate.cfg.n_exact(pop)
+            if n_exact < pop and mesh is None:
+                # gating is mutually exclusive with island sharding (the
+                # gated scan is single-device); a meshed service quietly
+                # runs exact rather than fail the query
+                run_g = make_nsga_gated(spec, space, objectives, cfg,
+                                        tech=self.tech, n_exact=n_exact,
+                                        beta=gate.cfg.beta,
+                                        tau=gate.cfg.tau)
+                sur = gate.model.scan_arrays(gate.embedding)
+            else:
+                n_exact = pop
         # archive-projected hypervolume pairs, in METRIC_KEYS column space
         hv_pairs = [(METRIC_KEYS.index(objectives[i]),
                      METRIC_KEYS.index(objectives[j]))
@@ -1472,14 +1610,23 @@ class ExplorationService:
         st = plateau if plateau is not None else PlateauState()
         trace = None
         plateaued, interrupted, spent_g = False, False, 0
+        spent_e = 0                     # exact evaluations this attempt
         s0, spent0, sig = 0, 0, None    # spent0: chunks paid for by a
         #                                 killed earlier attempt
+        spent0_e = 0
         if checkpoint is not None:
-            sig = self._ckpt_signature(objectives, budget, pop,
-                                       generations, chunk, key, seeds)
+            sig = self._ckpt_signature(
+                objectives, budget, pop, generations, chunk, key, seeds,
+                gate_digest=(gate.model.digest()
+                             if run_g is not None else None))
             rest = self._load_ckpt(checkpoint, sig, arc, st)
             if rest is not None:
-                s0, spent0, filler, trace = rest
+                s0, spent0, r_e, fell_back0, filler, trace = rest
+                spent0_e = r_e if r_e is not None else spent0 * pop
+                if fell_back0 and run_g is not None:
+                    run_g = None        # the dead attempt had already
+                    sur_stats["used"] = True    # abandoned the surrogate
+                    sur_stats["fallbacks"] += 1
         for s in range(s0, n_seg):
             if control is not None and control.stopped:
                 interrupted = True      # the checkpoint (if any) stays:
@@ -1488,10 +1635,18 @@ class ExplorationService:
             # first call of this scan variant pays XLA lowering — attribute
             # it separately so plan-vs-actual tables and the segment-time
             # histogram aren't polluted by one-off compiles
-            compiled = not run.compile_state["executed"]
-            pop_s, _raw, _sel, ev_designs, ev_raw, ev_feas, tr = run(
-                jax.random.fold_in(k_run, s),
-                seed(filler, seeds if s == 0 else None))
+            active = run_g if run_g is not None else run
+            compiled = not active.compile_state["executed"]
+            if run_g is not None:
+                pop_s, _raw, _sel, ev_designs, ev_raw, ev_feas, tr = run_g(
+                    jax.random.fold_in(k_run, s),
+                    seed(filler, seeds if s == 0 else None), sur)
+                per_gen = n_exact       # only the gate's exact slots cost
+            else:
+                pop_s, _raw, _sel, ev_designs, ev_raw, ev_feas, tr = run(
+                    jax.random.fold_in(k_run, s),
+                    seed(filler, seeds if s == 0 else None))
+                per_gen = pop
             # archive EVERY evaluation of the segment, not just the
             # survivors — masked to feasible designs so the archive (and
             # every front served from it) never carries a
@@ -1501,10 +1656,26 @@ class ExplorationService:
                              ev_designs),
                 ev_raw.reshape(-1, ev_raw.shape[-1]),
                 mask=ev_feas.reshape(-1), count_evals=False)
-            arc.n_evals += pop * chunk   # one vmapped evaluation per step
-            spent_g += chunk
+            arc.n_evals += per_gen * chunk  # one vmapped evaluation per
+            spent_g += chunk                # step (gated: exact slots)
+            spent_e += per_gen * chunk
             filler = pop_s
-            seg_trace = ConvergenceTrace.from_scan(objectives, tr, pop)
+            seg_trace = ConvergenceTrace.from_scan(objectives, tr,
+                                                   per_gen)
+            if run_g is not None:
+                skipped = (pop - n_exact) * chunk
+                sur_stats["used"] = True
+                sur_stats["hits"] += skipped
+                obs.inc("explore.surrogate.hits", skipped)
+                obs.inc("explore.surrogate.forced_exact",
+                        int(np.sum(np.asarray(tr["forced_exact"]))))
+                dis = float(np.mean(np.asarray(tr["disagreement"])))
+                if dis > gate.cfg.fallback_tau:
+                    # the ensemble is out of its depth on this region of
+                    # the design space — exact for the rest of the run
+                    run_g = None
+                    sur_stats["fallbacks"] += 1
+                    obs.inc("explore.surrogate.fallbacks")
             hv_now = np.asarray([arc.projected_hypervolume(p)
                                  for p in hv_pairs])
             seg_trace.archive_hv = hv_now[None, :]
@@ -1535,18 +1706,24 @@ class ExplorationService:
                 #                         base, or a resume re-judges the
                 #                         seam against a stale vector
                 self._save_ckpt(checkpoint, sig, s + 1, spent0 + spent_g,
+                                spent0_e + spent_e,
+                                gate is not None and run_g is None,
                                 arc, filler, trace, st)
-        n_run = spent_g * pop
+        n_run = spent_e
         # the ledger may only be fed from budget the CALLER offered and
         # the run — ALL attempts of it — left unspent: the pow2
         # quantization headroom above the requested budget is not real
-        # credit, and a resumed attempt's own spend understates the total
-        banked = max(0, budget - (spent0 + spent_g) * pop) \
+        # credit, and a resumed attempt's own spend understates the
+        # total.  Only a PLATEAU banks — a gated run that merely spent
+        # less than its budget reports the savings as surrogate hits,
+        # not as ledger credit (reallocation would respend them and
+        # erase the saving)
+        banked = max(0, budget - (spent0_e + spent_e)) \
             if plateaued else 0
         if checkpoint is not None and not interrupted:
             Path(checkpoint).unlink(missing_ok=True)    # run complete:
             #                                 nothing left to resume
-        return n_run, trace, plateaued, banked, interrupted
+        return n_run, trace, plateaued, banked, interrupted, sur_stats
 
 
 def _seed_population(arc: ParetoArchive, pop: int, filler: Dict,

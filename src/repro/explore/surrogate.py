@@ -1,0 +1,394 @@
+"""Surrogate-gated evaluation over the fleet cache.
+
+Monad's search pays one exact analytical-model evaluation per candidate
+design, but the fleet cache accumulates every (design encoding, workload
+embedding) -> 4-metric evaluation the fleet has ever paid for — a free
+training set (the move Chiplet-Gym makes with its proxy cost model and
+Gemini with cheap pre-mapping bounds).  This module turns those rows
+into an ensemble-MLP surrogate fit in pure JAX:
+
+* ``harvest_rows`` — walk the manifest's ``export_index``, load each
+  cached archive and stack its ``ParetoArchive.export_rows`` output with
+  the problem's workload embedding appended: ``X = [flatten_design |
+  embedding]``, ``Y = raw 4-metric rows``.
+* ``fit_surrogate`` — normalize (zero-variance guarded), bootstrap-
+  resample one dataset per ensemble member, and train all members in one
+  jitted vmapped Adam loop over log-metrics.  Ensemble spread IS the
+  uncertainty signal: the gated NSGA scan forces exact evaluation of any
+  candidate the members disagree on.
+* ``Surrogate`` — the fitted model: ``predict`` (log-metric mean/std),
+  ``disagreement`` (mean normalized ensemble std), ``scan_arrays`` (the
+  runtime operand dict the gated scan consumes — the compiled runner is
+  cached on the surrogate's SHAPES, never its values), ``digest``
+  (checkpoint-signature identity).
+* ``NonlinearTrustModel`` / ``fit_nonlinear_trust`` — the same MLP
+  machinery applied to the manifest's transfer-outcome table, replacing
+  the ridge ``TrustModel`` once records are deep enough
+  (``NONLINEAR_TRUST_MIN``): same ``predict(delta) -> lift >= 0``
+  contract, but free to learn that only SOME embedding axes predict
+  transfer failure.
+
+The gating itself lives in ``nsga.make_nsga_gated`` (in-scan candidate
+ranking by predicted-Pareto optimism) and ``service._refine`` (segment-
+level fallback to exact evaluation when mean disagreement says the
+surrogate is out of its depth).  ``surrogate=off`` never touches any of
+this: the exact path is byte-for-byte the historical one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..obs import trace as obs
+from .archive import design_encoding_dim, flatten_design  # noqa: F401
+
+F = jnp.float32
+
+# transfer-outcome records needed before the non-linear trust head takes
+# over from the ridge TrustModel (below it, a 2-layer MLP just memorizes)
+NONLINEAR_TRUST_MIN = 32
+
+_EPS = 1e-8
+_METRIC_FLOOR = 1e-6        # raw metrics are positive; the clip only
+#                             guards degenerate/penalized rows
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateConfig:
+    """Gating + fitting knobs (hashable: rides compile cache keys).
+
+    ``exact_frac`` of each generation's candidate children get exact
+    evaluations (the rest live or die on the surrogate's ranking);
+    ``beta`` sets LCB optimism (predicted mean − beta·ensemble std);
+    ``tau`` is the per-candidate normalized-disagreement level above
+    which a candidate is FORCED into the exact-evaluation slots whatever
+    its rank; ``fallback_tau`` is the segment-mean disagreement above
+    which the service abandons the surrogate for the rest of the run
+    (counted as a fallback).  ``min_rows`` gates fitting itself: below
+    it the query runs the exact path, bit-identical to surrogate=off."""
+    exact_frac: float = 0.5
+    beta: float = 1.0
+    tau: float = 1.0
+    fallback_tau: float = 1.5
+    min_rows: int = 64
+    members: int = 4
+    hidden: int = 48
+    epochs: int = 300
+    lr: float = 3e-3
+    seed: int = 0
+
+    def n_exact(self, pop: int) -> int:
+        """Exact-evaluation slots per generation for a ``pop``-wide
+        candidate batch: at least 1, at most the whole batch."""
+        return min(max(int(round(pop * self.exact_frac)), 1), pop)
+
+
+# ---------------------------------------------------------------------------
+# ensemble MLP core (shared by the metric surrogate and the trust head)
+# ---------------------------------------------------------------------------
+def _init_params(key, members: int, din: int, hidden: int, dout: int
+                 ) -> Dict[str, jnp.ndarray]:
+    def member(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        s1 = jnp.sqrt(2.0 / din)
+        s2 = jnp.sqrt(2.0 / hidden)
+        return dict(
+            W1=jax.random.normal(k1, (din, hidden), F) * s1,
+            b1=jnp.zeros((hidden,), F),
+            W2=jax.random.normal(k2, (hidden, hidden), F) * s2,
+            b2=jnp.zeros((hidden,), F),
+            W3=jax.random.normal(k3, (hidden, dout), F) * s2,
+            b3=jnp.zeros((dout,), F))
+    return jax.vmap(member)(jax.random.split(key, members))
+
+
+def ensemble_forward(params: Dict, Xn) -> jnp.ndarray:
+    """(M, n, dout) member outputs for normalized inputs ``Xn`` (n, din).
+    The exact math the gated NSGA scan inlines — two tanh hidden layers,
+    linear head."""
+    def one(p):
+        h = jnp.tanh(Xn @ p["W1"] + p["b1"])
+        h = jnp.tanh(h @ p["W2"] + p["b2"])
+        return h @ p["W3"] + p["b3"]
+    return jax.vmap(one)(params)
+
+
+def _fit_ensemble(Xn, Yn, members: int, hidden: int, epochs: int,
+                  lr: float, key) -> Dict[str, jnp.ndarray]:
+    """Train ``members`` MLPs on bootstrap resamples of (Xn, Yn) with one
+    jitted full-batch Adam scan — ensemble diversity comes from both the
+    per-member init and the per-member resample."""
+    n, din = Xn.shape
+    dout = Yn.shape[1]
+    k_init, k_boot = jax.random.split(jnp.asarray(key))
+    params = _init_params(k_init, members, din, hidden, dout)
+    idx = jax.vmap(lambda k: jax.random.randint(k, (n,), 0, n))(
+        jax.random.split(k_boot, members))
+    Xb = jnp.asarray(Xn, F)[idx]          # (M, n, din)
+    Yb = jnp.asarray(Yn, F)[idx]          # (M, n, dout)
+
+    def loss(p, X, Y):
+        h = jnp.tanh(X @ p["W1"] + p["b1"])
+        h = jnp.tanh(h @ p["W2"] + p["b2"])
+        return jnp.mean((h @ p["W3"] + p["b3"] - Y) ** 2)
+
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def train_member(p0, X, Y):
+        m0 = jax.tree.map(jnp.zeros_like, p0)
+        v0 = jax.tree.map(jnp.zeros_like, p0)
+
+        def step(carry, t):
+            p, m, v = carry
+            g = jax.grad(loss)(p, X, Y)
+            m = jax.tree.map(lambda a, b_: b1 * a + (1 - b1) * b_, m, g)
+            v = jax.tree.map(lambda a, b_: b2 * a + (1 - b2) * b_ ** 2,
+                             v, g)
+            c1 = 1 - b1 ** (t + 1)
+            c2 = 1 - b2 ** (t + 1)
+            p = jax.tree.map(
+                lambda w, mm, vv: w - lr * (mm / c1)
+                / (jnp.sqrt(vv / c2) + eps), p, m, v)
+            return (p, m, v), ()
+
+        (p, _, _), _ = jax.lax.scan(step, (p0, m0, v0),
+                                    jnp.arange(epochs, dtype=F))
+        return p
+
+    return jax.jit(jax.vmap(train_member))(params, Xb, Yb)
+
+
+# ---------------------------------------------------------------------------
+# the metric surrogate
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Surrogate:
+    """A fitted ensemble surrogate: (design encoding | workload
+    embedding) -> log 4-metric vector, with ensemble spread as the
+    uncertainty signal.  ``params`` leaves carry a leading member axis;
+    normalization statistics make the model portable across metric
+    scales (zero-variance columns normalize to exactly 0, never NaN)."""
+    params: Dict[str, np.ndarray]
+    x_mean: np.ndarray
+    x_std: np.ndarray
+    y_mean: np.ndarray
+    y_std: np.ndarray
+    config: SurrogateConfig
+    n_rows: int
+
+    @property
+    def in_dim(self) -> int:
+        return int(self.x_mean.shape[0])
+
+    @property
+    def static_shape(self) -> Tuple[int, int, int]:
+        """(members, hidden, in_dim): everything the gated scan compiles
+        against — two surrogates of equal static_shape share a runner."""
+        return (int(self.params["b1"].shape[0]),
+                int(self.params["W1"].shape[2]), self.in_dim)
+
+    def _normalize(self, X):
+        return (jnp.asarray(X, F) - self.x_mean) / self.x_std
+
+    def predict(self, X) -> Tuple[np.ndarray, np.ndarray]:
+        """(mean, std) of the predicted LOG-metric vectors, (n, n_obj)
+        each — std is the de-normalized ensemble spread."""
+        out = ensemble_forward(
+            jax.tree.map(jnp.asarray, self.params), self._normalize(X))
+        mean = np.asarray(jnp.mean(out, 0)) * self.y_std + self.y_mean
+        std = np.asarray(jnp.std(out, 0)) * self.y_std
+        return mean, std
+
+    def disagreement(self, X) -> np.ndarray:
+        """(n,) mean NORMALIZED ensemble std per candidate — the scale-
+        free signal the gate thresholds (``config.tau``)."""
+        out = ensemble_forward(
+            jax.tree.map(jnp.asarray, self.params), self._normalize(X))
+        return np.asarray(jnp.mean(jnp.std(out, 0), axis=-1))
+
+    def scan_arrays(self, embedding) -> Dict[str, jnp.ndarray]:
+        """The runtime operand dict the gated NSGA runner consumes: the
+        ensemble weights, input normalization, and this problem's
+        workload embedding.  Values ride as arrays — refitting the
+        surrogate never recompiles the scan."""
+        d = {k: jnp.asarray(v) for k, v in self.params.items()}
+        d["x_mean"] = jnp.asarray(self.x_mean, F)
+        d["x_std"] = jnp.asarray(self.x_std, F)
+        d["emb"] = jnp.asarray(np.asarray(embedding).ravel(), F)
+        return d
+
+    def digest(self) -> str:
+        """Content hash of the fitted model — part of the resume-
+        checkpoint signature: a checkpoint written under a different
+        surrogate answers a DIFFERENT numeric stream."""
+        h = hashlib.sha256()
+        for k in sorted(self.params):
+            h.update(k.encode())
+            h.update(np.ascontiguousarray(self.params[k]).tobytes())
+        for a in (self.x_mean, self.x_std, self.y_mean, self.y_std):
+            h.update(np.ascontiguousarray(a).tobytes())
+        h.update(repr(self.config).encode())
+        return h.hexdigest()[:16]
+
+
+def _norm_stats(A) -> Tuple[np.ndarray, np.ndarray]:
+    """(mean, std) with the zero-variance guard: constant columns get
+    std 1, so they normalize to exactly 0 instead of NaN."""
+    mean = A.mean(axis=0)
+    std = A.std(axis=0)
+    return mean.astype(np.float32), np.where(
+        std < _EPS, 1.0, std).astype(np.float32)
+
+
+def fit_surrogate(X, Y, cfg: SurrogateConfig = SurrogateConfig(),
+                  key=None) -> Optional[Surrogate]:
+    """Fit the ensemble on harvested rows: ``X`` (n, din) float design
+    encodings + embeddings, ``Y`` (n, n_obj) RAW metric rows (trained in
+    log space — the same scale the NSGA selection ranks on).  ``None``
+    below ``cfg.min_rows`` usable rows; non-finite rows are dropped."""
+    X = np.asarray(X, np.float32)
+    Y = np.asarray(Y, np.float64)
+    if X.ndim != 2 or Y.ndim != 2 or X.shape[0] != Y.shape[0]:
+        raise ValueError(f"bad dataset shapes {X.shape} / {Y.shape}")
+    ylog = np.log(np.maximum(Y, _METRIC_FLOOR))
+    ok = np.all(np.isfinite(X), axis=1) & np.all(np.isfinite(ylog), axis=1)
+    X, ylog = X[ok], ylog[ok]
+    if X.shape[0] < max(int(cfg.min_rows), 2):
+        return None
+    x_mean, x_std = _norm_stats(X)
+    y_mean, y_std = _norm_stats(ylog)
+    Xn = (X - x_mean) / x_std
+    Yn = ((ylog - y_mean) / y_std).astype(np.float32)
+    key = jax.random.PRNGKey(cfg.seed) if key is None else key
+    with obs.span("surrogate.fit", rows=int(X.shape[0]),
+                  members=cfg.members):
+        params = _fit_ensemble(Xn, Yn, cfg.members, cfg.hidden,
+                               cfg.epochs, cfg.lr, key)
+    obs.inc("explore.surrogate.fits")
+    obs.inc("explore.surrogate.rows", int(X.shape[0]))
+    return Surrogate(
+        params={k: np.asarray(v) for k, v in params.items()},
+        x_mean=x_mean, x_std=x_std,
+        y_mean=y_mean.astype(np.float32), y_std=y_std,
+        config=cfg, n_rows=int(X.shape[0]))
+
+
+def harvest_rows(index: Sequence[Tuple[str, np.ndarray]],
+                 load_archive: Callable[[str], Optional[object]],
+                 design_dim: int, embed_dim: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Assemble the surrogate training set from cached archives.
+
+    ``index`` is ``ArchiveManifest.export_index`` output; ``load_archive``
+    resolves a key to a ``ParetoArchive`` (or ``None`` — broken/absent
+    archives are skipped, counted on
+    ``explore.surrogate.skipped_archives``).  Archives whose design
+    encoding or embedding dimension disagrees with the target problem's
+    are skipped the same way — a drifted-layout neighbor must not poison
+    (or crash) the fit.  Returns ``X`` (n, design_dim + embed_dim)
+    float32 and ``Y`` (n, n_obj) float64 raw metrics."""
+    Xs: List[np.ndarray] = []
+    Ys: List[np.ndarray] = []
+    skipped = 0
+    for key, emb in index:
+        emb = np.asarray(emb, np.float64).ravel()
+        if emb.size != embed_dim:
+            skipped += 1
+            continue
+        arc = load_archive(key)
+        if arc is None:
+            skipped += 1
+            continue
+        Xd, Y = arc.export_rows()
+        if Xd.shape[1] != design_dim:
+            skipped += 1
+            continue
+        if not len(Xd):
+            continue
+        Xs.append(np.concatenate(
+            [Xd, np.tile(emb.astype(np.float32), (len(Xd), 1))], axis=1))
+        Ys.append(Y)
+    if skipped:
+        obs.inc("explore.surrogate.skipped_archives", skipped)
+    if not Xs:
+        return (np.zeros((0, design_dim + embed_dim), np.float32),
+                np.zeros((0, 4), np.float64))
+    return np.concatenate(Xs), np.concatenate(Ys)
+
+
+# ---------------------------------------------------------------------------
+# the non-linear transfer-trust head
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class NonlinearTrustModel:
+    """MLP lift model over |embedding delta| features — the deep-record
+    replacement for the ridge ``TrustModel``, same contract: ``predict``
+    clamps at 0 and answers dimension-mismatched deltas with a neutral
+    0.0 (consumers divide distances by ``1 + lift``)."""
+    params: Dict[str, np.ndarray]
+    x_mean: np.ndarray
+    x_std: np.ndarray
+    y_mean: float
+    y_std: float
+    dim: int
+
+    def predict(self, delta) -> float:
+        d = np.abs(np.asarray(delta, np.float64).ravel())
+        if d.shape[0] != self.dim:
+            return 0.0
+        xn = (d.astype(np.float32) - self.x_mean) / self.x_std
+        out = ensemble_forward(
+            jax.tree.map(jnp.asarray, self.params), jnp.asarray(xn[None]))
+        lift = float(jnp.mean(out)) * self.y_std + self.y_mean
+        return max(lift, 0.0)
+
+
+def fit_nonlinear_trust(records: Sequence[Dict],
+                        dim: Optional[int] = None,
+                        min_records: int = NONLINEAR_TRUST_MIN,
+                        members: int = 2, hidden: int = 16,
+                        epochs: int = 300, lr: float = 1e-2,
+                        seed: int = 0) -> Optional[NonlinearTrustModel]:
+    """Fit the non-linear trust head on transfer-outcome records (dicts
+    with ``delta`` and ``lift``), modal-dim filtered exactly like
+    ``fit_trust_model`` (skips counted on the same
+    ``explore.trust.skipped_records`` counter).  ``None`` below
+    ``min_records`` usable rows — the caller falls back to the ridge."""
+    usable = [r for r in records
+              if np.all(np.isfinite(np.asarray(r["delta"], np.float64)))
+              and np.isfinite(r["lift"])]
+    if not usable:
+        return None
+    sizes = [np.asarray(r["delta"]).size for r in usable]
+    if dim is None:
+        counts: Dict[int, int] = {}
+        for s in sizes:
+            counts[s] = counts.get(s, 0) + 1
+        dim = max(counts, key=lambda s: (counts[s],
+                                         max(i for i, sz in enumerate(sizes)
+                                             if sz == s)))
+    kept = [r for r in usable if np.asarray(r["delta"]).size == dim]
+    if len(kept) < len(usable):
+        obs.inc("explore.trust.skipped_records", len(usable) - len(kept))
+    if len(kept) < max(int(min_records), 2):
+        return None
+    X = np.stack([np.abs(np.asarray(r["delta"], np.float64).ravel())
+                  for r in kept]).astype(np.float32)
+    y = np.asarray([float(r["lift"]) for r in kept], np.float64)[:, None]
+    x_mean, x_std = _norm_stats(X)
+    y_mean, y_std = _norm_stats(y)
+    Xn = (X - x_mean) / x_std
+    Yn = ((y - y_mean) / y_std).astype(np.float32)
+    params = _fit_ensemble(Xn, Yn, members, hidden, epochs, lr,
+                           jax.random.PRNGKey(seed))
+    obs.inc("explore.trust.nonlinear_fits")
+    return NonlinearTrustModel(
+        params={k: np.asarray(v) for k, v in params.items()},
+        x_mean=x_mean, x_std=x_std,
+        y_mean=float(y_mean[0]), y_std=float(y_std[0]), dim=int(dim))

@@ -9,7 +9,6 @@ on the VPU over the same VMEM tile.  Grid tiles K into (bn, bm) VMEM blocks.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -20,37 +19,43 @@ BLOCK = 128
 SQRT5 = math.sqrt(5.0)
 
 
-def _cov_kernel(x_ref, z_ref, o_ref, *, lengthscale: float):
+def _cov_kernel(x_ref, z_ref, ls_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)           # (bn, d)
     z = z_ref[...].astype(jnp.float32)           # (bm, d)
+    ls = ls_ref[0, 0]                            # (1, 1) scalar operand
     xx = jnp.sum(x * x, axis=1, keepdims=True)   # (bn, 1)
     zz = jnp.sum(z * z, axis=1, keepdims=True).T  # (1, bm)
     xz = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
     d2 = jnp.maximum(xx + zz - 2.0 * xz, 1e-12)
-    r = jnp.sqrt(d2) / lengthscale
+    r = jnp.sqrt(d2) / ls
     o_ref[...] = ((1.0 + SQRT5 * r + 5.0 / 3.0 * r * r)
                   * jnp.exp(-SQRT5 * r)).astype(o_ref.dtype)
 
 
-def matern52_pallas(X1, X2, lengthscale: float = 0.3, block: int = BLOCK,
+def matern52_pallas(X1, X2, lengthscale=0.3, block: int = BLOCK,
                     interpret: bool = False):
     """X1: (n, d); X2: (m, d) -> K (n, m) float32.  n, m % block handled by
-    padding in the ops wrapper."""
+    padding in the ops wrapper.
+
+    ``lengthscale`` is a runtime operand (Python float or traced scalar),
+    not a compile-time static — hyperparameter sweeps reuse one compiled
+    kernel instead of recompiling per value."""
     n, d = X1.shape
     m = X2.shape[0]
     bn = min(block, n)
     bm = min(block, m)
     assert n % bn == 0 and m % bm == 0
-    kernel = functools.partial(_cov_kernel, lengthscale=lengthscale)
+    ls = jnp.asarray(lengthscale, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
-        kernel,
+        _cov_kernel,
         grid=(n // bn, m // bm),
         in_specs=[
             pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
         interpret=interpret,
-    )(X1.astype(jnp.float32), X2.astype(jnp.float32))
+    )(X1.astype(jnp.float32), X2.astype(jnp.float32), ls)

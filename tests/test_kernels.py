@@ -188,6 +188,23 @@ def test_gp_cov_psd_and_unit_diag():
     assert evs.min() > 0
 
 
+def test_gp_cov_single_compile_across_lengthscale_sweep():
+    """lengthscale is a runtime operand, not a compile-time static: a
+    hyperparameter sweep under jit must hit ONE compiled kernel, not one
+    per value."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    X1 = jax.random.normal(ks[0], (16, 6))
+    X2 = jax.random.normal(ks[1], (16, 6))
+    f = jax.jit(lambda ls: matern52_pallas(X1, X2, ls, block=8,
+                                           interpret=True))
+    for ls in (0.1, 0.3, 0.9, 2.7):
+        out = f(jnp.float32(ls))
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(matern52_ref(X1, X2, ls)),
+                                   atol=1e-5, rtol=1e-5)
+    assert f._cache_size() == 1
+
+
 # ---------------------------------------------------------------------------
 # Pareto dominance counts
 # ---------------------------------------------------------------------------

@@ -1,0 +1,234 @@
+"""Tests for surrogate-gated evaluation (``repro.explore.surrogate`` +
+the service/api wiring): dataset export layout, degenerate-fit guards,
+the off/cold bit-identity contract, realized eval savings, and the
+disagreement fallback."""
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro.explore.archive import (ArchiveManifest, design_encoding_dim,
+                                   flatten_design)
+from repro.explore.service import (BudgetPolicy, ExplorationService,
+                                   ExploreQuery)
+from repro.explore.surrogate import (NONLINEAR_TRUST_MIN, NonlinearTrustModel,
+                                     SurrogateConfig, fit_nonlinear_trust,
+                                     fit_surrogate, harvest_rows)
+
+TINY_SPACE_KW = dict(max_shape=(16, 16, 4, 4, 1, 2))
+OBJ = ("latency_ns", "cost_usd")
+KEY = jax.random.PRNGKey(0)
+
+
+def _graph():
+    return C.presets.bert_mms()["att2"]
+
+
+def _svc(tmp_path, name="c"):
+    return ExplorationService(cache_dir=tmp_path / name, capacity=128,
+                              policy=BudgetPolicy(adaptive=False))
+
+
+def _query(budget=64, surrogate=None):
+    return ExploreQuery(_graph(), OBJ, budget=budget, ch_max=2,
+                        space_kwargs=TINY_SPACE_KW, surrogate=surrogate)
+
+
+# ---------------------------------------------------------------------------
+# dataset export: flatten_design <-> export_rows layout
+# ---------------------------------------------------------------------------
+def test_export_rows_matches_flatten_design_layout(tmp_path):
+    svc = _svc(tmp_path)
+    svc.run_queries([_query(budget=32)], key=KEY)
+    arc = next(iter(svc._archives.values()))
+    X, Y = arc.export_rows()
+    template = {k: v[0] for k, v in arc.designs.items()}
+    assert X.shape == (len(np.flatnonzero(arc.valid)),
+                       design_encoding_dim(template))
+    assert Y.shape == (X.shape[0], 4)
+    assert np.all(np.isfinite(X)) and np.all(np.isfinite(Y))
+    # row i is exactly flatten_design of valid entry i — the gated scan
+    # encodes candidates with the same helper, so the layouts must agree
+    valid = np.flatnonzero(arc.valid)
+    for row, i in zip(X[:4], valid[:4]):
+        d = {k: v[i] for k, v in arc.designs.items()}
+        np.testing.assert_allclose(row, np.asarray(flatten_design(d)),
+                                   rtol=1e-6)
+
+
+def test_export_rows_empty_archive(tmp_path):
+    svc = _svc(tmp_path)
+    g = _graph()
+    spec = C.SystemSpec.build(g, ch_max=2)
+    arc = svc.archive_for(spec, C.DesignSpace(spec, **TINY_SPACE_KW))
+    X, Y = arc.export_rows()
+    assert X.shape[0] == 0 and Y.shape == (0, 4)
+    assert X.shape[1] == design_encoding_dim(
+        {k: v[0] for k, v in arc.designs.items()})
+
+
+# ---------------------------------------------------------------------------
+# fitting degeneracies
+# ---------------------------------------------------------------------------
+def test_fit_surrogate_below_min_rows_returns_none():
+    rng = np.random.default_rng(0)
+    X = rng.random((10, 6)).astype(np.float32)
+    Y = rng.random((10, 4)) + 0.5
+    assert fit_surrogate(X, Y, SurrogateConfig(min_rows=64)) is None
+
+
+def test_fit_surrogate_constant_metric_zero_variance():
+    """A constant metric column (zero variance) must fit without NaN and
+    predict (approximately) the constant back."""
+    rng = np.random.default_rng(1)
+    X = rng.random((48, 6)).astype(np.float32)
+    Y = np.column_stack([np.full(48, 2.0),            # constant column
+                         1.0 + rng.random((48, 3))])
+    cfg = SurrogateConfig(min_rows=16, epochs=300)
+    sur = fit_surrogate(X, Y, cfg)
+    assert sur is not None
+    mean, std = sur.predict(X[:8])
+    assert np.all(np.isfinite(mean)) and np.all(np.isfinite(std))
+    # zero-variance column: y_std guard pins the denormalized prediction
+    # near the constant's log and the ensemble spread near zero (a
+    # shared-trunk MLP never nails it exactly — loose tolerance)
+    np.testing.assert_allclose(mean[:, 0], np.log(2.0), atol=0.35)
+    assert np.all(std[:, 0] < 0.35)
+    assert np.all(np.isfinite(sur.disagreement(X[:8])))
+
+
+def test_fit_surrogate_drops_nonfinite_rows():
+    rng = np.random.default_rng(2)
+    X = rng.random((40, 5)).astype(np.float32)
+    Y = 1.0 + rng.random((40, 4))
+    X[3, 0] = np.nan
+    Y[7, 2] = np.inf
+    sur = fit_surrogate(X, Y, SurrogateConfig(min_rows=16, epochs=50))
+    assert sur is not None and sur.n_rows == 38
+
+
+def test_surrogate_config_n_exact_bounds():
+    cfg = SurrogateConfig(exact_frac=0.5)
+    assert cfg.n_exact(16) == 8
+    assert cfg.n_exact(1) == 1
+    assert SurrogateConfig(exact_frac=0.0).n_exact(16) == 1
+    assert SurrogateConfig(exact_frac=1.0).n_exact(16) == 16
+
+
+def test_harvest_rows_skips_mismatched_layouts():
+    rows = np.random.default_rng(3).random((6, 10)).astype(np.float32)
+    objs = 1.0 + np.random.default_rng(4).random((6, 4))
+
+    class FakeArc:
+        def export_rows(self):
+            return rows, objs
+
+    index = [("good", np.ones(3)), ("bad_emb", np.ones(5)),
+             ("broken", np.ones(3))]
+    X, Y = harvest_rows(index,
+                        lambda k: None if k == "broken" else FakeArc(),
+                        design_dim=10, embed_dim=3)
+    assert X.shape == (6, 13) and Y.shape == (6, 4)
+    np.testing.assert_allclose(X[:, :10], rows)
+    np.testing.assert_allclose(X[:, 10:], 1.0)
+
+
+# ---------------------------------------------------------------------------
+# the off/cold bit-identity contract
+# ---------------------------------------------------------------------------
+def test_query_surrogate_validation():
+    q = _query(surrogate=True)
+    assert q.surrogate == {}                # True normalizes to defaults
+    with pytest.raises(ValueError, match="surrogate"):
+        _query(surrogate="yes")
+
+
+def test_cold_cache_runs_exact_bit_identical(tmp_path):
+    """surrogate requested on an EMPTY cache: nothing to fit, so the run
+    must be byte-for-byte the surrogate=None run."""
+    ra, = _svc(tmp_path, "a").run_queries([_query(surrogate=True)], key=KEY)
+    rb, = _svc(tmp_path, "b").run_queries([_query()], key=KEY)
+    assert not ra.surrogate_used and ra.surrogate_hits == 0
+    assert ra.n_evals_run == rb.n_evals_run
+    np.testing.assert_array_equal(ra.front_objs, rb.front_objs)
+    np.testing.assert_array_equal(ra.front_metrics, rb.front_metrics)
+
+
+# ---------------------------------------------------------------------------
+# gated refinement through the service
+# ---------------------------------------------------------------------------
+def test_gated_run_spends_fewer_exact_evals(tmp_path):
+    svc = _svc(tmp_path)
+    svc.run_queries([_query(budget=64)], key=KEY)     # training rows
+    r, = svc.run_queries([_query(budget=256,
+                                 surrogate={"min_rows": 8, "epochs": 60})],
+                         key=jax.random.PRNGKey(7))
+    assert r.surrogate_used
+    assert r.surrogate_fallbacks == 0
+    assert r.surrogate_hits > 0
+    # every generation's skipped candidates are exactly the gate's
+    # non-exact slots: spent + skipped reconstructs the exact schedule
+    from repro.explore import quantize
+    sched = quantize.schedule(256, svc.nsga.pop,
+                              svc.policy.chunk_generations)
+    total = sched.pop * sched.chunk * sched.n_seg
+    assert r.n_evals_run + r.surrogate_hits == total
+    assert r.n_evals_run < total
+    assert len(r.front_objs) > 0
+
+
+def test_disagreement_fallback_abandons_surrogate(tmp_path):
+    """fallback_tau below any achievable disagreement: the first gated
+    segment trips the service-level fallback and the rest of the run is
+    exact."""
+    svc = _svc(tmp_path)
+    svc.run_queries([_query(budget=64)], key=KEY)
+    r, = svc.run_queries(
+        [_query(budget=256, surrogate={"min_rows": 8, "epochs": 60,
+                                       "fallback_tau": -1.0})],
+        key=jax.random.PRNGKey(7))
+    assert r.surrogate_used
+    assert r.surrogate_fallbacks == 1
+    # only the first segment was gated — later segments spent exact
+    gated_all, = svc.run_queries(
+        [_query(budget=257, surrogate={"min_rows": 8, "epochs": 60})],
+        key=jax.random.PRNGKey(8))      # distinct budget => fresh refine
+    assert r.surrogate_hits <= gated_all.surrogate_hits
+
+
+# ---------------------------------------------------------------------------
+# the non-linear trust head
+# ---------------------------------------------------------------------------
+def test_fit_nonlinear_trust_contract():
+    rng = np.random.default_rng(5)
+    records = ([dict(delta=rng.random(4) * 0.1, lift=0.9)
+                for _ in range(20)]
+               + [dict(delta=2.0 + rng.random(4), lift=0.05)
+                  for _ in range(20)])
+    tm = fit_nonlinear_trust(records, epochs=150)
+    assert isinstance(tm, NonlinearTrustModel)
+    near = tm.predict(np.zeros(4))
+    far = tm.predict(np.full(4, 2.5))
+    assert near >= 0.0 and far >= 0.0         # clamped at zero
+    assert near > far                         # learned the structure
+    assert tm.predict(np.zeros(9)) == 0.0     # dim mismatch => neutral
+
+
+def test_fit_nonlinear_trust_below_min_returns_none():
+    records = [dict(delta=np.ones(3), lift=0.5) for _ in range(4)]
+    assert fit_nonlinear_trust(records) is None
+
+
+def test_manifest_trust_model_switches_to_nonlinear():
+    rng = np.random.default_rng(6)
+    m = ArchiveManifest()
+    for i in range(NONLINEAR_TRUST_MIN):
+        lift = 0.9 if i % 2 == 0 else 0.1
+        delta = (rng.random(4) * 0.1 if i % 2 == 0
+                 else 2.0 + rng.random(4))
+        m.record_transfer(f"s{i}", "d", delta, lift)
+    tm = m.trust_model(dim=4)
+    assert isinstance(tm, NonlinearTrustModel)
+    assert tm.predict(np.zeros(4)) >= 0.0

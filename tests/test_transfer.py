@@ -425,6 +425,47 @@ def test_trust_model_fit_predict_and_reweighting():
         assert wtd[k] <= raw[k] + 1e-12
 
 
+def test_trust_model_predict_clamps_negative_lift():
+    """Regression: an adversarial weight vector (large negative slopes)
+    used to drive predicted lift below -1, and nearest()'s
+    dist / (1 + lift) reweighting would flip or explode the ranking.
+    predict() now clamps at 0 as its docstring always promised."""
+    tm = TrustModel(weights=np.array([0.5, -10.0, -10.0, -10.0, -10.0]))
+    assert tm.predict(np.full(4, 5.0)) == 0.0
+    assert tm.predict(np.zeros(4)) == 0.5
+    # reweighted distance stays finite, positive and monotone even for
+    # deltas far outside the fitted range
+    m = ArchiveManifest(policy=ManifestPolicy())
+    m.update("a", np.zeros(4), (1, 2, 1), 8, 8, (), digest={})
+    m.update("b", np.full(4, 8.0), (1, 2, 1), 8, 8, (), digest={})
+    out = dict(m.nearest(np.full(4, 7.0), k=2, trust=tm))
+    assert all(np.isfinite(v) and v >= 0.0 for v in out.values())
+    assert out["b"] < out["a"]
+
+
+def test_fit_trust_model_uses_modal_dim():
+    """Regression: dim used to default to the LAST record's delta size,
+    so one drifted-layout straggler filtered out the whole majority-dim
+    history.  The modal dim wins now; the straggler is skipped (and
+    counted on explore.trust.skipped_records)."""
+    rng = np.random.default_rng(1)
+    records = [{"src": f"s{i}", "dst": "d",
+                "delta": rng.random(4), "lift": 0.5}
+               for i in range(6)]
+    records.append({"src": "drift", "dst": "d",
+                    "delta": rng.random(9), "lift": 0.5})
+    tm = fit_trust_model(records)
+    assert isinstance(tm, TrustModel)
+    assert tm.weights.shape == (5,)              # fitted on the 4-dim majority
+    # a 2-vs-2 count tie breaks toward the freshest layout (9-dim, last)
+    tied = records[:2] + [{"src": "n1", "dst": "d",
+                           "delta": rng.random(9), "lift": 0.4},
+                          {"src": "n2", "dst": "d",
+                           "delta": rng.random(9), "lift": 0.6}]
+    tm2 = fit_trust_model(tied, min_records=2)
+    assert tm2 is not None and tm2.weights.shape == (10,)
+
+
 def test_embedding_delta_symmetric_and_zero_on_match():
     lib = C.presets.workload_library()
     a = workload_features(lib["attn_qwen2_72b"])
