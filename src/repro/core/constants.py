@@ -18,6 +18,8 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 
 # ---------------------------------------------------------------------------
 # Packaging technology ids (paper Sec. IV-B: encoded as 0-2)
@@ -34,6 +36,11 @@ class TechConstants:
     # --- timing -----------------------------------------------------------
     clock_ghz: float = 1.0                # core clock; 1 cycle == 1 ns
     router_delay_ns: float = 20.0         # t_s: per-hop switch delay (head flit)
+    # fixed per-external-tile launch overhead (DMA descriptor setup, drain).
+    # Real systolic arrays pay a constant cost each time a tile's operands
+    # are (re)staged from DRAM; the pure pipeline model omits it.  Default 0
+    # keeps the uncalibrated model bit-identical; calibration fits it.
+    t_tile_overhead_ns: float = 0.0
 
     # --- datatype ---------------------------------------------------------
     bytes_per_elem: int = 2               # fp16/bf16 operands
@@ -96,8 +103,108 @@ class TechConstants:
     c_process: float = 5.0                # assembly/test per package
     interposer_margin: float = 1.15       # interposer area vs sum of die area
 
+    # --- calibration correction factors ------------------------------------
+    # Per-metric multiplicative corrections applied at the very end of
+    # evaluate_arrays.  1.0 is the exact multiplicative identity for every
+    # finite float, so the default model stays bit-identical; repro.calib
+    # fits them (in log-space) against measured ground truth.
+    corr_latency: float = 1.0
+    corr_energy: float = 1.0
+    corr_area: float = 1.0
+    corr_cost: float = 1.0
+
 
 DEFAULT_TECH = TechConstants()
+
+
+# ---------------------------------------------------------------------------
+# Calibration support: stable identity + serialization + fittable whitelist
+# ---------------------------------------------------------------------------
+
+def tech_to_dict(tech: TechConstants) -> dict:
+    """Serialize a TechConstants to a JSON-clean dict (tuples -> lists)."""
+    out = {}
+    for f in dataclasses.fields(tech):
+        v = getattr(tech, f.name)
+        out[f.name] = list(v) if isinstance(v, tuple) else v
+    return out
+
+
+def tech_from_dict(d: dict) -> TechConstants:
+    """Inverse of :func:`tech_to_dict`.  Unknown keys are rejected loudly;
+    missing keys fall back to the field default (forward compatibility for
+    artifacts written before a field existed)."""
+    names = {f.name for f in dataclasses.fields(TechConstants)}
+    unknown = set(d) - names
+    if unknown:
+        raise KeyError(f"unknown TechConstants fields: {sorted(unknown)}")
+    kwargs = {}
+    for f in dataclasses.fields(TechConstants):
+        if f.name not in d:
+            continue
+        v = d[f.name]
+        if isinstance(f.default, tuple):
+            v = tuple(v)
+        elif isinstance(f.default, int) and not isinstance(f.default, bool):
+            v = int(v) if float(v) == int(v) else float(v)
+        else:
+            v = float(v)
+        kwargs[f.name] = v
+    return TechConstants(**kwargs)
+
+
+def tech_key(tech: TechConstants | None = None) -> str:
+    """Stable content digest of a TechConstants.
+
+    This — not ``repr()`` — is the canonical tech identity everywhere one is
+    needed (archive/manifest cache keys, provenance, calibrated-preset
+    artifacts).  Values are serialized with ``repr(float(...))`` which is
+    exact for Python floats, so two structurally-equal instances always share
+    a key and any field change (including a fitted correction factor) yields
+    a new one.
+    """
+    tech = DEFAULT_TECH if tech is None else tech
+    payload = json.dumps(tech_to_dict(tech), sort_keys=True, separators=(",", ":"),
+                         default=repr)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+#: TechConstants fields the calibration fit is allowed to move.  Everything
+#: here is a positive scalar (log-space reparameterization assumes > 0 after
+#: flooring); integers, tuples and geometry-defining fields stay frozen.
+FITTABLE_FIELDS = (
+    # timing
+    "router_delay_ns", "t_tile_overhead_ns",
+    # energy
+    "e_mac_pj", "e_reg_pj_bit", "e_core_sram_pj_bit", "e_chip_sram_pj_bit",
+    "e_dram_pj_bit", "e_router_pj_bit",
+    # area
+    "a_pe", "a_sram_per_mb", "a_router", "a_core_overhead",
+    "a_chiplet_overhead",
+    # bandwidth
+    "dram_bw", "core_buf_bw", "chip_buf_bw", "chip_noc_bw",
+    # cost
+    "wafer_cost", "defect_density_mm2", "c_substrate_mm2", "c_process",
+    # per-metric corrections
+    "corr_latency", "corr_energy", "corr_area", "corr_cost",
+)
+
+#: metric -> fields guaranteed to move that metric on the golden design used
+#: by the differentiability regression test (tests/test_calib.py).  The
+#: bandwidth fields are fittable but deliberately absent here: latency takes
+#: the max over compute/memory passes, so a bandwidth's gradient is non-zero
+#: only in the regime where that bandwidth binds (the test exercises one such
+#: regime separately).
+METRIC_FIELDS = {
+    "latency_ns": ("router_delay_ns", "t_tile_overhead_ns", "corr_latency"),
+    "energy_pj": ("e_mac_pj", "e_reg_pj_bit", "e_core_sram_pj_bit",
+                  "e_chip_sram_pj_bit", "e_dram_pj_bit", "e_router_pj_bit",
+                  "corr_energy"),
+    "area_mm2": ("a_pe", "a_sram_per_mb", "a_router", "a_core_overhead",
+                 "a_chiplet_overhead", "corr_area"),
+    "cost_usd": ("wafer_cost", "defect_density_mm2", "c_substrate_mm2",
+                 "c_process", "corr_cost"),
+}
 
 
 # ---------------------------------------------------------------------------

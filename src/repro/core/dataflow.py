@@ -192,7 +192,11 @@ def analyze_chiplet(wl: Dict, shape, spatial, order, tiling,
     d_b1 = chipbuf_acc_pass / F(tech.chip_buf_bw)
     chip_pass_d = jnp.maximum(n1_tot * core_pass_d, jnp.maximum(d_noc, d_b1))
     d_ext_pass = (ext_bytes / n2_tot) / jnp.maximum(F(ext_bw), 1e-6)
-    delay = n2_tot * jnp.maximum(chip_pass_d, d_ext_pass)     # per chiplet, ns
+    # Each external tile also pays a fixed launch overhead (DMA descriptor
+    # setup / drain); default 0.0 so x + 0.0 keeps the seed model
+    # bit-identical, and repro.calib fits it against simulator ground truth.
+    delay = n2_tot * (jnp.maximum(chip_pass_d, d_ext_pass)
+                      + F(tech.t_tile_overhead_ns))           # per chiplet, ns
 
     util = macs_per_chip / jnp.maximum(
         F(n_pe) * F(n_core) * delay * tech.clock_ghz, 1e-9)

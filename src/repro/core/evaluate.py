@@ -255,6 +255,19 @@ def evaluate_arrays(arrays: Dict, design: Dict, dims: Tuple[int, int, int],
     cost = package_cost(die_areas, pkg, tech)
     area = jnp.sum(die_areas)
 
+    # ---- calibration corrections -------------------------------------------
+    # Per-metric multiplicative factors fitted by repro.calib; all default to
+    # 1.0 (exact multiplicative identity), so the uncalibrated model returns
+    # bit-identical numbers to a build without this block.
+    cl, ce = F(tech.corr_latency), F(tech.corr_energy)
+    ca, cc = F(tech.corr_area), F(tech.corr_cost)
+    latency, lat_tick = latency * cl, lat_tick * cl
+    throughput = throughput / cl
+    d_stage, d_edge = d_stage * cl, d_edge * cl
+    e_compute, e_net = e_compute * ce, e_net * ce
+    energy = energy * ce
+    cost, area = cost * cc, area * ca
+
     return dict(
         latency_ns=latency, lat_tick_ns=lat_tick, throughput_per_ns=throughput,
         energy_pj=energy, edp=energy * 1e-12 * latency * 1e-9,

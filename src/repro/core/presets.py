@@ -15,8 +15,10 @@
 
 from __future__ import annotations
 
+import os
 from typing import Dict
 
+from .constants import DEFAULT_TECH, TechConstants
 from .workload import (Edge, Workload, WorkloadGraph, contraction, conv2d,
                        matmul, mttkrp)
 
@@ -196,3 +198,103 @@ def workload_library() -> Dict[str, WorkloadGraph]:
         "scan_falcon_mamba": scan_chain(mamba),
         "hybrid_hymba": hybrid_block(hymba),
     }
+
+
+# ---------------------------------------------------------------------------
+# Technology presets — named TechConstants variants, including calibrated
+# artifacts produced by ``repro.calib`` (see README "Calibration").
+# ---------------------------------------------------------------------------
+_TECH_PRESETS: Dict[str, TechConstants] = {"default": DEFAULT_TECH}
+
+
+def register_tech(name: str, tech: TechConstants) -> None:
+    """Register a named TechConstants preset for this process.  Re-registering
+    the same name with different constants is an error (preset identity must
+    stay stable within a process); re-registering identical constants is a
+    no-op."""
+    prev = _TECH_PRESETS.get(name)
+    if prev is not None and prev != tech:
+        raise ValueError(f"tech preset {name!r} already registered with "
+                         "different constants")
+    _TECH_PRESETS[name] = tech
+
+
+def tech_preset_names() -> tuple:
+    return tuple(sorted(_TECH_PRESETS))
+
+
+def _load_tech_file(path: str) -> "tuple[str, TechConstants]":
+    """Load a tech preset from a JSON file: either a bare tech dict or a
+    ``repro.calib`` CalibratedTech artifact ({"name": ..., "tech": {...}})."""
+    import json
+
+    from .constants import tech_from_dict
+    with open(path) as f:
+        doc = json.load(f)
+    if "tech" in doc and isinstance(doc["tech"], dict):
+        name = doc.get("name") or os.path.splitext(os.path.basename(path))[0]
+        return str(name), tech_from_dict(doc["tech"])
+    name = os.path.splitext(os.path.basename(path))[0]
+    return name, tech_from_dict(doc)
+
+
+def tech_preset(name: str) -> TechConstants:
+    """Resolve a tech preset by name.
+
+    Resolution order: in-process registry (``register_tech``), then
+    ``$REPRO_CALIB_DIR/<name>.json``, then ``name`` interpreted as a path to
+    a JSON artifact.  File-resolved presets are cached in the registry so a
+    name always maps to one set of constants per process.
+    """
+    if name in _TECH_PRESETS:
+        return _TECH_PRESETS[name]
+    cal_dir = os.environ.get("REPRO_CALIB_DIR", "")
+    candidates = []
+    if cal_dir:
+        candidates.append(os.path.join(cal_dir, f"{name}.json"))
+    if name.endswith(".json") or os.sep in name:
+        candidates.append(name)
+    for path in candidates:
+        if os.path.exists(path):
+            _, tech = _load_tech_file(path)
+            register_tech(name, tech)
+            return tech
+    raise KeyError(
+        f"unknown tech preset {name!r}; known: {tech_preset_names()} "
+        "(set REPRO_CALIB_DIR or pass a JSON artifact path)")
+
+
+def resolve_tech(tech) -> "tuple[str, TechConstants]":
+    """Normalize any accepted tech designator to ``(name, TechConstants)``.
+
+    Accepts ``None`` (default constants), a preset name or artifact path
+    (str), a :class:`TechConstants`, or a ``repro.calib`` CalibratedTech
+    (duck-typed: ``.name`` + ``.tech`` attributes).
+    """
+    if tech is None:
+        return "default", DEFAULT_TECH
+    if isinstance(tech, str):
+        return tech, tech_preset(tech)
+    if isinstance(tech, TechConstants):
+        if tech == DEFAULT_TECH:
+            return "default", tech
+        for name, t in _TECH_PRESETS.items():
+            if t == tech:
+                return name, tech
+        return "custom", tech
+    name = getattr(tech, "name", None)
+    inner = getattr(tech, "tech", None)
+    if isinstance(inner, TechConstants) and name:
+        register_tech(str(name), inner)
+        return str(name), inner
+    raise TypeError(f"cannot resolve tech designator of type {type(tech)!r}")
+
+
+def tech_label(tech) -> str:
+    """Human-readable tech identity ``name@digest12`` carried in provenance
+    and job payloads; plain ``"default"`` for the uncalibrated constants."""
+    from .constants import tech_key
+    name, t = resolve_tech(tech)
+    if t == DEFAULT_TECH:
+        return "default"
+    return f"{name}@{tech_key(t)[:12]}"

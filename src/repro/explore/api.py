@@ -44,13 +44,15 @@ import hashlib
 import itertools
 import time
 import uuid
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
 from .. import obs
-from ..core.constants import DEFAULT_TECH
+from ..core.constants import DEFAULT_TECH, tech_key
+from ..core.presets import tech_label
 from ..core.encoding import DesignSpace
 from ..core.evaluate import SystemSpec
 from ..core.optimizer import METRIC_KEYS, OBJ_EDP
@@ -170,6 +172,14 @@ class Query:
     #                                 one compiled megabatch dispatch
     #                                 (nsga engine; see
     #                                 BudgetPolicy.megabatch)
+    tech: Optional[object] = None   # per-query TechConstants override: a
+    #                                 preset name / artifact path (str), a
+    #                                 TechConstants, or a repro.calib
+    #                                 CalibratedTech.  None = the
+    #                                 session's tech.  Calibrated and
+    #                                 default fronts never mix — the
+    #                                 archive cache key folds in the tech
+    #                                 content digest.
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -278,6 +288,11 @@ class Provenance:
     #                                 surrogate's say-so
     surrogate_fallbacks: int = 0    # ensemble disagreement abandoned the
     #                                 surrogate mid-run
+    tech: str = "default"           # the TechConstants identity the
+    #                                 metrics were evaluated under:
+    #                                 "default", or "<preset>@<digest12>"
+    #                                 for a calibrated/custom preset (see
+    #                                 core.presets.tech_label)
 
 
 @dataclasses.dataclass
@@ -325,6 +340,20 @@ class Session:
         # they will not touch
         self._service = service
         self._service_kwargs = dict(service_kwargs)
+        # ``tech=`` accepts a preset name / artifact path / CalibratedTech
+        # besides a raw TechConstants; resolve once, remember the label
+        # ("name@digest12") for provenance and per-query tech routing
+        tech_arg = (service.tech if service is not None
+                    else self._service_kwargs.get("tech"))
+        if tech_arg is not None:
+            from ..core.presets import resolve_tech
+            self.tech_label = tech_label(tech_arg)
+            _, resolved = resolve_tech(tech_arg)
+            if service is None:
+                self._service_kwargs["tech"] = resolved
+        else:
+            self.tech_label = "default"
+        self._tech_sessions: Dict[str, "Session"] = {}
         self._journal = obs.resolve_journal(journal)
         self._executor = None           # lazy repro.serve.Executor behind
         #                                 submit_async
@@ -369,9 +398,28 @@ class Session:
     def _cache_key(self, p: Problem) -> str:
         """The archive identity of ``p`` under this session's tech — the
         same derivation as ``ExplorationService.problem_key``, computable
-        without constructing the service."""
-        return spec_space_key(p.spec, p.space, extra=self.tech
-                              or DEFAULT_TECH)
+        without constructing the service.  The tech folds in as its
+        stable ``tech_key()`` content digest (never ``repr``), so
+        calibrated and default fronts can never share an archive."""
+        return spec_space_key(p.spec, p.space,
+                              extra=tech_key(self.tech or DEFAULT_TECH))
+
+    def _session_for(self, tech) -> "Session":
+        """The session answering queries under ``tech``: this one when the
+        labels match, else a cached sibling sharing the cache directory
+        and journal — distinct tech digests key distinct archives, so the
+        shared directory never mixes fronts."""
+        if tech is None:
+            return self
+        label = tech_label(tech)
+        if label == self.tech_label:
+            return self
+        if label not in self._tech_sessions:
+            cfg = self._service_config()
+            cfg["tech"] = tech
+            self._tech_sessions[label] = Session(journal=self._journal,
+                                                 **cfg)
+        return self._tech_sessions[label]
 
     # ---- planning ----------------------------------------------------------
     def plan(self, query: Query) -> Plan:
@@ -402,6 +450,9 @@ class Session:
         return pl
 
     def _plan_impl(self, query: Query) -> Plan:
+        sub = self._session_for(query.tech)
+        if sub is not self:
+            return sub._plan_impl(query)
         engine = query.resolved_engine()
         p = query.problem
         ck = self._cache_key(p)
@@ -595,6 +646,34 @@ class Session:
         # (non-list) Query takes the caller's key verbatim on the
         # scalarized path — a one-element list still domain-separates
         key = jax.random.PRNGKey(0) if key is None else key
+        # per-query tech overrides route to sibling sessions (same cache
+        # directory, distinct tech digests — so distinct archives); each
+        # non-default group's PRNG stream domain-separates on its label
+        routed: Dict[str, Tuple["Session", List[int]]] = {}
+        for i, q in enumerate(qs):
+            s = self._session_for(q.tech)
+            if s is not self:
+                routed.setdefault(s.tech_label, (s, []))[1].append(i)
+        if routed:
+            results: Dict[int, Result] = {}
+            mine = [i for i, q in enumerate(qs)
+                    if self._session_for(q.tech) is self]
+            if mine:
+                for i, r in zip(mine, self._submit_impl(
+                        [qs[i] for i in mine], key=key,
+                        on_segment=on_segment, single=False,
+                        resume=resume, control=control)):
+                    results[i] = r
+            for label, (s, idxs) in routed.items():
+                k2 = jax.random.fold_in(
+                    key, zlib.crc32(label.encode()) & 0x7FFFFFFF)
+                for i, r in zip(idxs, s._submit_impl(
+                        [qs[i] for i in idxs], key=k2,
+                        on_segment=on_segment,
+                        single=single and len(idxs) == len(qs),
+                        resume=resume, control=control)):
+                    results[i] = r
+            return [results[i] for i in range(len(qs))]
         if obs.active():        # journal the plan of record for every
             #                     query before the engines run — read-only
             #                     (archive/manifest inspection), no PRNG
@@ -689,7 +768,8 @@ class Session:
                 interrupted=er.interrupted,
                 surrogate_used=er.surrogate_used,
                 surrogate_hits=er.surrogate_hits,
-                surrogate_fallbacks=er.surrogate_fallbacks),
+                surrogate_fallbacks=er.surrogate_fallbacks,
+                tech=self.tech_label),
             raw=er)
 
     def _run_scalarized(self, q: Query, engine: str, key,
@@ -745,7 +825,8 @@ class Session:
                 n_evals_run=n_evals, n_evals_banked=0, n_evals_realloc=0,
                 transferred_from=(),
                 n_transfer_seeds=len(q.seed_designs or ()),
-                plateaued=False, elapsed_s=elapsed),
+                plateaued=False, elapsed_s=elapsed,
+                tech=self.tech_label),
             best_design=sr.design, best_objective=sr.objective,
             best_metrics=sr.metrics, raw=sr)
 

@@ -536,9 +536,11 @@ def spec_space_key(spec, space, extra=None) -> str:
     arrays plus every static ``DesignSpace`` bound.  Equal workload graphs
     explored under equal bounds share one archive file, whatever Python
     objects they were built from.  ``extra`` folds any further
-    cache-identity (e.g. the evaluator's ``TechConstants``, whose ``repr``
-    is stable for a frozen dataclass) into the key.  Duck-typed so this
-    module stays free of ``repro.core`` imports."""
+    cache-identity into the key; callers pass a STABLE string digest — the
+    evaluator's tech identity is ``core.constants.tech_key(tech)``, never
+    the object's ``repr`` (see ``ExplorationService.problem_key`` /
+    ``Session._cache_key``).  Duck-typed so this module stays free of
+    ``repro.core`` imports."""
     h = hashlib.sha256()
     if extra is not None:
         h.update(repr(extra).encode())

@@ -63,7 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
-from ..core.constants import DEFAULT_TECH
+from ..core.constants import DEFAULT_TECH, TechConstants, tech_key
 from ..core.encoding import (DesignSpace, balanced_init, migrate,
                              portable_signature, random_design, repair,
                              space_digest)
@@ -406,6 +406,10 @@ class ExplorationService:
         self.cache_dir = resolve_cache_dir(cache_dir)
         self.capacity = int(capacity)
         self.nsga = nsga
+        if tech is not None and not isinstance(tech, TechConstants):
+            # preset name / artifact path / CalibratedTech -> constants
+            from ..core.presets import resolve_tech
+            _, tech = resolve_tech(tech)
         self.tech = tech
         self.policy = policy
         self.mesh = mesh
@@ -463,8 +467,11 @@ class ExplorationService:
     def problem_key(self, spec: SystemSpec, space: DesignSpace) -> str:
         """Archive identity for one exploration problem under THIS
         service's tech constants — metrics evaluated under a different
-        ``TechConstants`` must never be served as this problem's front."""
-        return spec_space_key(spec, space, extra=self.tech or DEFAULT_TECH)
+        ``TechConstants`` (including a calibrated preset) must never be
+        served as this problem's front.  The tech folds in as its stable
+        ``tech_key()`` content digest, not its repr."""
+        return spec_space_key(spec, space,
+                              extra=tech_key(self.tech or DEFAULT_TECH))
 
     def archive_for(self, spec: SystemSpec, space: DesignSpace,
                     key: Optional[str] = None) -> ParetoArchive:
@@ -1391,7 +1398,7 @@ class ExplorationService:
         h.update(repr((tuple(objectives), int(budget), int(pop),
                        int(generations), int(chunk), int(self.capacity),
                        repr(self.nsga), islands,
-                       repr(self.tech or DEFAULT_TECH),
+                       tech_key(self.tech or DEFAULT_TECH),
                        gate_digest)).encode())
         #             gate_digest: a surrogate-gated run's numeric stream
         #             depends on the fitted model — a checkpoint written

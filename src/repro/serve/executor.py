@@ -66,6 +66,13 @@ def query_to_payload(query: Query) -> Dict:
             "weights queries only; seed_designs / archive / engine_opts "
             "/ policy do not survive the durable job store — use "
             "Session.submit for those")
+    if query.tech is not None and not isinstance(query.tech, str):
+        raise ValueError(
+            "async queries carry tech by NAME (a preset registered via "
+            "repro.calib or reachable through $REPRO_CALIB_DIR) so the "
+            "worker process can resolve the same constants; pass "
+            "tech='<preset>' or use Session.submit for a raw "
+            "TechConstants")
     p = query.problem
     return dict(
         graph=graph_to_json(p.graph), objectives=list(p.objectives),
@@ -73,7 +80,8 @@ def query_to_payload(query: Query) -> Dict:
         budget=int(query.budget), engine=query.engine,
         transfer=bool(query.transfer),
         weights=list(query.weights) if query.weights is not None
-        else None)
+        else None,
+        tech=query.tech)
 
 
 def query_from_payload(d: Dict) -> Query:
@@ -87,7 +95,8 @@ def query_from_payload(d: Dict) -> Query:
     return Query(problem, budget=int(d["budget"]), engine=d["engine"],
                  transfer=bool(d["transfer"]),
                  weights=tuple(d["weights"]) if d.get("weights")
-                 is not None else None)
+                 is not None else None,
+                 tech=d.get("tech"))
 
 
 def stale_result(session, query: Query, cache_key: str,
@@ -135,7 +144,7 @@ def stale_result(session, query: Query, cache_key: str,
             n_evals_run=0, n_evals_banked=int(query.budget),
             n_evals_realloc=0, transferred_from=(), n_transfer_seeds=0,
             plateaued=False, elapsed_s=time.perf_counter() - t0,
-            stale=True))
+            stale=True, tech=session.tech_label))
 
 
 class JobHandle:
@@ -317,13 +326,17 @@ class Executor:
                 "survive the durable job store); got "
                 f"{type(key).__name__}")
         payload = query_to_payload(query)
-        ck = self._session._cache_key(query.problem)
+        # the job's archive identity is derived under the QUERY's tech
+        # (a per-query preset routes to a sibling session whose cache key
+        # folds in that tech's digest)
+        tsess = self._session._session_for(query.tech)
+        ck = tsess._cache_key(query.problem)
         rec = self.store.create(payload, query.problem.key(), ck, seed)
         handle = JobHandle(rec.job_id, self.store)
         self._handles[rec.job_id] = handle
         obs.inc("serve.submitted")
         if not self._admit(deadline_s):
-            stale = stale_result(self._session, query, ck,
+            stale = stale_result(tsess, query, ck,
                                  max_age_s=self.stale_ttl_s)
             if stale is not None:
                 # overload + warm archive: answer now, bank the job
@@ -407,7 +420,11 @@ def run_job(session, store: JobStore, rec: JobRecord,
         on_segment = handle._push
     try:
         q = query_from_payload(rec.payload)
-        ck = session._cache_key(q.problem)
+        # a tech-named query resolves its preset HERE too — a worker that
+        # cannot resolve it (missing $REPRO_CALIB_DIR / artifact) or
+        # resolves different constants derives a different key and
+        # refuses below, loudly, instead of refining the wrong archive
+        ck = session._session_for(q.tech)._cache_key(q.problem)
         if ck != rec.cache_key:
             raise RuntimeError(
                 f"job {rec.job_id}: session derives cache key {ck} but "

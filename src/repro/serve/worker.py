@@ -11,7 +11,7 @@ bit-identical final front.
 
     python -m repro.serve.worker --store DIR --cache DIR [--once]
         [--poll S] [--segment-delay S] [--pop N]
-        [--chunk-generations N] [--no-adaptive]
+        [--chunk-generations N] [--no-adaptive] [--tech PRESET]
 
 ``--once`` drains the currently-pending jobs and exits (CI / tests);
 without it the worker polls forever.  The engine knobs (``--pop`` /
@@ -72,6 +72,8 @@ def _session(args) -> Session:
         kwargs["policy"] = BudgetPolicy(
             chunk_generations=args.chunk_generations or 8,
             adaptive=not args.no_adaptive)
+    if args.tech:
+        kwargs["tech"] = args.tech
     return Session(cache_dir=args.cache, **kwargs)
 
 
@@ -93,6 +95,12 @@ def main(argv=None) -> int:
                     help="BudgetPolicy.chunk_generations override")
     ap.add_argument("--no-adaptive", action="store_true",
                     help="disable plateau early-stopping")
+    ap.add_argument("--tech", default="",
+                    help="tech preset for this worker's session: a name "
+                         "registered under $REPRO_CALIB_DIR or a "
+                         "CalibratedTech JSON artifact path (default: "
+                         "the uncalibrated constants; per-query tech "
+                         "names still resolve either way)")
     ap.add_argument("--segment-delay", type=float, default=0.0,
                     help="sleep this long in every segment callback "
                          "(test hook: widens the crash window)")

@@ -1,0 +1,290 @@
+"""Tests for ``repro.calib``: differentiability of the analytical model
+w.r.t. the fittable tech constants, the stable ``tech_key`` cache
+identity, the fit loop itself, and the ``CalibratedTech`` artifact
+lifecycle.
+
+The differentiability tests are the load-bearing regression: ``fit``
+works only because every metric's gradient w.r.t. its ``METRIC_FIELDS``
+flows through ``evaluate_system`` / ``analyze_chiplet``.  A future
+``jnp.where``/``lax.stop_gradient``/integer-cast edit that silently
+zeroes one of those paths would leave the optimizer spinning on a flat
+loss — these tests turn that into a visible failure."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as C
+from repro.core.constants import (DEFAULT_TECH, FITTABLE_FIELDS,
+                                  METRIC_FIELDS, TechConstants,
+                                  tech_from_dict, tech_key, tech_to_dict)
+from repro.core.evaluate import evaluate_system
+from repro.core.optimizer import METRIC_KEYS
+from repro.core.workload import MAX_LOOPS
+
+from repro.calib import (CalibratedTech, Measurement, error_report, fit,
+                         load_calibrated, load_report, measurements_digest,
+                         simulator_sweep)
+
+
+# ---------------------------------------------------------------------------
+# golden design (same construction as tests/test_golden_metrics.py)
+# ---------------------------------------------------------------------------
+def _fixed_design(spec):
+    W, CH, L = spec.W, spec.CH, MAX_LOOPS
+    return dict(
+        shape=jnp.asarray(np.tile([4, 4, 2, 2, 1, 2], (W, 1)), jnp.int32),
+        spatial=jnp.zeros((W, 6), jnp.int32),
+        order=jnp.asarray(np.tile(np.arange(L, dtype=np.int32), (W, 3, 1))),
+        tiling=jnp.ones((W, 2, L), jnp.int32),
+        pipe=jnp.full((W,), L, jnp.int32),
+        logB=jnp.asarray(0, jnp.int32),
+        packaging=jnp.asarray(1, jnp.int32),
+        family=jnp.asarray(2, jnp.int32),
+        placement=jnp.asarray(np.arange(W * CH, dtype=np.int32)))
+
+
+@pytest.fixture(scope="module")
+def golden():
+    spec = C.SystemSpec.build(C.presets.transformer_block(), ch_max=2)
+    return spec, _fixed_design(spec)
+
+
+def _jacobian(spec, design, base):
+    """(len(METRIC_KEYS), len(FITTABLE_FIELDS)) jacobian at ``base``."""
+    def metrics_of(vals):
+        tech = dataclasses.replace(
+            base, **{f: v for f, v in zip(FITTABLE_FIELDS, vals)})
+        out = evaluate_system(spec, design, tech=tech)
+        return jnp.stack([out[k] for k in METRIC_KEYS])
+
+    v0 = jnp.asarray([float(getattr(base, f)) for f in FITTABLE_FIELDS],
+                     jnp.float32)
+    return np.asarray(jax.jacfwd(metrics_of)(v0))
+
+
+# ---------------------------------------------------------------------------
+# differentiability
+# ---------------------------------------------------------------------------
+def test_jacobian_finite_and_mapped_fields_move(golden):
+    """All four metrics have finite gradients w.r.t. every fittable field,
+    and each METRIC_FIELDS pair is non-zero on the golden design.  The
+    base point uses a non-zero tile overhead so its gradient is visible
+    (at 0.0 the term still differentiates, but we pin the realistic
+    post-calibration operating point)."""
+    spec, design = golden
+    base = dataclasses.replace(DEFAULT_TECH, t_tile_overhead_ns=8.0)
+    J = _jacobian(spec, design, base)
+    assert np.isfinite(J).all(), "non-finite metric gradient"
+    for metric, fields in METRIC_FIELDS.items():
+        row = J[METRIC_KEYS.index(metric)]
+        for f in fields:
+            g = row[FITTABLE_FIELDS.index(f)]
+            assert g != 0.0, f"d {metric} / d {f} vanished on golden design"
+
+
+def test_metric_fields_cover_every_metric():
+    for metric in METRIC_KEYS:
+        assert metric in METRIC_FIELDS
+        assert set(METRIC_FIELDS[metric]) <= set(FITTABLE_FIELDS)
+
+
+def test_bandwidth_gradient_binds_when_starved(golden):
+    """The bandwidth constants are fittable but regime-dependent: latency
+    is a max over compute/memory passes, so a bandwidth moves latency only
+    where it binds.  Starving the buffers makes ``core_buf_bw`` the
+    bottleneck on the golden design — its gradient must turn on."""
+    spec, design = golden
+    starved = dataclasses.replace(
+        DEFAULT_TECH, t_tile_overhead_ns=8.0,
+        dram_bw=DEFAULT_TECH.dram_bw * 0.01,
+        core_buf_bw=DEFAULT_TECH.core_buf_bw * 0.01,
+        chip_buf_bw=DEFAULT_TECH.chip_buf_bw * 0.01,
+        chip_noc_bw=DEFAULT_TECH.chip_noc_bw * 0.01)
+    J = _jacobian(spec, design, starved)
+    assert np.isfinite(J).all()
+    g = J[METRIC_KEYS.index("latency_ns"),
+          FITTABLE_FIELDS.index("core_buf_bw")]
+    assert g != 0.0, "core_buf_bw gradient stayed zero under starvation"
+
+
+# ---------------------------------------------------------------------------
+# tech_key / cache identity
+# ---------------------------------------------------------------------------
+def test_tech_key_stable_across_equal_instances():
+    a = TechConstants()
+    b = dataclasses.replace(TechConstants())
+    assert a is not b
+    assert tech_key(a) == tech_key(b) == tech_key(DEFAULT_TECH)
+
+
+def test_tech_key_is_digest_not_repr():
+    k = tech_key(DEFAULT_TECH)
+    assert len(k) == 64 and all(c in "0123456789abcdef" for c in k)
+    assert "TechConstants" not in k
+
+
+def test_tech_key_distinguishes_calibrated():
+    cal = dataclasses.replace(DEFAULT_TECH, corr_latency=1.01)
+    assert tech_key(cal) != tech_key(DEFAULT_TECH)
+    # round-tripping through the dict form preserves identity exactly
+    rt = tech_from_dict(tech_to_dict(cal))
+    assert tech_key(rt) == tech_key(cal)
+
+
+def test_session_cache_key_is_tech_aware(tmp_path):
+    from repro.explore.api import Problem, Session
+    p = Problem(C.presets.bert_mms()["att2"], ch_max=2)
+    s0 = Session(cache_dir=str(tmp_path / "a"))
+    cal = dataclasses.replace(DEFAULT_TECH, corr_latency=1.25)
+    s1 = Session(cache_dir=str(tmp_path / "b"), tech=cal)
+    assert s0._cache_key(p) != s1._cache_key(p)
+    # and the default session's key matches a fresh default session's
+    s2 = Session(cache_dir=str(tmp_path / "c"))
+    assert s0._cache_key(p) == s2._cache_key(p)
+
+
+# ---------------------------------------------------------------------------
+# default path bit-identity
+# ---------------------------------------------------------------------------
+def test_identity_corrections_are_bitwise_noops(golden):
+    """corr_* = 1.0 and t_tile_overhead_ns = 0.0 (the defaults) must leave
+    every metric bit-identical to an evaluation that predates the
+    calibration fields — pinned here as: explicitly setting the defaults
+    changes nothing, and the golden table in test_golden_metrics stays
+    green."""
+    spec, design = golden
+    explicit = dataclasses.replace(
+        DEFAULT_TECH, t_tile_overhead_ns=0.0, corr_latency=1.0,
+        corr_energy=1.0, corr_area=1.0, corr_cost=1.0)
+    out0 = evaluate_system(spec, design, tech=DEFAULT_TECH)
+    out1 = evaluate_system(spec, design, tech=explicit)
+    for k in METRIC_KEYS:
+        a, b = np.asarray(out0[k]), np.asarray(out1[k])
+        assert a.tobytes() == b.tobytes(), f"{k} not bit-identical"
+
+
+# ---------------------------------------------------------------------------
+# measurements
+# ---------------------------------------------------------------------------
+def test_measurement_validation():
+    with pytest.raises(ValueError):
+        Measurement.make("bogus_kind", "latency_ns", 1.0, "x")
+    with pytest.raises(ValueError):
+        Measurement.make("system", "latency_ns", -1.0, "x")
+
+
+def test_measurements_digest_order_insensitive():
+    a = Measurement.make("system", "area_mm2", 216.0, "simba")
+    b = Measurement.make("system", "cost_usd", 110.0, "simba")
+    assert measurements_digest([a, b]) == measurements_digest([b, a])
+    assert measurements_digest([a]) != measurements_digest([a, b])
+
+
+def test_load_report_csv_and_json(tmp_path):
+    csv = tmp_path / "r.csv"
+    csv.write_text("kind,metric,value,source,pe_budget\n"
+                   "system,area_mm2,216.0,simba,1024\n")
+    ms = load_report(str(csv))
+    assert len(ms) == 1 and ms[0].metric == "area_mm2"
+    assert ms[0].info["pe_budget"] == 1024
+
+    js = tmp_path / "r.json"
+    js.write_text(json.dumps({"rows": [m.to_dict() for m in ms]}))
+    ms2 = load_report(str(js))
+    assert measurements_digest(ms2) == measurements_digest(ms)
+
+
+# ---------------------------------------------------------------------------
+# fit
+# ---------------------------------------------------------------------------
+def test_fit_reduces_simulator_error():
+    train = simulator_sweep(shapes=[(64, 64, 64), (128, 128, 128)],
+                            bws=(128.0,))
+    held = simulator_sweep(shapes=[(100, 100, 100)], bws=(128.0,))
+    res = fit(train, free=("t_tile_overhead_ns", "corr_latency"),
+              holdout=held, steps=120, lr=0.05, seed=0)
+    assert res.errors["train_after"]["mean"] \
+        < res.errors["train_before"]["mean"]
+    assert res.loss[1] < res.loss[0]
+    assert set(res.fitted) == {"t_tile_overhead_ns", "corr_latency"}
+    # fitted values land on the tech object itself
+    assert res.tech.t_tile_overhead_ns \
+        == pytest.approx(res.fitted["t_tile_overhead_ns"])
+    # untouched fields stay exactly at their defaults
+    assert res.tech.e_mac_pj == DEFAULT_TECH.e_mac_pj
+
+
+def test_fit_rejects_unknown_free_field():
+    ms = simulator_sweep(shapes=[(64, 64, 64)], bws=(128.0,))
+    with pytest.raises(ValueError):
+        fit(ms, free=("not_a_field",), steps=1)
+
+
+def test_error_report_keys():
+    ms = simulator_sweep(shapes=[(64, 64, 64)], bws=(128.0,))
+    rep = error_report(ms, DEFAULT_TECH)
+    assert set(rep) == {"latency_ns", "mean"}
+    assert rep["mean"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# CalibratedTech artifact lifecycle
+# ---------------------------------------------------------------------------
+def _small_fit():
+    train = simulator_sweep(shapes=[(64, 64, 64)], bws=(128.0,))
+    return fit(train, free=("t_tile_overhead_ns", "corr_latency"),
+               holdout=train, steps=40, lr=0.05, seed=0)
+
+
+def test_calibrated_tech_round_trip(tmp_path):
+    res = _small_fit()
+    art = CalibratedTech.from_fit("t_roundtrip", res)
+    path = art.save(str(tmp_path))
+    loaded = load_calibrated(path)
+    assert loaded.digest == art.digest == tech_key(res.tech)
+    assert tech_key(loaded.tech) == tech_key(res.tech)
+    assert loaded.free == art.free
+
+
+def test_calibrated_tech_tamper_detected(tmp_path):
+    res = _small_fit()
+    art = CalibratedTech.from_fit("t_tamper", res)
+    path = art.save(str(tmp_path))
+    doc = json.loads(open(path).read())
+    doc["tech"]["corr_latency"] = 2.0       # silent edit, stale digest
+    open(path, "w").write(json.dumps(doc))
+    with pytest.raises(ValueError):
+        load_calibrated(path)
+
+
+def test_resolve_tech_accepts_artifact(tmp_path):
+    from repro.core.presets import resolve_tech, tech_label
+    res = _small_fit()
+    art = CalibratedTech.from_fit("t_resolve", res)
+    name, tech = resolve_tech(art)
+    assert name == "t_resolve"
+    assert tech_key(tech) == tech_key(res.tech)
+    label = tech_label(art)
+    assert label.startswith("t_resolve@") and len(label.split("@")[1]) == 12
+
+
+# ---------------------------------------------------------------------------
+# async payload: tech travels by name only
+# ---------------------------------------------------------------------------
+def test_query_payload_carries_tech_name():
+    from repro.explore.api import Problem, Query
+    from repro.serve.executor import query_from_payload, query_to_payload
+    p = Problem(C.presets.bert_mms()["att2"], ch_max=2)
+    q = Query(problem=p, budget=64, tech="mycal")
+    d = query_to_payload(q)
+    assert d["tech"] == "mycal"
+    assert query_from_payload(d).tech == "mycal"
+    # live TechConstants objects do not survive a crash — rejected loudly
+    with pytest.raises(ValueError):
+        query_to_payload(Query(problem=p, budget=64, tech=DEFAULT_TECH))
